@@ -1,0 +1,43 @@
+"""Paper Table 1: pairwise CCM wall-time on dataset-shaped workloads.
+
+The six real microscopy/expression datasets are not shippable; each is
+replaced by a synthetic panel with the same *aspect* (many-short /
+few-long / balanced), CPU-scaled by the stated factor so the single-core
+container finishes in seconds. Derived column: cross-map pairs per
+second, and the scale factor back to the paper's shape.
+"""
+
+from __future__ import annotations
+
+import time
+
+import jax
+import numpy as np
+
+from benchmarks.common import row
+from repro import core
+from repro.data.timeseries import tent_map_panel
+
+# name, paper (N, L), scaled (N, L), E
+DATASETS = [
+    ("Fish1_Normo", (154, 1600), (154, 1600), 3),  # full scale
+    ("Fly80XY", (82, 10608), (82, 2048), 3),
+    ("Genes_MEF", (45318, 96), (1024, 96), 3),
+    ("Subject6", (92538, 3780), (192, 1024), 3),
+    ("Subject11", (101729, 8528), (128, 2048), 3),
+    ("F1", (8520, 29484), (64, 4096), 3),
+]
+
+
+def run():
+    for name, paper_shape, (N, L), E in DATASETS:
+        panel = jax.numpy.asarray(tent_map_panel(N, L, seed=7))
+        E_opt = np.full(N, E, np.int32)
+        t0 = time.perf_counter()
+        rho = core.ccm_matrix(panel, E_opt, impl="ref")
+        dt = time.perf_counter() - t0
+        pairs = N * N
+        scale = (paper_shape[0] / N) ** 2 * max(paper_shape[1] / L, 1.0)
+        row(f"ccm_{name}", dt * 1e6,
+            f"{pairs / dt:.0f}pairs_per_s_scale{scale:.0f}x_"
+            f"meanrho{float(np.mean(rho)):.3f}")

@@ -1,0 +1,41 @@
+"""Paper Figs. 2–3: all-kNN search runtime breakdown vs embedding dim.
+
+Pairwise-distance and top-k phases timed separately across E, on a
+synthetic series (CPU-scaled from the paper's L=10⁴). Derived column:
+effective GFLOP/s for the distance phase, Melem/s scanned for top-k —
+the paper's finding is that both phases are bandwidth-, not compute-,
+limited, with pairwise arithmetic intensity rising with E.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax.numpy as jnp
+import numpy as np
+
+from benchmarks.common import row, time_fn
+from repro.data.timeseries import tent_map_panel
+from repro.kernels import ops
+
+L = 4096
+E_SWEEP = (1, 5, 10, 15, 20)
+
+
+def run():
+    x = jnp.asarray(tent_map_panel(1, L, seed=0)[0])
+    for E in E_SWEEP:
+        Lp = L - (E - 1)
+        k = E + 1
+        pair = functools.partial(ops.pairwise_distances, x, E=E, tau=1,
+                                 impl="ref")
+        us_pair = time_fn(pair)
+        flops = 3.0 * E * Lp * Lp  # sub, mul, add per (i, j, k)
+        row(f"knn_pairwise_E{E}", us_pair,
+            f"{flops / us_pair / 1e3:.1f}GFLOPs_L{L}")
+
+        D = pair()
+        topk = functools.partial(ops.topk_select, D, k=k, impl="ref")
+        us_topk = time_fn(topk)
+        row(f"knn_topk_E{E}", us_topk,
+            f"{Lp * Lp / us_topk:.0f}Melem_per_s_k{k}")

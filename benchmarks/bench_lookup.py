@@ -1,0 +1,43 @@
+"""Paper Figs. 4–5: batched lookup runtime vs embedding dimension.
+
+N target series share one library's neighbor tables (the paper's batched
+formulation); both the plain lookup and the fused-ρ variant (the paper's
+on-the-fly correlation path, which never materializes predictions) are
+timed. Derived: effective bandwidth of the gather phase.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax.numpy as jnp
+
+from benchmarks.common import row, time_fn
+from repro.data.timeseries import tent_map_panel
+from repro.kernels import ops
+
+L = 4096
+N = 512
+E_SWEEP = (1, 5, 10, 15, 20)
+
+
+def run():
+    panel = jnp.asarray(tent_map_panel(N + 1, L, seed=1))
+    x, Y = panel[0], panel[1:]
+    for E in E_SWEEP:
+        k = E + 1
+        off = E - 1
+        d, i = ops.all_knn(x, E=E, tau=1, k=k, impl="ref")
+        w = ops.make_weights(d)
+        rows = i.shape[0]
+
+        look = functools.partial(ops.lookup, Y, i, w, offset=off, impl="ref")
+        us = time_fn(look)
+        bytes_moved = 4.0 * N * rows * (k + 1)  # gathers + store
+        row(f"lookup_E{E}", us, f"{bytes_moved / us / 1e3:.2f}GBps_N{N}")
+
+        fused = functools.partial(ops.lookup_rho, Y, i, w, offset=off,
+                                  impl="ref")
+        us_f = time_fn(fused)
+        row(f"lookup_rho_E{E}", us_f,
+            f"fused_vs_plain_{us / max(us_f, 1e-9):.2f}x")

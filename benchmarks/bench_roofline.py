@@ -1,0 +1,65 @@
+"""Paper Figs. 6–9: roofline placement of the EDM kernels.
+
+Reproduces the paper's analysis structurally: per kernel × E, report
+arithmetic intensity (FLOPs/byte, analytic from the kernel's access
+pattern) and achieved FLOP/s (measured wall-clock on this host), plus
+the *TPU-projected* time from the v5e roofline terms the dry-run uses
+(197 TFLOP/s, 819 GB/s HBM). The paper's qualitative claims checked
+here: (1) EDM never leaves the memory-bound region for E ≤ 20;
+(2) pairwise arithmetic intensity grows ~linearly with E (series reuse);
+(3) the fused-ρ lookup removes the prediction-matrix write-back.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax.numpy as jnp
+
+from benchmarks.common import row, time_fn
+from repro.data.timeseries import tent_map_panel
+from repro.kernels import ops
+
+V5E_FLOPS = 197e12
+V5E_BW = 819e9
+RIDGE = V5E_FLOPS / V5E_BW  # ≈ 240 FLOP/byte
+
+L = 4096
+N = 256
+E_SWEEP = (1, 5, 10, 20)
+
+
+def run():
+    x = jnp.asarray(tent_map_panel(1, L, seed=3)[0])
+    panel = jnp.asarray(tent_map_panel(N, L, seed=4))
+    for E in E_SWEEP:
+        Lp = L - (E - 1)
+        k = E + 1
+        # pairwise: 3E flops per output elem; traffic = D write + series
+        # reads (cached) ≈ 4 bytes/elem out + amortized input
+        flops = 3.0 * E * Lp * Lp
+        bytes_ = 4.0 * Lp * Lp + 8.0 * L * E
+        ai = flops / bytes_
+        fn = functools.partial(ops.pairwise_distances, x, E=E, tau=1,
+                               impl="ref")
+        us = time_fn(fn)
+        tpu_t = max(flops / V5E_FLOPS, bytes_ / V5E_BW)
+        bound = "mem" if ai < RIDGE else "compute"
+        row(f"roofline_pairwise_E{E}", us,
+            f"AI{ai:.2f}_{bound}bound_host{flops / us / 1e3:.1f}GFLOPs_"
+            f"tpu{tpu_t * 1e6:.1f}us")
+
+        d, i = ops.all_knn(x, E=E, tau=1, k=k, impl="ref")
+        w = ops.make_weights(d)
+        rows_n = i.shape[0]
+        # lookup: 2k flops per output; traffic: k gathers + tables + out
+        lflops = 2.0 * k * N * rows_n
+        lbytes = 4.0 * N * rows_n * (k + 1) + 8.0 * rows_n * k
+        lai = lflops / lbytes
+        fn2 = functools.partial(ops.lookup_rho, panel, i, w, offset=E - 1,
+                                impl="ref")
+        us2 = time_fn(fn2)
+        tpu_t2 = max(lflops / V5E_FLOPS, lbytes / V5E_BW)
+        row(f"roofline_lookup_E{E}", us2,
+            f"AI{lai:.2f}_membound_host{lflops / us2 / 1e3:.1f}GFLOPs_"
+            f"tpu{tpu_t2 * 1e6:.1f}us")

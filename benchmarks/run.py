@@ -1,0 +1,33 @@
+"""Benchmark harness — one module per paper table/figure.
+
+Prints ``name,us_per_call,derived`` CSV rows:
+  bench_knn      → paper Figs. 2–3 (all-kNN breakdown vs E)
+  bench_lookup   → paper Figs. 4–5 (batched lookups, fused ρ)
+  bench_ccm      → paper Table 1 (pairwise CCM, dataset-shaped)
+  bench_roofline → paper Figs. 6–9 (arithmetic intensity / roofline)
+"""
+
+from __future__ import annotations
+
+import sys
+
+
+def main() -> None:
+    from benchmarks import bench_ccm, bench_knn, bench_lookup, bench_roofline
+
+    mods = {
+        "knn": bench_knn,
+        "lookup": bench_lookup,
+        "ccm": bench_ccm,
+        "roofline": bench_roofline,
+    }
+    only = sys.argv[1] if len(sys.argv) > 1 else None
+    print("name,us_per_call,derived")
+    for name, mod in mods.items():
+        if only and only != name:
+            continue
+        mod.run()
+
+
+if __name__ == "__main__":
+    main()

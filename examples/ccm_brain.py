@@ -1,0 +1,91 @@
+"""All-pairs causal mapping, zebrafish-brain style (paper's headline use).
+
+Run:  PYTHONPATH=src python examples/ccm_brain.py [--series 24] [--steps 600]
+      PYTHONPATH=src python examples/ccm_brain.py --sharded --devices 8
+
+Builds a panel of coupled "neurons" where a few driver units force the
+rest, determines each series' optimal embedding dimension (simplex),
+computes the full N×N cross-map skill matrix (grouped by E, exactly
+kEDM §3.4), and reports how well the known driver topology is recovered.
+``--sharded`` re-runs the matrix through the shard_map engine on emulated
+devices — the same code path the 512-chip dry-run lowers.
+"""
+
+import argparse
+import os
+import sys
+import time
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--series", type=int, default=24)
+    ap.add_argument("--steps", type=int, default=600)
+    ap.add_argument("--drivers", type=int, default=2)
+    ap.add_argument("--sharded", action="store_true")
+    ap.add_argument("--devices", type=int, default=8)
+    args = ap.parse_args()
+
+    if args.sharded:
+        os.environ["XLA_FLAGS"] = (
+            f"--xla_force_host_platform_device_count={args.devices}")
+
+    import jax
+    import jax.numpy as jnp
+    import numpy as np
+
+    from repro import core
+    from repro.data import timeseries as ts
+
+    panel_np, adj = ts.forced_network_panel(
+        args.series, args.steps, n_drivers=args.drivers, coupling=0.1,
+        seed=11)
+    panel = jnp.asarray(panel_np)
+    N = args.series
+
+    print(f"panel: {N} series × {args.steps} steps, "
+          f"{args.drivers} hidden drivers")
+
+    t0 = time.time()
+    E_opt, _ = core.optimal_E_batch(panel, E_max=5)
+    # CCM needs E ≥ 2: an E=1 'manifold' is a line and cross-map skill
+    # from it is degenerate (biases the asymmetry statistic)
+    E_opt = np.maximum(np.asarray(E_opt), 2)
+    print(f"optimal-E search: {time.time() - t0:.1f}s, "
+          f"E histogram: {np.bincount(E_opt)[1:]}")
+
+    t0 = time.time()
+    if args.sharded:
+        from repro.distributed import sharded_ccm_matrix
+        mesh = jax.make_mesh(
+            (args.devices // 2, 2), ("data", "model"),
+            axis_types=(jax.sharding.AxisType.Auto,) * 2)
+        E = int(np.median(np.asarray(E_opt)))
+        rho = np.asarray(sharded_ccm_matrix(panel, panel, E=E, mesh=mesh))
+        print(f"sharded CCM matrix ({args.devices} devices, fixed E={E}): "
+              f"{time.time() - t0:.1f}s")
+    else:
+        rho = core.ccm_matrix(panel, E_opt)
+        print(f"CCM matrix (grouped by optimal E): {time.time() - t0:.1f}s")
+
+    # driver detection: evidence that unit d forces unit j is rho[j, d]
+    # (cross-map the driver from the follower's manifold). The standard
+    # CCM statistic is the ASYMMETRY rho[j, d] − rho[d, j]: common-drive
+    # synchrony among followers is symmetric and cancels.
+    drive_score = (rho - rho.T).mean(axis=0)
+    ranked = np.argsort(-drive_score)
+    print("units ranked by outgoing causal influence "
+          f"(true drivers: {list(range(args.drivers))}):")
+    for r, u in enumerate(ranked[: args.drivers + 3]):
+        mark = " ← true driver" if u < args.drivers else ""
+        print(f"  #{r + 1}: unit {u:3d} score {drive_score[u]:.3f}{mark}")
+    top = args.drivers + 2  # common-drive confounds cost a rank or two
+    hits = sum(1 for u in ranked[:top] if u < args.drivers)
+    print(f"drivers recovered in top-{top}: {hits}/{args.drivers} "
+          "(follower-follower links from shared forcing are a known CCM "
+          "confound; the asymmetry statistic bounds, not eliminates, them)")
+    return 0 if hits == args.drivers else 1
+
+
+if __name__ == "__main__":
+    sys.exit(main())

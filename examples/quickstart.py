@@ -1,0 +1,57 @@
+"""Quickstart: the paper's EDM toolkit in five minutes.
+
+Run:  PYTHONPATH=src python examples/quickstart.py
+
+Covers the full kEDM surface on synthetic chaotic systems:
+simplex forecasting, optimal embedding dimension, the S-Map
+nonlinearity test, and convergent cross mapping with its
+convergence-in-library-size causality criterion.
+"""
+
+import jax.numpy as jnp
+import numpy as np
+
+from repro import core
+from repro.data import timeseries as ts
+
+
+def main():
+    print("=" * 64)
+    print("1. Simplex projection: forecasting deterministic chaos")
+    x = jnp.asarray(ts.logistic_map(500))
+    for tp in (1, 2, 5, 10):
+        rho = float(core.simplex_skill(x, E=2, Tp=tp))
+        print(f"   horizon Tp={tp:2d}: forecast skill ρ = {rho:.4f}")
+    print("   (skill decays with horizon — the signature of chaos)")
+
+    print("=" * 64)
+    print("2. Optimal embedding dimension (Lorenz-63, true dim ≈ 3)")
+    lz = jnp.asarray(ts.lorenz63(800)[0])
+    best, rhos = core.optimal_E(lz, E_max=8, tau=2)
+    for E, r in enumerate(np.asarray(rhos), start=1):
+        marker = " ← chosen" if E == best else ""
+        print(f"   E={E}: ρ={float(r):.4f}{marker}")
+
+    print("=" * 64)
+    print("3. S-Map nonlinearity test (ρ rising with θ ⇒ nonlinear)")
+    thetas = (0.0, 0.5, 2.0, 8.0)
+    rhos = np.asarray(core.nonlinearity_test(x, E=2, thetas=thetas))
+    for t, r in zip(thetas, rhos):
+        print(f"   θ={t:4.1f}: ρ={r:.4f}")
+
+    print("=" * 64)
+    print("4. CCM: who causes whom? (X forces Y, not vice versa)")
+    xs, ys = ts.coupled_logistic(900, b_xy=0.0, b_yx=0.32, seed=3)
+    sizes = (60, 200, 500, 880)
+    x_from_y = np.asarray(core.cross_map(jnp.asarray(ys), jnp.asarray(xs),
+                                         E=2, lib_sizes=sizes))
+    y_from_x = np.asarray(core.cross_map(jnp.asarray(xs), jnp.asarray(ys),
+                                         E=2, lib_sizes=sizes))
+    print("   lib size | X̂|M_Y (X→Y evidence) | Ŷ|M_X (Y→X evidence)")
+    for s, a, b in zip(sizes, x_from_y, y_from_x):
+        print(f"   {s:8d} | {a:20.4f} | {b:19.4f}")
+    print("   (left column converges high: X causes Y; right stays low)")
+
+
+if __name__ == "__main__":
+    main()

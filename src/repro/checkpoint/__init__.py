@@ -1,0 +1,5 @@
+"""Checkpoint substrate: atomic save/restore, retention, elastic reshard."""
+
+from repro.checkpoint.manager import CheckpointManager
+
+__all__ = ["CheckpointManager"]

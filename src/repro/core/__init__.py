@@ -1,0 +1,39 @@
+"""repro.core — the paper's contribution: EDM as a composable JAX library.
+
+Layers (kEDM §3): fused-embedding all-kNN search, batched simplex lookups
+with optional fused Pearson ρ, simplex projection (optimal-E), convergent
+cross mapping, S-Map, and stable streaming statistics. The distributed
+pairwise-CCM engine lives in ``repro.distributed.sharded_ccm``.
+"""
+
+from repro.core.ccm import ccm_matrix, cross_map
+from repro.core.embedding import delay_embed, embed_offset, num_embedded, pred_rows
+from repro.core.knn import KnnTable, all_knn
+from repro.core.simplex import (
+    optimal_E,
+    optimal_E_batch,
+    simplex_predict,
+    simplex_skill,
+)
+from repro.core.smap import nonlinearity_test, smap_predict, smap_skill
+from repro.core.stats import CoMoments, pearson_rows
+
+__all__ = [
+    "KnnTable",
+    "all_knn",
+    "ccm_matrix",
+    "cross_map",
+    "delay_embed",
+    "embed_offset",
+    "num_embedded",
+    "pred_rows",
+    "optimal_E",
+    "optimal_E_batch",
+    "simplex_predict",
+    "simplex_skill",
+    "nonlinearity_test",
+    "smap_predict",
+    "smap_skill",
+    "CoMoments",
+    "pearson_rows",
+]

@@ -1,0 +1,24 @@
+"""Time-delay embedding (Takens) — conventions and materialized helper.
+
+Index conventions used across the whole framework (see kernels/ref.py):
+embedded point ``i`` has components ``x[i + k*tau], k in [0, E)`` and
+corresponds to *time* ``t = i + (E-1)*tau``. ``Lp = L - (E-1)*tau``.
+
+The production path never materializes the embedding — the paper's core
+optimization fuses it into the distance kernel — but tests, S-Map and
+user-facing inspection use this helper.
+"""
+
+from __future__ import annotations
+
+from repro.kernels.ref import delay_embed, num_embedded  # noqa: F401
+
+
+def embed_offset(E: int, tau: int, Tp: int = 0) -> int:
+    """Embedded-index → time-index offset used by lookups (+ horizon Tp)."""
+    return (E - 1) * tau + Tp
+
+
+def pred_rows(L: int, E: int, tau: int, Tp: int) -> int:
+    """Number of embedded rows whose Tp-ahead truth exists in the series."""
+    return num_embedded(L, E, tau) - max(Tp, 0)

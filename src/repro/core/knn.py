@@ -1,0 +1,50 @@
+"""All-k-nearest-neighbor search over a library series (paper §3.3)."""
+
+from __future__ import annotations
+
+import dataclasses
+
+import jax
+
+from repro.kernels import ops
+
+
+@jax.tree_util.register_dataclass
+@dataclasses.dataclass(frozen=True)
+class KnnTable:
+    """Precomputed neighbor tables for one library series.
+
+    The paper's key structural idea (§2.1): compute the all-kNN tables once
+    per library and reuse them for *every* target lookup.
+    """
+
+    dists: jax.Array  # (Lp, k) Euclidean, ascending
+    idx: jax.Array  # (Lp, k) int32 embedded indices
+    E: int = dataclasses.field(metadata=dict(static=True))
+    tau: int = dataclasses.field(metadata=dict(static=True))
+    k: int = dataclasses.field(metadata=dict(static=True))
+
+    @property
+    def weights(self) -> jax.Array:
+        """Normalized simplex weights, paper step (3)."""
+        return ops.make_weights(self.dists)
+
+
+def all_knn(
+    x: jax.Array,
+    *,
+    E: int,
+    tau: int = 1,
+    k: int | None = None,
+    exclude_self: bool = True,
+    max_idx=None,
+    impl: str = "auto",
+    variant: str = "vpu",
+) -> KnnTable:
+    """Fused pairwise distances + top-k over one series. k defaults to E+1."""
+    k = E + 1 if k is None else k
+    dists, idx = ops.all_knn(
+        x, E=E, tau=tau, k=k, exclude_self=exclude_self, max_idx=max_idx,
+        impl=impl, variant=variant,
+    )
+    return KnnTable(dists=dists, idx=idx, E=E, tau=tau, k=k)

@@ -1,0 +1,92 @@
+"""Simplex projection: leave-one-out forecasting and optimal-E search.
+
+EDM step the paper relies on to pick each series' embedding dimension
+(kEDM §3.4 groups CCM lookups by the *target's* optimal E, which this
+module determines). Forecast skill ρ(E) is evaluated by predicting
+``x(t + Tp)`` from the E-dimensional manifold with the point itself
+excluded (leave-one-out), as in cppEDM's ``EmbedDimension``.
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.embedding import embed_offset, num_embedded, pred_rows
+from repro.core.knn import all_knn
+from repro.kernels import ops
+
+
+def simplex_predict(
+    x: jax.Array,
+    *,
+    E: int,
+    tau: int = 1,
+    Tp: int = 1,
+    impl: str = "auto",
+) -> tuple[jax.Array, jax.Array]:
+    """Leave-one-out Tp-ahead predictions for one series.
+
+    Returns (pred, truth), both shape (Lp - Tp,): pred[j] forecasts the
+    value at time j + (E-1)tau + Tp.
+    """
+    L = x.shape[-1]
+    Lp = num_embedded(L, E, tau)
+    rows = pred_rows(L, E, tau, Tp)
+    off = embed_offset(E, tau, Tp)
+    # Neighbors must themselves have a Tp-ahead value inside the series.
+    table = all_knn(x, E=E, tau=tau, k=E + 1, exclude_self=True,
+                    max_idx=Lp - 1 - Tp, impl=impl)
+    w = table.weights[:rows]
+    idx = table.idx[:rows]
+    pred = ops.lookup(x[None, :], idx, w, offset=off, impl=impl)[0]
+    truth = jax.lax.dynamic_slice_in_dim(x, off, rows, axis=-1)
+    return pred, truth
+
+
+def simplex_skill(
+    x: jax.Array, *, E: int, tau: int = 1, Tp: int = 1, impl: str = "auto"
+) -> jax.Array:
+    """Forecast skill ρ for one (series, E)."""
+    pred, truth = simplex_predict(x, E=E, tau=tau, Tp=Tp, impl=impl)
+    return ops.pearson_rows(pred[None, :], truth[None, :])[0]
+
+
+def optimal_E(
+    x: jax.Array,
+    *,
+    E_max: int = 20,
+    tau: int = 1,
+    Tp: int = 1,
+    impl: str = "auto",
+) -> tuple[int, jax.Array]:
+    """Sweep E = 1..E_max, return (best E, ρ per E).
+
+    Shapes differ per E, so this is a host loop of jitted per-E computations
+    — exactly kEDM's ``edim`` structure.
+    """
+    rhos = jnp.stack(
+        [simplex_skill(x, E=E, tau=tau, Tp=Tp, impl=impl)
+         for E in range(1, E_max + 1)]
+    )
+    return int(jnp.argmax(rhos)) + 1, rhos
+
+
+def optimal_E_batch(
+    X: jax.Array,
+    *,
+    E_max: int = 20,
+    tau: int = 1,
+    Tp: int = 1,
+    impl: str = "auto",
+) -> tuple[jax.Array, jax.Array]:
+    """Per-series optimal E for a (N, L) batch → (E_opt (N,) i32, ρ (N, E_max)).
+
+    vmapped over series per E (one pairwise matrix per series in flight).
+    """
+    rhos = []
+    for E in range(1, E_max + 1):
+        fn = lambda s: simplex_skill(s, E=E, tau=tau, Tp=Tp, impl=impl)
+        rhos.append(jax.lax.map(fn, X))  # sequential: bounds peak memory
+    rho = jnp.stack(rhos, axis=1)  # (N, E_max)
+    return (jnp.argmax(rho, axis=1) + 1).astype(jnp.int32), rho

@@ -1,0 +1,75 @@
+"""S-Map: locally weighted linear forecasting (beyond-paper, cppEDM parity).
+
+The paper validates kEDM against cppEDM; S-Map is the other core EDM
+method there (and the standard EDM nonlinearity test: skill rising with
+the locality parameter θ ⇒ state-dependent, nonlinear dynamics). Included
+for framework completeness; it shares the embedding/stats substrate but
+not the kNN kernels (S-Map weights *all* library points).
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.embedding import embed_offset, num_embedded, pred_rows
+from repro.kernels import ops
+from repro.kernels.ref import delay_embed
+
+
+@functools.partial(jax.jit, static_argnames=("E", "tau", "Tp"))
+def smap_predict(
+    x: jax.Array, *, E: int, tau: int = 1, Tp: int = 1, theta: float = 0.0
+) -> tuple[jax.Array, jax.Array]:
+    """Leave-one-out S-Map forecasts. Returns (pred, truth), shape (rows,).
+
+    For each query j: weights w_i = exp(-θ d_ij / d̄_j) over all library
+    points i (self excluded), then a weighted ridge-free least-squares fit
+    ŷ = [1, z_j]·b with b = argmin Σ w_i (y_i − [1, z_i]·b)².
+    """
+    x = x.astype(jnp.float32)
+    L = x.shape[-1]
+    Lp = num_embedded(L, E, tau)
+    rows = pred_rows(L, E, tau, Tp)
+    off = embed_offset(E, tau, Tp)
+    Z = delay_embed(x, E, tau)  # (Lp, E)
+    y = jax.lax.dynamic_slice_in_dim(x, off, rows, axis=-1)  # truth for rows
+    Zlib = Z[:rows]  # library points with a Tp-ahead value
+    A = jnp.concatenate([jnp.ones((rows, 1), jnp.float32), Zlib], axis=1)
+
+    D = ops.pairwise_distances(x, E=E, tau=tau, impl="ref")  # (Lp, Lp) sq
+    d = jnp.sqrt(jnp.maximum(D[:rows, :rows], 0.0))
+
+    def solve(j):
+        dj = d[j]
+        dbar = jnp.mean(dj)
+        w = jnp.exp(-theta * dj / jnp.maximum(dbar, 1e-30))
+        w = w.at[j].set(0.0)  # leave-one-out
+        sw = jnp.sqrt(w)[:, None]
+        b, *_ = jnp.linalg.lstsq(A * sw, y * sw[:, 0])
+        return jnp.dot(A[j], b)
+
+    pred = jax.lax.map(solve, jnp.arange(rows))
+    return pred, y
+
+
+def smap_skill(
+    x: jax.Array, *, E: int, tau: int = 1, Tp: int = 1, theta: float = 0.0
+) -> jax.Array:
+    pred, truth = smap_predict(x, E=E, tau=tau, Tp=Tp, theta=theta)
+    return ops.pearson_rows(pred[None, :], truth[None, :])[0]
+
+
+def nonlinearity_test(
+    x: jax.Array,
+    *,
+    E: int,
+    tau: int = 1,
+    Tp: int = 1,
+    thetas=(0.0, 0.1, 0.3, 0.5, 1.0, 2.0, 4.0, 8.0),
+) -> jax.Array:
+    """ρ(θ) curve — increasing skill with θ indicates nonlinear dynamics."""
+    return jnp.stack([smap_skill(x, E=E, tau=tau, Tp=Tp, theta=float(t))
+                      for t in thetas])

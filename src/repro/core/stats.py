@@ -1,0 +1,80 @@
+"""Numerically stable correlation/covariance (paper §3.4, ref. [15]).
+
+The Schubert–Gertz pairwise-merge scheme used by the fused-ρ kernel is
+exposed here for tests and host-side streaming use (e.g. merging partial
+statistics across devices or checkpointed shards).
+"""
+
+from __future__ import annotations
+
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels.ref import pearson_rows  # noqa: F401  (canonical two-pass)
+
+
+@jax.tree_util.register_dataclass
+@dataclasses.dataclass
+class CoMoments:
+    """Running (co-)moments of two aligned batches: n, means, M2s, C."""
+
+    n: jax.Array
+    mean_a: jax.Array
+    mean_b: jax.Array
+    m2_a: jax.Array
+    m2_b: jax.Array
+    c_ab: jax.Array
+
+    @classmethod
+    def zeros(cls, shape=(), dtype=jnp.float32) -> "CoMoments":
+        z = jnp.zeros(shape, dtype)
+        return cls(n=z, mean_a=z, mean_b=z, m2_a=z, m2_b=z, c_ab=z)
+
+    @classmethod
+    def from_batch(cls, a: jax.Array, b: jax.Array, axis: int = -1,
+                   where=None) -> "CoMoments":
+        """Two-pass moments of one batch (optionally masked)."""
+        a = a.astype(jnp.float32)
+        b = b.astype(jnp.float32)
+        if where is None:
+            n = jnp.full(a.sum(axis=axis).shape, a.shape[axis], jnp.float32)
+            ma = jnp.mean(a, axis=axis)
+            mb = jnp.mean(b, axis=axis)
+            da, db = a - jnp.expand_dims(ma, axis), b - jnp.expand_dims(mb, axis)
+        else:
+            w = where.astype(jnp.float32)
+            n = jnp.sum(w, axis=axis)
+            ns = jnp.maximum(n, 1.0)
+            ma = jnp.sum(a * w, axis=axis) / ns
+            mb = jnp.sum(b * w, axis=axis) / ns
+            da = (a - jnp.expand_dims(ma, axis)) * w
+            db = (b - jnp.expand_dims(mb, axis)) * w
+        return cls(
+            n=n, mean_a=ma, mean_b=mb,
+            m2_a=jnp.sum(da * da, axis=axis),
+            m2_b=jnp.sum(db * db, axis=axis),
+            c_ab=jnp.sum(da * db, axis=axis),
+        )
+
+    def merge(self, other: "CoMoments") -> "CoMoments":
+        """Schubert & Gertz (2018) parallel merge — associative, stable."""
+        n = self.n + other.n
+        ns = jnp.maximum(n, 1.0)
+        da = other.mean_a - self.mean_a
+        db = other.mean_b - self.mean_b
+        f = self.n * other.n / ns
+        return CoMoments(
+            n=n,
+            mean_a=self.mean_a + da * other.n / ns,
+            mean_b=self.mean_b + db * other.n / ns,
+            m2_a=self.m2_a + other.m2_a + da * da * f,
+            m2_b=self.m2_b + other.m2_b + db * db * f,
+            c_ab=self.c_ab + other.c_ab + da * db * f,
+        )
+
+    @property
+    def pearson(self) -> jax.Array:
+        denom = jnp.sqrt(self.m2_a * self.m2_b)
+        return jnp.where(denom > 0, self.c_ab / jnp.maximum(denom, 1e-30), 0.0)

@@ -1,0 +1,18 @@
+"""Data substrate: synthetic dynamical systems (EDM) and the token
+pipeline (LM training)."""
+
+from repro.data.timeseries import (
+    coupled_logistic,
+    forced_network_panel,
+    logistic_map,
+    lorenz63,
+    tent_map_panel,
+)
+
+__all__ = [
+    "coupled_logistic",
+    "forced_network_panel",
+    "logistic_map",
+    "lorenz63",
+    "tent_map_panel",
+]

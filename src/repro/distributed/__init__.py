@@ -1,0 +1,8 @@
+"""Distributed runtime: sharded CCM engine, collectives, compression, fault
+tolerance. The shard_map CCM engine is the multi-node scale story of the
+paper's predecessor (mpEDM on ABCI: whole-brain causal maps) expressed as
+one SPMD program instead of MPI ranks."""
+
+from repro.distributed.sharded_ccm import pad_to_multiple, sharded_ccm_matrix
+
+__all__ = ["sharded_ccm_matrix", "pad_to_multiple"]

@@ -1,0 +1,75 @@
+"""Gradient compression with error feedback (distributed-optimization).
+
+Wire-format compression for data-parallel gradient exchange: bf16
+truncation or blockwise-int8 quantization, with an error-feedback buffer
+(the residual is added back before the next compression, preserving
+convergence — Seide et al. / EF-SGD). ``allreduce_compressed`` is the
+shard_map building block: it all-gathers the quantized payload over the
+data axis and dequantize-reduces locally, so ICI bytes drop 2×/4× vs
+fp32 all-reduce.
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.optim.adamw import _dequantize_flat as _dequantize, _quantize_flat as _quantize
+
+
+def compress(g: jax.Array, kind: str):
+    if kind == "bf16":
+        return g.astype(jnp.bfloat16)
+    if kind == "int8":
+        return _quantize(g.astype(jnp.float32))
+    raise ValueError(kind)
+
+
+def decompress(payload, kind: str, shape, size):
+    if kind == "bf16":
+        return payload.astype(jnp.float32)
+    return _dequantize(payload, shape, size)
+
+
+def ef_compress_tree(grads, error_buf, kind: str):
+    """Error-feedback compression of a gradient pytree.
+
+    Returns (compressed-and-decompressed grads — what the wire delivers,
+    new error buffer). kind="none" passes through.
+    """
+    if kind == "none":
+        return grads, error_buf
+
+    def leaf(g, e):
+        g32 = g.astype(jnp.float32) + e
+        wire = decompress(compress(g32, kind), kind, g32.shape, g32.size)
+        return wire, g32 - wire
+
+    flat_g, treedef = jax.tree.flatten(grads)
+    flat_e = treedef.flatten_up_to(error_buf)
+    outs = [leaf(g, e) for g, e in zip(flat_g, flat_e)]
+    return (treedef.unflatten([o[0] for o in outs]),
+            treedef.unflatten([o[1] for o in outs]))
+
+
+def init_error_buf(params):
+    return jax.tree.map(
+        lambda p: jnp.zeros(p.shape, jnp.float32), params)
+
+
+def allreduce_compressed(g: jax.Array, axis: str, kind: str):
+    """Mean-all-reduce over a shard_map axis with a compressed wire format.
+
+    int8: all_gather the (q, scale) payload (1 byte + 4/256 per element)
+    and dequantize-sum locally. bf16: psum in bf16. none: psum fp32.
+    """
+    n = jax.lax.axis_size(axis)
+    if kind == "none":
+        return jax.lax.pmean(g, axis)
+    if kind == "bf16":
+        return jax.lax.pmean(g.astype(jnp.bfloat16), axis).astype(g.dtype)
+    enc = compress(g.astype(jnp.float32), "int8")
+    qs = jax.lax.all_gather(enc["q"], axis)        # (n, blocks, 256) int8
+    ss = jax.lax.all_gather(enc["scale"], axis)    # (n, blocks, 1) f32
+    total = jnp.sum(qs.astype(jnp.float32) / 127.0 * ss, axis=0)
+    return (total.reshape(-1)[: g.size].reshape(g.shape) / n).astype(g.dtype)

@@ -1,0 +1,178 @@
+"""Pallas TPU kernel: batched simplex lookup (+ fused Pearson ρ).
+
+The paper's Algorithm 3 (kEDM §3.4): predictions for N target series that
+share one library's neighbor tables,
+
+    yhat[n, j] = sum_k W[j, k] * Y[n, I[j, k] + offset].
+
+Kokkos caches the target series in team scratch and unrolls the k-loop;
+the TPU adaptation (DESIGN.md §2) puts **targets on the 128-lane axis**:
+the target block is held in VMEM transposed, (L, bn), so each neighbor
+gather ``Y_T[I[j,k]+offset, :]`` is a single sublane dynamic-slice of a
+(1, bn) vector — the lane-major analog of kEDM's coalesced reads. The
+k-loop (k ≤ 32) is unrolled; the j-loop is a fori with direct stores.
+
+``lookup_rho`` is the paper's "on-the-fly correlation" path: predicted
+values never reach HBM; per-target covariance statistics are accumulated
+across j-tiles in a revisited output block using the numerically stable
+pairwise-merge scheme of Schubert & Gertz (the paper's ref. [15]).
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+
+def _gather_tile(yT_ref, i_ref, w_ref, j0, *, k, bj, bn, offset):
+    """Compute one (bj, bn) tile of predictions into a VMEM value."""
+
+    hi = yT_ref.shape[0] - 1
+
+    def body(j, acc):
+        row = jnp.zeros((1, bn), jnp.float32)
+        for kk in range(k):  # unrolled: k is small and static
+            # clamp: padded rows of ragged j-tiles hold undefined indices
+            idx = jnp.clip(i_ref[j, kk] + offset, 0, hi)
+            row = row + w_ref[j, kk] * yT_ref[pl.dslice(idx, 1), :]
+        return jax.lax.dynamic_update_slice(acc, row, (j, 0))
+
+    return jax.lax.fori_loop(0, bj, body, jnp.zeros((bj, bn), jnp.float32))
+
+
+def _kernel_lookup(yT_ref, i_ref, w_ref, o_ref, *, k, bj, bn, offset):
+    o_ref[...] = _gather_tile(yT_ref, i_ref, w_ref, None, k=k, bj=bj, bn=bn,
+                              offset=offset)
+
+
+@functools.partial(
+    jax.jit, static_argnames=("offset", "block", "interpret")
+)
+def lookup(
+    Y: jax.Array,
+    idx: jax.Array,
+    w: jax.Array,
+    *,
+    offset: int = 0,
+    block: tuple[int, int] = (128, 128),
+    interpret: bool = False,
+) -> jax.Array:
+    """Batched lookup via Pallas. Returns (N, Lp) float32."""
+    N, L = Y.shape
+    Lp, k = idx.shape
+    bj, bn = (max(8, min(block[0], Lp)), max(8, min(block[1], N)))
+    gj, gn = pl.cdiv(Lp, bj), pl.cdiv(N, bn)
+    # Pad the time axis so idx+offset slices never clamp, incl. the padded
+    # rows of ragged j-tiles (their idx payload is undefined → clamp-safe 0).
+    Lpad = L + 1
+    yT = jnp.pad(Y.astype(jnp.float32).T, ((0, Lpad - L), (0, 0)))
+    out = pl.pallas_call(
+        functools.partial(_kernel_lookup, k=k, bj=bj, bn=bn, offset=offset),
+        grid=(gn, gj),
+        in_specs=[
+            pl.BlockSpec((Lpad, bn), lambda n, j: (0, n)),
+            pl.BlockSpec((bj, k), lambda n, j: (j, 0)),
+            pl.BlockSpec((bj, k), lambda n, j: (j, 0)),
+        ],
+        out_specs=pl.BlockSpec((bj, bn), lambda n, j: (j, n)),
+        out_shape=jax.ShapeDtypeStruct((Lp, N), jnp.float32),
+        interpret=interpret,
+    )(yT, _sanitize_idx(idx, L - 1 - offset), w.astype(jnp.float32))
+    return out.T
+
+
+def _sanitize_idx(idx: jax.Array, hi: int) -> jax.Array:
+    """Clamp indices into [0, hi]; padded tile rows may hold garbage."""
+    return jnp.clip(idx.astype(jnp.int32), 0, max(hi, 0))
+
+
+# ---------------------------------------------------------------- fused rho
+
+
+def _kernel_rho(yT_ref, i_ref, w_ref, s_ref, *, k, bj, bn, offset, Lp):
+    j = pl.program_id(1)
+    j0 = j * bj
+
+    @pl.when(j == 0)
+    def _init():
+        s_ref[...] = jnp.zeros_like(s_ref)
+
+    yhat = _gather_tile(yT_ref, i_ref, w_ref, j0, k=k, bj=bj, bn=bn,
+                        offset=offset)
+    ytrue = yT_ref[pl.dslice(j0 + offset, bj), :]  # contiguous truth rows
+    # Mask ragged-edge rows with selects, not multiplies: the interpreter
+    # (and Mosaic) pad ragged input blocks with undefined values, which may
+    # be NaN — and NaN * 0 == NaN would poison the reduction.
+    valid_b = j0 + jax.lax.broadcasted_iota(jnp.int32, (bj, 1), 0) < Lp
+    valid = valid_b.astype(jnp.float32)
+    yhat = jnp.where(valid_b, yhat, 0.0)
+    ytrue = jnp.where(valid_b, ytrue, 0.0)
+
+    # Tile-local two-pass stats (masked), then Schubert–Gertz pairwise merge
+    # with the running stats held in the revisited output block.
+    nt = jnp.sum(valid)  # scalar
+    nt_safe = jnp.maximum(nt, 1.0)
+    ma_t = jnp.sum(yhat, axis=0, keepdims=True) / nt_safe  # (1, bn)
+    mb_t = jnp.sum(ytrue, axis=0, keepdims=True) / nt_safe
+    da = (yhat - ma_t) * valid
+    db = (ytrue - mb_t) * valid
+    M2a_t = jnp.sum(da * da, axis=0, keepdims=True)
+    M2b_t = jnp.sum(db * db, axis=0, keepdims=True)
+    C_t = jnp.sum(da * db, axis=0, keepdims=True)
+
+    n0 = s_ref[0:1, :]
+    ma0, mb0 = s_ref[1:2, :], s_ref[2:3, :]
+    M2a0, M2b0, C0 = s_ref[3:4, :], s_ref[4:5, :], s_ref[5:6, :]
+    n1 = n0 + nt
+    n1_safe = jnp.maximum(n1, 1.0)
+    dA = ma_t - ma0
+    dB = mb_t - mb0
+    f = n0 * nt / n1_safe
+    s_ref[0:1, :] = n1
+    s_ref[1:2, :] = ma0 + dA * nt / n1_safe
+    s_ref[2:3, :] = mb0 + dB * nt / n1_safe
+    s_ref[3:4, :] = M2a0 + M2a_t + dA * dA * f
+    s_ref[4:5, :] = M2b0 + M2b_t + dB * dB * f
+    s_ref[5:6, :] = C0 + C_t + dA * dB * f
+
+
+@functools.partial(
+    jax.jit, static_argnames=("offset", "block", "interpret")
+)
+def lookup_rho(
+    Y: jax.Array,
+    idx: jax.Array,
+    w: jax.Array,
+    *,
+    offset: int = 0,
+    block: tuple[int, int] = (128, 128),
+    interpret: bool = False,
+) -> jax.Array:
+    """Fused lookup + Pearson ρ per target. Returns (N,) float32.
+
+    The (N, Lp) prediction matrix never leaves VMEM (paper §3.4).
+    """
+    N, L = Y.shape
+    Lp, k = idx.shape
+    bj, bn = (max(8, min(block[0], Lp)), max(8, min(block[1], N)))
+    gj, gn = pl.cdiv(Lp, bj), pl.cdiv(N, bn)
+    Lpad = L + bj + 1  # truth-row slice of the last ragged tile must not clamp
+    yT = jnp.pad(Y.astype(jnp.float32).T, ((0, Lpad - L), (0, 0)))
+    stats = pl.pallas_call(
+        functools.partial(_kernel_rho, k=k, bj=bj, bn=bn, offset=offset, Lp=Lp),
+        grid=(gn, gj),  # j innermost: stats block revisited across j
+        in_specs=[
+            pl.BlockSpec((Lpad, bn), lambda n, j: (0, n)),
+            pl.BlockSpec((bj, k), lambda n, j: (j, 0)),
+            pl.BlockSpec((bj, k), lambda n, j: (j, 0)),
+        ],
+        out_specs=pl.BlockSpec((8, bn), lambda n, j: (0, n)),
+        out_shape=jax.ShapeDtypeStruct((8, N), jnp.float32),
+        interpret=interpret,
+    )(yT, _sanitize_idx(idx, L - 1 - offset), w.astype(jnp.float32))
+    M2a, M2b, C = stats[3], stats[4], stats[5]
+    denom = jnp.sqrt(M2a * M2b)
+    return jnp.where(denom > 0, C / jnp.maximum(denom, 1e-30), 0.0)

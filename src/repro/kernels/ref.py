@@ -1,0 +1,147 @@
+"""Pure-jnp reference oracles for the EDM kernels.
+
+These are the ground truth the Pallas kernels are validated against
+(``tests/test_kernels_*``) and the path that multi-pod dry-runs lower
+(the container's CPU backend cannot compile Mosaic/TPU kernels).
+
+Index conventions (0-based, matching DESIGN.md §2):
+  - delay embedding of a series ``x`` of length L with dimension E and lag tau:
+        z_i[k] = x[i + k*tau],   k in [0, E),  i in [0, Lp),
+    where ``Lp = L - (E-1)*tau`` is the number of embedded points.
+  - embedded point i corresponds to *time* index ``t = i + (E-1)*tau``
+    (its most recent component).
+  - a lookup with horizon Tp reads target values at
+    ``I[j, k] + (E-1)*tau + Tp`` — callers pass that combined ``offset``.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+
+_INF = jnp.float32(jnp.inf)
+
+
+def num_embedded(L: int, E: int, tau: int) -> int:
+    """Number of valid delay-embedding vectors."""
+    n = L - (E - 1) * tau
+    if n <= 0:
+        raise ValueError(f"series too short: L={L}, E={E}, tau={tau}")
+    return n
+
+
+def delay_embed(x: jax.Array, E: int, tau: int) -> jax.Array:
+    """Materialized time-delay embedding, shape (Lp, E).
+
+    Only used by tests and the S-Map solver; the distance kernels fuse
+    this step (the paper's core optimization).
+    """
+    L = x.shape[-1]
+    Lp = num_embedded(L, E, tau)
+    cols = [jax.lax.dynamic_slice_in_dim(x, k * tau, Lp, axis=-1) for k in range(E)]
+    return jnp.stack(cols, axis=-1)
+
+
+@functools.partial(jax.jit, static_argnames=("E", "tau"))
+def pairwise_distances(x: jax.Array, *, E: int, tau: int) -> jax.Array:
+    """Squared-Euclidean pairwise distance matrix of the delay embedding.
+
+    Fused formulation (no (Lp, E) matrix is materialized): accumulates
+    ``(x[i+k*tau] - x[j+k*tau])**2`` over k. Returns (Lp, Lp) float32.
+    """
+    x = x.astype(jnp.float32)
+    Lp = num_embedded(x.shape[-1], E, tau)
+    acc = jnp.zeros((Lp, Lp), jnp.float32)
+    for k in range(E):
+        xk = jax.lax.dynamic_slice_in_dim(x, k * tau, Lp, axis=-1)
+        d = xk[:, None] - xk[None, :]
+        acc = acc + d * d
+    return acc
+
+
+@functools.partial(jax.jit, static_argnames=("k", "exclude_self"))
+def topk_select(
+    D: jax.Array,
+    *,
+    k: int,
+    exclude_self: bool = True,
+    max_idx: jax.Array | int | None = None,
+) -> tuple[jax.Array, jax.Array]:
+    """Partial sort: k smallest entries per row of a squared-distance matrix.
+
+    Returns (dists, idx): ``dists`` are *Euclidean* (sqrt applied — the
+    "normalize" step of the paper's Algorithm 2), sorted ascending, shape
+    (Lp, k); ``idx`` int32 embedded indices.
+
+    ``exclude_self`` masks the diagonal (CCM/simplex leave-one-out).
+    ``max_idx`` (inclusive) restricts neighbor candidates — used for
+    Tp-horizon validity and library-size convergence sweeps.
+    """
+    Lp = D.shape[0]
+    cols = jnp.arange(Lp, dtype=jnp.int32)
+    mask = jnp.zeros((Lp, Lp), bool)
+    if exclude_self:
+        mask = mask | jnp.eye(Lp, dtype=bool)
+    if max_idx is not None:
+        mask = mask | (cols[None, :] > jnp.asarray(max_idx, jnp.int32))
+    Dm = jnp.where(mask, _INF, D)
+    neg_d, idx = jax.lax.top_k(-Dm, k)
+    return jnp.sqrt(jnp.maximum(-neg_d, 0.0)), idx.astype(jnp.int32)
+
+
+def make_weights(dists: jax.Array, eps: float = 1e-30) -> jax.Array:
+    """Simplex weights from sorted neighbor distances, paper step (3).
+
+    w_i = exp(-d_i / d_min) normalized to sum 1; d_min is the nearest
+    distance, guarded so exact-duplicate neighbors dominate (cppEDM
+    semantics).
+    """
+    d_min = jnp.maximum(dists[..., :1], eps)
+    w = jnp.exp(-dists / d_min)
+    return w / jnp.sum(w, axis=-1, keepdims=True)
+
+
+@functools.partial(jax.jit, static_argnames=("offset",))
+def lookup(
+    Y: jax.Array, idx: jax.Array, w: jax.Array, *, offset: int = 0
+) -> jax.Array:
+    """Batched simplex lookup, paper Algorithm 3.
+
+    Y:   (N, L) target series sharing the library's neighbor tables.
+    idx: (Lp, k) int32 embedded neighbor indices.
+    w:   (Lp, k) normalized weights.
+    Returns (N, Lp): Yhat[n, j] = sum_k w[j, k] * Y[n, idx[j, k] + offset].
+    """
+    g = jnp.take(Y, idx + offset, axis=-1)  # (N, Lp, k)
+    return jnp.einsum("njk,jk->nj", g, w.astype(Y.dtype))
+
+
+@functools.partial(jax.jit, static_argnames=("offset",))
+def lookup_rho(
+    Y: jax.Array, idx: jax.Array, w: jax.Array, *, offset: int = 0
+) -> jax.Array:
+    """Fused lookup + Pearson ρ (paper §3.4 "on-the-fly" path).
+
+    Compares Yhat[n, j] against the aligned truth Y[n, j + offset] and
+    returns ρ per target, shape (N,). Never materializes Yhat in HBM on
+    the kernel path; this oracle just composes the two refs.
+    """
+    yhat = lookup(Y, idx, w, offset=offset)
+    Lp = idx.shape[0]
+    yt = jax.lax.dynamic_slice_in_dim(Y, offset, Lp, axis=-1)
+    return pearson_rows(yhat, yt)
+
+
+def pearson_rows(a: jax.Array, b: jax.Array) -> jax.Array:
+    """Row-wise Pearson correlation, two-pass (numerically stable)."""
+    a = a.astype(jnp.float32)
+    b = b.astype(jnp.float32)
+    am = a - jnp.mean(a, axis=-1, keepdims=True)
+    bm = b - jnp.mean(b, axis=-1, keepdims=True)
+    cov = jnp.sum(am * bm, axis=-1)
+    va = jnp.sum(am * am, axis=-1)
+    vb = jnp.sum(bm * bm, axis=-1)
+    denom = jnp.sqrt(va * vb)
+    return jnp.where(denom > 0, cov / jnp.maximum(denom, 1e-30), 0.0)

@@ -1,0 +1,2 @@
+"""Launchers: production meshes, sharding rules, dry-run driver,
+train/serve CLIs."""

@@ -1,0 +1,384 @@
+import os
+os.environ["XLA_FLAGS"] = os.environ.get(
+    "DRYRUN_XLA_FLAGS", "--xla_force_host_platform_device_count=512")
+
+"""Multi-pod dry-run driver (deliverable e).
+
+Lowers + compiles every (architecture × input-shape × mesh) cell against
+the production mesh built from 512 emulated host devices, and records
+``memory_analysis()`` / ``cost_analysis()`` / per-device collective bytes
+parsed from the optimized HLO. No arrays are ever allocated: parameters,
+optimizer state, batches and caches are ShapeDtypeStructs.
+
+Usage:
+  python -m repro.launch.dryrun --arch llama3-8b --shape train_4k \
+      --mesh single --out experiments/dryrun
+  python -m repro.launch.dryrun --all --mesh both --out experiments/dryrun
+  python -m repro.launch.dryrun --arch edm_ccm --shape ccm_pairwise ...
+"""
+
+import argparse
+import json
+import re
+import time
+import traceback
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs import ARCHS, SHAPES, TrainConfig, cells, get_config
+from repro.launch.mesh import axis_size as _axsize, dp_axes, make_production_mesh
+from repro.launch import sharding as shd
+from repro.models import transformer as tf
+from repro.models.meshctx import set_mesh
+from repro.training.step import make_train_step
+
+EDM_ARCH = "edm_ccm"
+EDM_SHAPES = {
+    # the paper's largest synthetic workload: 10^5 series × 10^4 steps
+    "ccm_pairwise": dict(n_series=102_400, length=10_000, E=20, tau=1),
+    # Subject6-shaped real-world cell (Table 1)
+    "ccm_subject6": dict(n_series=92_160, length=3_780, E=10, tau=1),
+}
+
+
+# ------------------------------------------------------------ input specs
+
+
+def input_specs(arch: str, shape_name: str, *, multi_pod: bool = False):
+    """ShapeDtypeStruct stand-ins for every model input of a cell."""
+    if arch == EDM_ARCH:
+        p = EDM_SHAPES[shape_name]
+        return {"X": jax.ShapeDtypeStruct(
+            (p["n_series"], p["length"]), jnp.float32)}
+    cfg = get_config(arch)
+    sc = SHAPES[shape_name]
+    B, S = sc.global_batch, sc.seq_len
+    i32 = jnp.int32
+    if sc.kind == "train":
+        if cfg.embed_inputs:
+            return {"embeds": jax.ShapeDtypeStruct((B, S, cfg.d_model),
+                                                   jnp.bfloat16),
+                    "labels": jax.ShapeDtypeStruct((B, S), i32)}
+        return {"tokens": jax.ShapeDtypeStruct((B, S), i32),
+                "labels": jax.ShapeDtypeStruct((B, S), i32)}
+    if sc.kind == "prefill":
+        if cfg.embed_inputs:
+            return {"embeds": jax.ShapeDtypeStruct((B, S, cfg.d_model),
+                                                   jnp.bfloat16)}
+        return {"tokens": jax.ShapeDtypeStruct((B, S), i32)}
+    # decode: one new token against an S-long cache
+    return {"tokens": jax.ShapeDtypeStruct((B, 1), i32),
+            "cache": tf.init_cache(cfg, B, S, dtype=jnp.dtype(cfg.dtype),
+                                   abstract=True),
+            "pos": jax.ShapeDtypeStruct((), i32)}
+
+
+# ----------------------------------------------------------- cell builder
+
+
+def _strip_dp(spec):
+    """Remove data-parallel axes from a PartitionSpec (serving params are
+    TP-only: FSDP weight shards force per-step all-gathers at inference)."""
+    P = jax.sharding.PartitionSpec
+
+    def clean(d):
+        if d is None or isinstance(d, str):
+            return None if d in ("data", "pod") else d
+        t = tuple(a for a in d if a not in ("data", "pod"))
+        return t if t else None
+
+    return P(*(clean(d) for d in spec))
+
+
+def build_cell(arch: str, shape_name: str, mesh, *, n_layers=None,
+               microbatch=None, scan_layers=None, opt: int = 0):
+    """Returns (jitted_fn, abstract_args tuple) ready to .lower().
+
+    ``n_layers``/``microbatch`` override the config — used by the roofline
+    probes that recover true per-unit/per-microbatch HLO costs from
+    scan-hidden bodies (XLA cost analysis counts loop bodies once).
+    """
+    P = jax.sharding.PartitionSpec
+    if arch == EDM_ARCH:
+        from repro.distributed.sharded_ccm import ccm_step
+        p = EDM_SHAPES[shape_name]
+        X = input_specs(arch, shape_name)["X"]
+        lib_axes = ("pod", "data") if "pod" in mesh.axis_names else ("data",)
+
+        def step(X):
+            return ccm_step(X, E=p["E"], tau=p["tau"], mesh=mesh,
+                            lib_axes=lib_axes, tgt_axes=("model",),
+                            impl="ref")
+
+        fn = jax.jit(step, in_shardings=shd.to_shardings(
+            mesh, P(lib_axes, None)))
+        return fn, (X,)
+
+    cfg = get_config(arch)
+    if n_layers is not None or scan_layers is not None:
+        import dataclasses
+        cfg = dataclasses.replace(
+            cfg,
+            n_layers=cfg.n_layers if n_layers is None else n_layers,
+            scan_layers=(cfg.scan_layers if scan_layers is None
+                         else scan_layers))
+    sc = SHAPES[shape_name]
+    specs = input_specs(arch, shape_name, multi_pod="pod" in mesh.axis_names)
+
+    if sc.kind == "train":
+        # Gradient accumulation (microbatch 8) is the production baseline:
+        # it bounds per-unit activation carries to ~2 GB/device (see
+        # EXPERIMENTS.md §Perf iteration log).
+        tcfg = TrainConfig(
+            microbatch=(microbatch if microbatch is not None else
+                        int(os.environ.get("DRYRUN_MICROBATCH", "8"))),
+            optimizer=("adamw8bit"
+                       if arch == "llama4-maverick-400b-a17b" else "adamw"))
+        dp = dp_axes(mesh)
+
+        def constrain(mb):
+            def leaf(x):
+                dims = [dp if x.shape[0] % _axsize(mesh, dp) == 0 else None]
+                dims += [None] * (x.ndim - 1)
+                return jax.lax.with_sharding_constraint(
+                    x, jax.sharding.NamedSharding(mesh, P(*dims)))
+            return jax.tree.map(leaf, mb)
+
+        # grad-carry constraint: pin ONLY the MoE expert banks to their
+        # parameter sharding (GSPMD replicates those accumulators —
+        # 64 GB/device at maverick; constraining everything instead
+        # fights its layout choices and reshards every scan step).
+        def _expert_spec(path, leaf):
+            names = [q.key for q in path if hasattr(q, "key")]
+            core = leaf.ndim - (1 if "units" in names else 0)
+            if "mlp" in names and core == 3 and names[-1].startswith("w_"):
+                return jax.sharding.NamedSharding(
+                    mesh, shd.param_spec(path, leaf, cfg, mesh))
+            return None
+
+        gshard = jax.tree_util.tree_map_with_path(
+            _expert_spec, tf.abstract_params(cfg))
+
+        def grad_constrain(grads):
+            return jax.tree.map(
+                lambda g, s: g if s is None
+                else jax.lax.with_sharding_constraint(g, s),
+                grads, gshard,
+                is_leaf=lambda v: v is None or hasattr(v, "shape"))
+
+        init_state, train_step, abstract_state = make_train_step(
+            cfg, tcfg, batch_constraint=constrain,
+            grad_constraint=grad_constrain)
+        state = abstract_state()
+        state_sh = shd.to_shardings(mesh, shd.state_specs(cfg, mesh, state))
+        batch_sh = shd.to_shardings(mesh, shd.batch_specs(cfg, mesh, specs))
+        # donate the train state: production steps update in place —
+        # without donation memory_analysis double-counts params+moments.
+        fn = jax.jit(train_step, in_shardings=(state_sh, batch_sh),
+                     out_shardings=(state_sh, None), donate_argnums=(0,))
+        return fn, (state, specs)
+
+    params = tf.abstract_params(cfg)
+    pspecs = jax.tree_util.tree_map_with_path(
+        lambda path, leaf: shd.param_spec(path, leaf, cfg, mesh), params)
+    if opt >= 1:  # §Perf iteration: TP-only serving params
+        pspecs = jax.tree.map(_strip_dp, pspecs,
+                              is_leaf=lambda v: isinstance(
+                                  v, jax.sharding.PartitionSpec))
+    if opt >= 3:
+        # §Perf iteration (prefill): replicate the small KV projections so
+        # every model shard computes full K/V locally — 16× redundant
+        # ~8 MB matmuls instead of ~70 GB/device of kv-head all-gathers
+        # (GQA kv heads < model shards cannot be head-sharded).
+        def repl_kv(path, spec):
+            names = [q.key for q in path if hasattr(q, "key")]
+            if len(names) >= 2 and names[-2] in ("wk", "wv"):
+                return jax.sharding.PartitionSpec(
+                    *([None] * len(spec)))
+            return spec
+        pspecs = jax.tree_util.tree_map_with_path(
+            repl_kv, pspecs,
+            is_leaf=lambda v: isinstance(v, jax.sharding.PartitionSpec))
+    params_sh = shd.to_shardings(mesh, pspecs)
+
+    if sc.kind == "prefill":
+        if cfg.family == "audio":  # encoder: "prefill" = full forward
+            def step(params, batch):
+                logits, _ = tf.forward_train(params, cfg, batch)
+                return logits
+        else:
+            def step(params, batch):
+                logits, caches = tf.prefill(params, cfg, batch)
+                return logits, caches
+        batch_sh = shd.to_shardings(mesh, shd.batch_specs(cfg, mesh, specs))
+        fn = jax.jit(step, in_shardings=(params_sh, batch_sh))
+        return fn, (params, specs)
+
+    # decode
+    from repro.models.meshctx import set_seqpar_decode
+    set_seqpar_decode(opt >= 2)  # §Perf iteration: seq-parallel KV decode
+    cache = tf.init_cache(cfg, SHAPES[shape_name].global_batch,
+                          SHAPES[shape_name].seq_len,
+                          dtype=jnp.dtype(cfg.dtype), abstract=True)
+    cache_sh = shd.to_shardings(mesh, shd.cache_specs(cfg, mesh, cache))
+    tok_sh = shd.to_shardings(
+        mesh, shd.batch_specs(cfg, mesh, {"tokens": specs["tokens"]}))
+
+    def step(params, tokens, cache, pos):
+        return tf.decode_step(params, cfg, tokens, cache, pos)
+
+    fn = jax.jit(
+        step,
+        in_shardings=(params_sh, tok_sh["tokens"], cache_sh, None),
+        out_shardings=(None, cache_sh),
+        donate_argnums=(2,),  # decode updates the cache in place
+    )
+    return fn, (params, specs["tokens"], cache, specs["pos"])
+
+
+# ------------------------------------------------------ analysis helpers
+
+_DTYPE_BYTES = {
+    "f64": 8, "s64": 8, "u64": 8, "c64": 8,
+    "f32": 4, "s32": 4, "u32": 4,
+    "bf16": 2, "f16": 2, "s16": 2, "u16": 2,
+    "f8e4m3fn": 1, "f8e5m2": 1, "s8": 1, "u8": 1, "pred": 1,
+}
+
+_COLL_OPS = ("all-reduce", "all-gather", "reduce-scatter", "all-to-all",
+             "collective-permute")
+_SHAPE_RE = re.compile(r"([a-z0-9]+)\[([0-9,]*)\]")
+
+
+def _shape_bytes(type_str: str) -> int:
+    total = 0
+    for dt, dims in _SHAPE_RE.findall(type_str):
+        if dt not in _DTYPE_BYTES:
+            continue
+        n = 1
+        for d in dims.split(","):
+            if d:
+                n *= int(d)
+        total += n * _DTYPE_BYTES[dt]
+    return total
+
+
+def collective_bytes(hlo_text: str) -> dict:
+    """Per-device bytes by collective kind, from partitioned HLO text.
+    Counts each instruction's result-shape bytes (the payload landing on
+    each chip); 'start' variants counted once ('done' carries no type)."""
+    out = {k: 0 for k in _COLL_OPS}
+    counts = {k: 0 for k in _COLL_OPS}
+    for line in hlo_text.splitlines():
+        m = re.search(r"=\s*(.+?)\s+(" + "|".join(_COLL_OPS) + r")(-start)?\(",
+                      line)
+        if not m:
+            continue
+        kind = m.group(2)
+        out[kind] += _shape_bytes(m.group(1))
+        counts[kind] += 1
+    out_total = sum(out.values())
+    return {"bytes_by_kind": out, "counts": counts, "total": out_total}
+
+
+def analyze(compiled, lowered) -> dict:
+    res = {}
+    try:
+        cost = compiled.cost_analysis()
+        if isinstance(cost, (list, tuple)):
+            cost = cost[0]
+        res["cost"] = {k: float(v) for k, v in cost.items()
+                       if isinstance(v, (int, float)) and (
+                           "flops" in k or "bytes" in k or "utilization" in k)}
+    except Exception as e:  # pragma: no cover
+        res["cost_error"] = repr(e)
+    try:
+        mem = compiled.memory_analysis()
+        res["memory"] = {
+            a: int(getattr(mem, a))
+            for a in ("argument_size_in_bytes", "output_size_in_bytes",
+                      "temp_size_in_bytes", "generated_code_size_in_bytes",
+                      "alias_size_in_bytes")
+            if hasattr(mem, a)
+        }
+    except Exception as e:  # pragma: no cover
+        res["memory_error"] = repr(e)
+    try:
+        text = compiled.as_text()
+    except Exception:
+        text = lowered.as_text()
+    res["collectives"] = collective_bytes(text)
+    res["hlo_chars"] = len(text)
+    return res
+
+
+# ---------------------------------------------------------------- driver
+
+
+def run_cell(arch: str, shape_name: str, mesh_kind: str,
+             opt: int = 0) -> dict:
+    multi = mesh_kind == "multi"
+    mesh = make_production_mesh(multi_pod=multi)
+    set_mesh(mesh)  # activation-sharding rules resolve against this mesh
+    rec = {"arch": arch, "shape": shape_name, "mesh": mesh_kind,
+           "devices": mesh.devices.size, "status": "ok", "opt": opt}
+    t0 = time.time()
+    try:
+        fn, args = build_cell(arch, shape_name, mesh, opt=opt)
+        lowered = fn.lower(*args)
+        rec["lower_s"] = round(time.time() - t0, 2)
+        t1 = time.time()
+        compiled = lowered.compile()
+        rec["compile_s"] = round(time.time() - t1, 2)
+        rec.update(analyze(compiled, lowered))
+    except Exception as e:
+        rec["status"] = "error"
+        rec["error"] = f"{type(e).__name__}: {e}"
+        rec["traceback"] = traceback.format_exc()[-3000:]
+    rec["total_s"] = round(time.time() - t0, 2)
+    return rec
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default=None)
+    ap.add_argument("--shape", default=None)
+    ap.add_argument("--mesh", default="single", choices=["single", "multi",
+                                                         "both"])
+    ap.add_argument("--all", action="store_true")
+    ap.add_argument("--out", default="experiments/dryrun")
+    ap.add_argument("--opt", type=int, default=0,
+                    help="perf-iteration level (1: TP-only serving params, "
+                         "2: + sequence-parallel KV decode)")
+    args = ap.parse_args()
+
+    os.makedirs(args.out, exist_ok=True)
+    meshes = ["single", "multi"] if args.mesh == "both" else [args.mesh]
+    if args.all:
+        todo = [(a, s) for a in ARCHS for s in cells(a)]
+        todo += [(EDM_ARCH, s) for s in EDM_SHAPES]
+    else:
+        assert args.arch and args.shape, "--arch/--shape or --all"
+        todo = [(args.arch, args.shape)]
+
+    for arch, shape_name in todo:
+        for mesh_kind in meshes:
+            suffix = f"__opt{args.opt}" if args.opt else ""
+            name = f"{arch}__{shape_name}__{mesh_kind}{suffix}"
+            path = os.path.join(args.out, name + ".json")
+            rec = run_cell(arch, shape_name, mesh_kind, opt=args.opt)
+            with open(path, "w") as f:
+                json.dump(rec, f, indent=1)
+            cost = rec.get("cost", {})
+            print(f"[dryrun] {name}: {rec['status']} "
+                  f"lower={rec.get('lower_s')}s compile={rec.get('compile_s')}s "
+                  f"flops={cost.get('flops', 0):.3e} "
+                  f"coll={rec.get('collectives', {}).get('total', 0):.3e}B",
+                  flush=True)
+            if rec["status"] != "ok":
+                print(rec["error"], flush=True)
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,36 @@
+"""Production meshes. Functions only — importing this module must never
+touch jax device state (dry-runs set device-count env vars first)."""
+
+from __future__ import annotations
+
+import jax
+
+
+def make_production_mesh(*, multi_pod: bool = False) -> jax.sharding.Mesh:
+    """Single pod: (16, 16) over ("data", "model") — 256 chips (v5e pod).
+    Multi-pod: (2, 16, 16) over ("pod", "data", "model") — 512 chips."""
+    shape = (2, 16, 16) if multi_pod else (16, 16)
+    axes = ("pod", "data", "model") if multi_pod else ("data", "model")
+    return jax.make_mesh(
+        shape, axes, axis_types=(jax.sharding.AxisType.Auto,) * len(axes))
+
+
+def dp_axes(mesh: jax.sharding.Mesh):
+    """The data-parallel axes (pod folds into data on multi-pod meshes)."""
+    return ("pod", "data") if "pod" in mesh.axis_names else ("data",)
+
+
+def axis_size(mesh: jax.sharding.Mesh, axes) -> int:
+    if isinstance(axes, str):
+        axes = (axes,)
+    n = 1
+    for a in axes:
+        n *= mesh.shape[a]
+    return n
+
+
+def make_test_mesh(shape=(2, 2), axes=("data", "model")) -> jax.sharding.Mesh:
+    """Small mesh for CPU multi-device tests (subprocess with forced
+    host device count)."""
+    return jax.make_mesh(
+        shape, axes, axis_types=(jax.sharding.AxisType.Auto,) * len(axes))

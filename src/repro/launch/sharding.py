@@ -1,0 +1,188 @@
+"""Sharding rules: parameter / optimizer / batch / cache PartitionSpecs.
+
+Strategy (DESIGN.md §4):
+  * TP over "model": attention head projections (flattened head dim),
+    MLP hidden, vocab, MoE experts, SSM inner dims.
+  * FSDP over "data" (+"pod"): the d_model axis of weight matrices — the
+    optimizer state shards with its parameter, giving ZeRO-3 behaviour
+    through GSPMD's per-scan-step gathering.
+  * Activations: batch over ("pod","data"); decode KV caches shard the
+    *sequence* axis over "model" (sequence-parallel KV decode) so
+    long-context cells fit.
+  * Anything non-divisible falls back to replication on that dim (e.g.
+    qwen's 20 heads, hubert's 504-class head) — recorded, visible in the
+    roofline as extra bytes, and a hillclimb lever.
+"""
+
+from __future__ import annotations
+
+import jax
+import numpy as np
+from jax.sharding import NamedSharding, PartitionSpec as P
+
+from repro.launch.mesh import axis_size, dp_axes
+
+
+def _div(n: int, mesh, axes) -> bool:
+    return axes is not None and n % axis_size(mesh, axes) == 0
+
+
+def _maybe(n, mesh, axes):
+    """axes if evenly divisible else None (replicate)."""
+    if axes is None:
+        return None
+    return axes if _div(n, mesh, axes) else None
+
+
+def param_spec(path, leaf, cfg, mesh) -> P:
+    """PartitionSpec for one parameter leaf, keyed on its tree path."""
+    names = [p.key for p in path if hasattr(p, "key")]
+    shape = leaf.shape
+    dp = dp_axes(mesh)
+    scanned = "units" in names and cfg.scan_layers
+    lead = (None,) if scanned else ()
+    core = shape[1:] if scanned else shape
+
+    def spec(*dims):
+        return P(*(lead + dims))
+
+    name = names[-1] if names else ""
+    parent = names[-2] if len(names) >= 2 else ""
+
+    # ---- 1-D leaves: biases, norms, per-channel vectors
+    if len(core) == 0:
+        return P()
+    if len(core) == 1:
+        if name in ("g", "dt_bias", "conv_b", "D_skip", "b"):
+            return spec(_maybe(core[0], mesh, "model")
+                        if name in ("b", "conv_b", "D_skip") else None)
+        return spec(None)
+
+    # ---- embeddings / lm head: (vocab, d_model). d_model deliberately
+    # NOT FSDP-sharded: a dp-sharded contraction dim in unembed forces
+    # GSPMD to all-gather the *batch* (measured 4.2 GB/device logits
+    # replication); a (V/16, D) shard is ≤130 MB anyway.
+    if name == "table":
+        return spec(_maybe(core[0], mesh, "model"), None)
+
+    # ---- MoE expert banks: (E, D, F) / (E, F, D) — experts over model
+    if parent in ("mlp",) and len(core) == 3:
+        e = _maybe(core[0], mesh, "model")
+        return spec(e, _maybe(core[1], mesh, dp), None)
+    if name == "router":
+        return spec(_maybe(core[0], mesh, dp), None)
+
+    # ---- sLSTM recurrent blocks: (H, dh, dh)
+    if name == "r" and len(core) == 3:
+        return spec(None, None, _maybe(core[2], mesh, "model"))
+
+    # ---- projections INTO the sharded inner dim: (d_model, X)
+    if parent in ("wq", "wk", "wv", "w_gate", "w_up", "up", "in_proj",
+                  "w_dkv", "w_kr", "wq_full", "ffn_gate", "ffn_up") or (
+            name == "w" and parent in ("wi", "wf")):
+        return spec(_maybe(core[0], mesh, dp), _maybe(core[1], mesh, "model"))
+
+    # ---- projections OUT of the sharded inner dim: (X, d_model)
+    if parent in ("wo", "w_down", "down", "out_proj", "ffn_down",
+                  "w_uk", "w_uv", "dt_proj"):
+        return spec(_maybe(core[0], mesh, "model"), _maybe(core[1], mesh, dp))
+
+    # ---- mamba misc: conv (K, d_in), x_proj (d_in, R+2N), A_log (d_in, N)
+    if parent == "mix" and name == "conv_w":
+        return spec(None, _maybe(core[1], mesh, "model"))
+    if parent == "x_proj":
+        return spec(_maybe(core[0], mesh, "model"), None)
+    if name == "A_log":
+        return spec(_maybe(core[0], mesh, "model"), None)
+
+    # ---- generic fallback: model on the last divisible dim, dp on another
+    dims = [None] * len(core)
+    for i in reversed(range(len(core))):
+        if _div(core[i], mesh, "model"):
+            dims[i] = "model"
+            break
+    for i in range(len(core)):
+        if dims[i] is None and _div(core[i], mesh, dp):
+            dims[i] = dp
+            break
+    return spec(*dims)
+
+
+def _opt_moment_spec(pspec, leaf_shape):
+    """Adam moments share their parameter's spec (fp32 path)."""
+    return pspec
+
+
+def state_specs(cfg, mesh, abstract_state):
+    """PartitionSpec tree matching a train state from make_train_step."""
+    dp = dp_axes(mesh)
+
+    def for_params(tree):
+        return jax.tree_util.tree_map_with_path(
+            lambda path, leaf: param_spec(path, leaf, cfg, mesh), tree)
+
+    specs = {"params": for_params(abstract_state["params"])}
+
+    def moment(path, leaf):
+        names = [p.key for p in path if hasattr(p, "key")]
+        if names and names[-1] in ("q", "scale"):
+            # last-axis 8-bit codec: q/scale inherit the parameter's spec
+            return param_spec(path[:-1], leaf, cfg, mesh)
+        return param_spec(path, leaf, cfg, mesh)
+
+    for key in ("m", "v"):
+        specs_mv = jax.tree_util.tree_map_with_path(
+            moment, abstract_state["opt"][key])
+        specs.setdefault("opt", {})[key] = specs_mv
+    specs["opt"]["step"] = P()
+    if "ebuf" in abstract_state:
+        specs["ebuf"] = for_params(abstract_state["ebuf"])
+    return specs
+
+
+def batch_specs(cfg, mesh, batch):
+    dp = dp_axes(mesh)
+
+    def leaf(path, x):
+        b = x.shape[0]
+        dims = [_maybe(b, mesh, dp)] + [None] * (x.ndim - 1)
+        return P(*dims)
+
+    return jax.tree_util.tree_map_with_path(leaf, batch)
+
+
+def cache_specs(cfg, mesh, cache):
+    """Decode caches: batch over dp where divisible; attention/MLA cache
+    sequence axis over "model" (sequence-parallel KV)."""
+    dp = dp_axes(mesh)
+
+    def leaf(path, x):
+        names = [p.key for p in path if hasattr(p, "key")]
+        name = names[-1] if names else ""
+        # caches are (units, B, ...) when scanned, (B, ...) per-unit lists
+        # when unrolled (roofline probes)
+        stacked = not any(isinstance(q, jax.tree_util.SequenceKey)
+                          for q in path)
+        o = 1 if stacked else 0
+        dims = [None] * x.ndim
+        if x.ndim >= o + 1:
+            dims[o] = _maybe(x.shape[o], mesh, dp)  # batch
+        if name in ("k", "v", "c_kv", "k_rope") and x.ndim >= o + 2:
+            dims[o + 1] = _maybe(x.shape[o + 1], mesh, "model")  # sequence
+        elif name == "ssm" and x.ndim >= o + 2:
+            dims[o + 1] = _maybe(x.shape[o + 1], mesh, "model")  # d_inner
+        elif name == "conv" and x.ndim >= o + 3:
+            dims[o + 2] = _maybe(x.shape[o + 2], mesh, "model")
+        elif name == "C" and x.ndim >= o + 3:
+            dims[o + 2] = _maybe(x.shape[o + 2], mesh, "model")  # mLSTM dk
+        elif name in ("h", "c", "n", "m") and x.ndim == o + 2:
+            dims[o + 1] = _maybe(x.shape[o + 1], mesh, "model")  # sLSTM D
+        return P(*dims)
+
+    return jax.tree_util.tree_map_with_path(leaf, cache)
+
+
+def to_shardings(mesh, spec_tree):
+    return jax.tree.map(
+        lambda s: NamedSharding(mesh, s), spec_tree,
+        is_leaf=lambda x: isinstance(x, P))

@@ -1,0 +1,21 @@
+"""LM substrate: functional model definitions for the architecture zoo."""
+
+from repro.models.transformer import (
+    abstract_params,
+    decode_step,
+    forward_train,
+    init_cache,
+    init_params,
+    loss_fn,
+    prefill,
+)
+
+__all__ = [
+    "abstract_params",
+    "decode_step",
+    "forward_train",
+    "init_cache",
+    "init_params",
+    "loss_fn",
+    "prefill",
+]

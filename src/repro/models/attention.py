@@ -1,0 +1,378 @@
+"""Attention: GQA (full / chunked-prefill / decode) and MLA (DeepSeek).
+
+Forms:
+  * ``full``   — S×S masked attention, used for train (S ≤ attn_full_max).
+  * ``chunked``— online-softmax over KV chunks for long prefill; memory is
+    O(chunk_q × S) instead of O(S²). The baseline masks out-of-range
+    chunks (costing ~2× attention FLOPs in HLO — an explicitly tracked
+    roofline term); the ``tri`` variant skips fully-masked chunks with a
+    dynamic-bound loop (forward-only, used for inference prefill).
+  * ``decode`` — one new token against a (B, S, Hkv, dh) cache written at
+    position ``pos``. The cache layout puts the sequence axis second so it
+    can be sharded over the "model" mesh axis for long contexts
+    (sequence-parallel KV decode; GSPMD inserts the flash-style combine).
+
+MLA (Multi-head Latent Attention) caches only the 512-dim latent + shared
+rope key; decode uses the *absorbed* form (W_uk folded into the query,
+W_uv deferred past the probability average), which is the whole point of
+MLA's small-cache/small-FLOPs decode.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.models.layers import apply_rope, dense, dense_init
+
+NEG_INF = -1e30
+
+
+# ----------------------------------------------------------------- GQA
+
+
+def gqa_init(key, cfg, dtype):
+    k0, k1, k2, k3 = jax.random.split(key, 4)
+    D, Hq, Hkv, dh = cfg.d_model, cfg.n_heads, cfg.n_kv_heads, cfg.d_head
+    return {
+        "wq": dense_init(k0, D, Hq * dh, dtype, bias=cfg.qkv_bias),
+        "wk": dense_init(k1, D, Hkv * dh, dtype, bias=cfg.qkv_bias),
+        "wv": dense_init(k2, D, Hkv * dh, dtype, bias=cfg.qkv_bias),
+        "wo": dense_init(k3, Hq * dh, D, dtype),
+    }
+
+
+def _heads(cfg, p, x, positions):
+    B, S, _ = x.shape
+    Hq, Hkv, dh = cfg.n_heads, cfg.n_kv_heads, cfg.d_head
+    G = Hq // Hkv
+    q = dense(p["wq"], x).reshape(B, S, Hq, dh)
+    k = dense(p["wk"], x).reshape(B, S, Hkv, dh)
+    v = dense(p["wv"], x).reshape(B, S, Hkv, dh)
+    q = apply_rope(q, positions, cfg.rope_theta)
+    k = apply_rope(k, positions, cfg.rope_theta)
+    return q.reshape(B, S, Hkv, G, dh), k, v
+
+
+def _sdpa(q, k, v, mask, scale):
+    """q (B,Sq,H,G,d), k/v (B,Sk,H,d), mask (Sq,Sk) or None → (B,Sq,H,G,d)."""
+    s = jnp.einsum("bqhgd,bkhd->bhgqk", q, k,
+                   preferred_element_type=jnp.float32) * scale
+    if mask is not None:
+        s = jnp.where(mask, s, NEG_INF)
+    a = jax.nn.softmax(s, axis=-1).astype(v.dtype)
+    return jnp.einsum("bhgqk,bkhd->bqhgd", a, v)
+
+
+def gqa_full(p, cfg, x, positions):
+    """Training attention: full masked S×S for short sequences, chunked
+    online-softmax (flash-at-HLO-level, rematerialized backward) beyond
+    attn_full_max — the S×S score tensor would be O(100 GB)/device at 4k
+    with production batch sizes."""
+    B, S, D = x.shape
+    q, k, v = _heads(cfg, p, x, positions)
+    cq = min(cfg.attn_chunk_q, S)
+    if S <= cfg.attn_full_max or S % cq != 0:
+        mask = jnp.tril(jnp.ones((S, S), bool)) if cfg.causal else None
+        out = _sdpa(q, k, v, mask,
+                    1.0 / jnp.sqrt(cfg.d_head).astype(jnp.float32))
+    else:
+        chunked = jax.checkpoint(
+            functools.partial(_chunked_causal, cq=cq,
+                              scale=1.0 / float(np.sqrt(cfg.d_head)),
+                              causal=cfg.causal))
+        out = chunked(q, k, v)
+    return dense(p["wo"], out.reshape(B, S, -1).astype(x.dtype))
+
+
+def gqa_prefill(p, cfg, x, positions):
+    """Chunked prefill. Returns (out, cache {k, v})."""
+    B, S, D = x.shape
+    q, k, v = _heads(cfg, p, x, positions)
+    cq = min(cfg.attn_chunk_q, S)
+    if S <= cfg.attn_full_max or S % cq != 0:
+        mask = jnp.tril(jnp.ones((S, S), bool)) if cfg.causal else None
+        out = _sdpa(q, k, v, mask, 1.0 / jnp.sqrt(cfg.d_head))
+    else:
+        out = _chunked_causal(q, k, v, cq=cq,
+                              scale=1.0 / float(np.sqrt(cfg.d_head)),
+                              causal=cfg.causal)
+    out = dense(p["wo"], out.reshape(B, S, -1).astype(x.dtype))
+    return out, {"k": k, "v": v}
+
+
+def _chunked_causal(q, k, v, *, cq, scale, causal=True):
+    """Online-softmax over KV chunks; masked variant (static trip counts).
+
+    q: (B, S, H, G, d) → scan over S/cq query chunks; each accumulates
+    (m, l, o) across S/cq key chunks, with causal masking if requested
+    (out-of-range chunks cost ~2× attention FLOPs in HLO — an explicitly
+    tracked roofline term; see EXPERIMENTS.md §Perf).
+    """
+    B, S, H, G, d = q.shape
+    dv = v.shape[-1]  # may differ from the QK dim (MLA)
+    nq = S // cq
+    ck = cq  # square chunks keep the mask logic trivial
+    qc = q.reshape(B, nq, cq, H, G, d).transpose(1, 0, 2, 3, 4, 5)
+    kc = k.reshape(B, nq, ck, H, d).transpose(1, 0, 2, 3, 4)
+    vc = v.reshape(B, nq, ck, H, dv).transpose(1, 0, 2, 3, 4)
+    base = jnp.tril(jnp.ones((cq, ck), bool))
+
+    def q_step(_, qi_i):
+        qi, i = qi_i
+
+        # Rematerialized: without checkpoint, scan-backward stores the
+        # (cq, ck) probability block per step — S² memory all over again.
+        # With it, the backward recomputes s/p from (q, k, v) chunks —
+        # the classic flash-attention backward.
+        @functools.partial(jax.checkpoint,
+                           policy=jax.checkpoint_policies.nothing_saveable)
+        def kv_step(carry, kv_j):
+            m, l, o = carry
+            kj, vj, j = kv_j
+            s = jnp.einsum("bqhgd,bkhd->bhgqk", qi, kj,
+                           preferred_element_type=jnp.float32) * scale
+            if causal:
+                # j < i: fully visible; j == i: diagonal; j > i: masked.
+                mask = jnp.where(j < i, True, base) & (j <= i)
+                s = jnp.where(mask, s, NEG_INF)
+            m_new = jnp.maximum(m, s.max(-1))
+            p = jnp.exp(s - m_new[..., None])
+            corr = jnp.exp(m - m_new)
+            l_new = l * corr + p.sum(-1)
+            o_new = o * corr[..., None] + jnp.einsum(
+                "bhgqk,bkhd->bhgqd", p, vj.astype(jnp.float32))
+            return (m_new, l_new, o_new), None
+
+        m0 = jnp.full((B, H, G, cq), NEG_INF, jnp.float32)
+        l0 = jnp.zeros((B, H, G, cq), jnp.float32)
+        o0 = jnp.zeros((B, H, G, cq, dv), jnp.float32)
+        (m, l, o), _ = jax.lax.scan(
+            kv_step, (m0, l0, o0), (kc, vc, jnp.arange(nq)))
+        out = o / jnp.maximum(l, 1e-30)[..., None]
+        return None, out.transpose(0, 3, 1, 2, 4)  # (B, cq, H, G, dv)
+
+    _, outs = jax.lax.scan(q_step, None, (qc, jnp.arange(nq)))
+    return outs.transpose(1, 0, 2, 3, 4, 5).reshape(B, S, H, G, dv)
+
+
+def gqa_decode(p, cfg, x, cache, pos):
+    """One-token decode against a seq-major cache written at ``pos``.
+
+    x: (B, 1, D); cache: {k, v} of (B, S_max, Hkv, dh); pos: () int32.
+    """
+    B, _, D = x.shape
+    Hq, Hkv, dh = cfg.n_heads, cfg.n_kv_heads, cfg.d_head
+    G = Hq // Hkv
+    S_max = cache["k"].shape[1]
+    positions = jnp.full((B, 1), pos, jnp.int32)
+    q, k, v = _heads(cfg, p, x, positions)
+    ck = jax.lax.dynamic_update_slice(cache["k"], k.astype(cache["k"].dtype),
+                                      (0, pos, 0, 0))
+    cv = jax.lax.dynamic_update_slice(cache["v"], v.astype(cache["v"].dtype),
+                                      (0, pos, 0, 0))
+    idx = jnp.arange(S_max)
+    mask = (idx <= pos)[None, :]  # (1, S_max)
+    out = _sdpa(q, ck, cv, mask, 1.0 / jnp.sqrt(dh))
+    out = dense(p["wo"], out.reshape(B, 1, -1).astype(x.dtype))
+    return out, {"k": ck, "v": cv}
+
+
+def gqa_cache_shape(cfg, batch, s_max, dtype):
+    shp = (batch, s_max, cfg.n_kv_heads, cfg.d_head)
+    return {"k": jax.ShapeDtypeStruct(shp, dtype),
+            "v": jax.ShapeDtypeStruct(shp, dtype)}
+
+
+# ----------------------------------------------------------------- MLA
+
+
+def mla_init(key, cfg, dtype):
+    D, H = cfg.d_model, cfg.n_heads
+    r, dn, dr, dv = (cfg.kv_lora_rank, cfg.qk_nope_dim, cfg.qk_rope_dim,
+                     cfg.v_head_dim)
+    ks = jax.random.split(key, 6)
+    return {
+        "wq": dense_init(ks[0], D, H * (dn + dr), dtype),
+        "w_dkv": dense_init(ks[1], D, r, dtype),
+        "w_kr": dense_init(ks[2], D, dr, dtype),
+        "w_uk": dense_init(ks[3], r, H * dn, dtype),
+        "w_uv": dense_init(ks[4], r, H * dv, dtype),
+        "wo": dense_init(ks[5], H * dv, D, dtype),
+    }
+
+
+def _mla_q(p, cfg, x, positions):
+    B, S, _ = x.shape
+    H, dn, dr = cfg.n_heads, cfg.qk_nope_dim, cfg.qk_rope_dim
+    q = dense(p["wq"], x).reshape(B, S, H, dn + dr)
+    q_nope, q_rope = q[..., :dn], q[..., dn:]
+    q_rope = apply_rope(q_rope, positions, cfg.rope_theta)
+    return q_nope, q_rope
+
+
+def mla_full(p, cfg, x, positions, *, return_cache=False):
+    """Standard (non-absorbed) MLA — train/prefill path."""
+    B, S, _ = x.shape
+    H, dn, dr, dv = (cfg.n_heads, cfg.qk_nope_dim, cfg.qk_rope_dim,
+                     cfg.v_head_dim)
+    q_nope, q_rope = _mla_q(p, cfg, x, positions)
+    c_kv = dense(p["w_dkv"], x)  # (B, S, r) — this is the whole KV cache
+    k_rope = apply_rope(dense(p["w_kr"], x)[:, :, None, :], positions,
+                        cfg.rope_theta)  # (B, S, 1, dr) shared
+    k_nope = dense(p["w_uk"], c_kv).reshape(B, S, H, dn)
+    v = dense(p["w_uv"], c_kv).reshape(B, S, H, dv)
+    scale = 1.0 / float(np.sqrt(dn + dr))
+    cq = min(cfg.attn_chunk_q, S)
+    if S > cfg.attn_full_max and S % cq == 0:
+        # chunked online-softmax: the S×S score tensor is ~2 GB/device
+        # per layer at 4k — same flash-at-HLO treatment as GQA.
+        q_full = jnp.concatenate([q_nope, q_rope], axis=-1)[:, :, :, None, :]
+        k_full = jnp.concatenate(
+            [k_nope, jnp.broadcast_to(k_rope, (B, S, H, dr))], axis=-1)
+        q_full = q_full.reshape(B, S, H, 1, dn + dr)
+        chunked = jax.checkpoint(
+            functools.partial(_chunked_causal, cq=cq, scale=scale,
+                              causal=cfg.causal))
+        out = chunked(q_full, k_full, v).reshape(B, S, H * dv)
+    else:
+        s = (
+            jnp.einsum("bqhd,bkhd->bhqk", q_nope, k_nope,
+                       preferred_element_type=jnp.float32)
+            + jnp.einsum("bqhd,bkxd->bhqk", q_rope, k_rope,
+                         preferred_element_type=jnp.float32)
+        ) * scale
+        if cfg.causal:
+            s = jnp.where(jnp.tril(jnp.ones((S, S), bool)), s, NEG_INF)
+        a = jax.nn.softmax(s, axis=-1).astype(v.dtype)
+        out = jnp.einsum("bhqk,bkhd->bqhd", a, v).reshape(B, S, H * dv)
+    out = dense(p["wo"], out.astype(x.dtype))
+    if return_cache:
+        return out, {"c_kv": c_kv, "k_rope": k_rope[:, :, 0, :]}
+    return out
+
+
+def mla_decode(p, cfg, x, cache, pos):
+    """Absorbed-form decode: scores/values live in the r-dim latent space."""
+    B, _, _ = x.shape
+    H, dn, dr, dv, r = (cfg.n_heads, cfg.qk_nope_dim, cfg.qk_rope_dim,
+                        cfg.v_head_dim, cfg.kv_lora_rank)
+    S_max = cache["c_kv"].shape[1]
+    positions = jnp.full((B, 1), pos, jnp.int32)
+    q_nope, q_rope = _mla_q(p, cfg, x, positions)  # (B,1,H,dn),(B,1,H,dr)
+    c_new = dense(p["w_dkv"], x)  # (B, 1, r)
+    kr_new = apply_rope(dense(p["w_kr"], x)[:, :, None, :], positions,
+                        cfg.rope_theta)[:, :, 0, :]
+    c_kv = jax.lax.dynamic_update_slice(
+        cache["c_kv"], c_new.astype(cache["c_kv"].dtype), (0, pos, 0))
+    k_rope = jax.lax.dynamic_update_slice(
+        cache["k_rope"], kr_new.astype(cache["k_rope"].dtype), (0, pos, 0))
+    # absorb W_uk into the query: q̃ (B,1,H,r)
+    w_uk = p["w_uk"]["w"].reshape(r, H, dn)
+    q_lat = jnp.einsum("bqhd,rhd->bqhr", q_nope, w_uk)
+    s = (
+        jnp.einsum("bqhr,bkr->bhqk", q_lat.astype(jnp.float32),
+                   c_kv.astype(jnp.float32))
+        + jnp.einsum("bqhd,bkd->bhqk", q_rope.astype(jnp.float32),
+                     k_rope.astype(jnp.float32))
+    ) / jnp.sqrt(dn + dr)
+    mask = (jnp.arange(S_max) <= pos)[None, :]
+    s = jnp.where(mask, s, NEG_INF)
+    a = jax.nn.softmax(s, axis=-1)
+    o_lat = jnp.einsum("bhqk,bkr->bqhr", a, c_kv.astype(jnp.float32))
+    w_uv = p["w_uv"]["w"].reshape(r, H, dv)
+    out = jnp.einsum("bqhr,rhd->bqhd", o_lat, w_uv).reshape(B, 1, H * dv)
+    out = dense(p["wo"], out.astype(x.dtype))
+    return out, {"c_kv": c_kv, "k_rope": k_rope}
+
+
+def mla_cache_shape(cfg, batch, s_max, dtype):
+    return {
+        "c_kv": jax.ShapeDtypeStruct((batch, s_max, cfg.kv_lora_rank), dtype),
+        "k_rope": jax.ShapeDtypeStruct((batch, s_max, cfg.qk_rope_dim), dtype),
+    }
+
+
+# ------------------------------------------- sequence-parallel decode
+
+def gqa_decode_seqpar(p, cfg, x, cache, pos):
+    """Decode attention with the KV cache sequence axis sharded over the
+    "model" mesh axis (fully-manual shard_map, flash-style combine).
+
+    GSPMD's generic handling of the seq-sharded cache re-gathers it every
+    step (measured: ~83 GB/device/token at llama3 decode_32k). Here each
+    model shard owns S/16 cache positions: the new KV row is written only
+    by the owning shard (masked dynamic-update), every shard computes a
+    partial (m, l, o) over its local positions, and the exact softmax
+    recombines with one pmax + two psums of (B, H, G[, d]) — kilobytes
+    per step instead of gigabytes.
+    """
+    from repro.models.meshctx import get_mesh
+
+    mesh = get_mesh()
+    B, _, D = x.shape
+    Hq, Hkv, dh = cfg.n_heads, cfg.n_kv_heads, cfg.d_head
+    G = Hq // Hkv
+    S_max = cache["k"].shape[1]
+    n_model = mesh.shape["model"]
+    if S_max % n_model:
+        return gqa_decode(p, cfg, x, cache, pos)
+    S_loc = S_max // n_model
+    dp = tuple(a for a in ("pod", "data") if a in mesh.axis_names)
+    dp_size = 1
+    for a in dp:
+        dp_size *= mesh.shape[a]
+    bspec = dp if B % dp_size == 0 else None
+
+    positions = jnp.full((B, 1), pos, jnp.int32)
+    q, k, v = _heads(cfg, p, x, positions)  # (B,1,Hkv,G,dh),(B,1,Hkv,dh)×2
+    scale = 1.0 / float(np.sqrt(dh))
+    P = jax.sharding.PartitionSpec
+
+    def body(sid, q, kn, vn, ck, cv, pos):
+        sid = sid[0]
+        lpos = pos - sid * S_loc
+        in_range = (lpos >= 0) & (lpos < S_loc)
+        lclamp = jnp.clip(lpos, 0, S_loc - 1)
+        ck_w = jax.lax.dynamic_update_slice(
+            ck, kn.astype(ck.dtype), (0, lclamp, 0, 0))
+        cv_w = jax.lax.dynamic_update_slice(
+            cv, vn.astype(cv.dtype), (0, lclamp, 0, 0))
+        ck2 = jnp.where(in_range, ck_w, ck)
+        cv2 = jnp.where(in_range, cv_w, cv)
+        s = jnp.einsum("bqhgd,bkhd->bhgqk", q, ck2,
+                       preferred_element_type=jnp.float32) * scale
+        gidx = sid * S_loc + jnp.arange(S_loc)
+        s = jnp.where((gidx <= pos)[None, None, None, None, :], s, NEG_INF)
+        m = s.max(-1)  # (B,H,G,1)
+        pexp = jnp.exp(s - m[..., None])
+        l = pexp.sum(-1)
+        o = jnp.einsum("bhgqk,bkhd->bhgqd", pexp, cv2.astype(jnp.float32))
+        m_g = jax.lax.pmax(m, "model")
+        corr = jnp.exp(m - m_g)
+        l_g = jax.lax.psum(l * corr, "model")
+        o_g = jax.lax.psum(o * corr[..., None], "model")
+        out = o_g / jnp.maximum(l_g, 1e-30)[..., None]
+        return out, ck2, cv2
+
+    shard_ids = jnp.arange(n_model, dtype=jnp.int32)
+    out, ck, cv = jax.shard_map(
+        body, mesh=mesh,
+        in_specs=(P("model"),
+                  P(bspec, None, None, None, None),
+                  P(bspec, None, None, None),
+                  P(bspec, None, None, None),
+                  P(bspec, "model", None, None),
+                  P(bspec, "model", None, None),
+                  P()),
+        out_specs=(P(bspec, None, None, None, None),
+                   P(bspec, "model", None, None),
+                   P(bspec, "model", None, None)),
+        check_vma=False,
+    )(shard_ids, q, k, v, cache["k"], cache["v"], pos)
+    out = out.transpose(0, 3, 1, 2, 4).reshape(B, 1, Hq * dh)
+    out = dense(p["wo"], out.astype(x.dtype))
+    return out, {"k": ck, "v": cv}

@@ -1,0 +1,110 @@
+"""Shared neural layers: norms, rotary embeddings, MLPs, init helpers.
+
+Functional style: params are plain dicts of jnp arrays; every layer is a
+pure function ``f(params, x, ...)``. Initializers return shape/dtype trees
+that double as the abstract (ShapeDtypeStruct) description for dry-runs.
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+
+def _init(key, shape, scale, dtype):
+    return (scale * jax.random.truncated_normal(key, -2, 2, shape,
+                                                jnp.float32)).astype(dtype)
+
+
+def dense_init(key, d_in, d_out, dtype, *, bias=False, scale=None):
+    scale = (1.0 / np.sqrt(d_in)) if scale is None else scale
+    p = {"w": _init(key, (d_in, d_out), scale, dtype)}
+    if bias:
+        p["b"] = jnp.zeros((d_out,), dtype)
+    return p
+
+
+def dense(p, x):
+    y = x @ p["w"].astype(x.dtype)
+    if "b" in p:
+        y = y + p["b"].astype(x.dtype)
+    return y
+
+
+def rmsnorm_init(d, dtype):
+    return {"g": jnp.ones((d,), dtype)}
+
+
+def rmsnorm(p, x, eps=1e-5):
+    x32 = x.astype(jnp.float32)
+    rms = jax.lax.rsqrt(jnp.mean(x32 * x32, axis=-1, keepdims=True) + eps)
+    return (x32 * rms).astype(x.dtype) * p["g"].astype(x.dtype)
+
+
+def rope_frequencies(d_head: int, theta: float) -> jax.Array:
+    """Inverse frequencies for rotary embeddings, shape (d_head//2,)."""
+    return 1.0 / (
+        theta ** (jnp.arange(0, d_head, 2, dtype=jnp.float32) / d_head)
+    )
+
+
+def apply_rope(x: jax.Array, positions: jax.Array, theta: float) -> jax.Array:
+    """Rotary position embedding.
+
+    x: (..., S, n_heads, d_head); positions: broadcastable to (..., S).
+    """
+    d = x.shape[-1]
+    inv = rope_frequencies(d, theta)  # (d/2,)
+    ang = positions[..., None].astype(jnp.float32) * inv  # (..., S, d/2)
+    sin = jnp.sin(ang)[..., None, :]  # (..., S, 1, d/2)
+    cos = jnp.cos(ang)[..., None, :]
+    x1, x2 = jnp.split(x.astype(jnp.float32), 2, axis=-1)
+    out = jnp.concatenate([x1 * cos - x2 * sin, x1 * sin + x2 * cos], axis=-1)
+    return out.astype(x.dtype)
+
+
+def mlp_init(key, d_model, d_ff, kind, dtype):
+    k1, k2, k3 = jax.random.split(key, 3)
+    if kind == "swiglu":
+        return {
+            "w_gate": dense_init(k1, d_model, d_ff, dtype),
+            "w_up": dense_init(k2, d_model, d_ff, dtype),
+            "w_down": dense_init(k3, d_ff, d_model, dtype),
+        }
+    if kind in ("relu2", "gelu"):  # Nemotron-4 squared-ReLU / HuBERT GELU
+        return {
+            "w_up": dense_init(k1, d_model, d_ff, dtype),
+            "w_down": dense_init(k2, d_ff, d_model, dtype),
+        }
+    raise ValueError(f"unknown mlp kind {kind!r}")
+
+
+def mlp(p, x, kind):
+    if kind == "swiglu":
+        h = jax.nn.silu(dense(p["w_gate"], x)) * dense(p["w_up"], x)
+    elif kind == "relu2":
+        h = jnp.square(jax.nn.relu(dense(p["w_up"], x)))
+    elif kind == "gelu":
+        h = jax.nn.gelu(dense(p["w_up"], x))
+    else:
+        raise ValueError(kind)
+    return dense(p["w_down"], h)
+
+
+def embedding_init(key, vocab, d_model, dtype, scale: float = 1.0):
+    return {"table": _init(key, (vocab, d_model), scale, dtype)}
+
+
+def embed(p, tokens, dtype=None):
+    """Token embedding gather. Converting the table to the compute dtype
+    BEFORE the gather matters under SPMD: a vocab-sharded table lowers to
+    masked-gather + all-reduce of the (B, S, D) output, and the AR should
+    move bf16, not f32 (measured 2× collective bytes at prefill)."""
+    table = p["table"] if dtype is None else p["table"].astype(dtype)
+    return jnp.take(table, tokens, axis=0)
+
+
+def unembed(p, x):
+    """Project to vocab logits in float32 (loss numerics)."""
+    return x.astype(jnp.float32) @ p["table"].T.astype(jnp.float32)

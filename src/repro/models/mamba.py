@@ -1,0 +1,141 @@
+"""Mamba (S6) selective-state-space mixer — the Jamba hybrid's workhorse.
+
+Training uses a chunked sequential scan: the (B, d_inner, N) state is
+carried across chunks and each chunk body is rematerialized in the
+backward pass (jax.checkpoint), so activation memory is O(S/chunk · state)
+instead of O(S · state). Decode is a single-step state update with a
+rolling conv window — O(1) in context length, which is what makes the
+``long_500k`` cell runnable for hybrid/SSM archs (DESIGN.md §5).
+"""
+
+from __future__ import annotations
+
+import math
+
+import jax
+import jax.numpy as jnp
+
+from repro.models.layers import _init, dense, dense_init
+
+
+def mamba_init(key, cfg, dtype):
+    D = cfg.d_model
+    d_in = cfg.mamba_d_inner
+    N, R, K = cfg.mamba.d_state, cfg.mamba_dt_rank, cfg.mamba.d_conv
+    ks = jax.random.split(key, 6)
+    # dt bias: softplus⁻¹ of ~[1e-3, 1e-1] (standard Mamba init)
+    u = jax.random.uniform(ks[5], (d_in,), jnp.float32)
+    dt0 = jnp.exp(u * (math.log(0.1) - math.log(1e-3)) + math.log(1e-3))
+    return {
+        "in_proj": dense_init(ks[0], D, 2 * d_in, dtype),
+        "conv_w": _init(ks[1], (K, d_in), 1.0 / math.sqrt(K), dtype),
+        "conv_b": jnp.zeros((d_in,), dtype),
+        "x_proj": dense_init(ks[2], d_in, R + 2 * N, dtype),
+        "dt_proj": dense_init(ks[3], R, d_in, dtype),
+        "dt_bias": (dt0 + jnp.log(-jnp.expm1(-dt0))).astype(jnp.float32),
+        "A_log": jnp.log(jnp.tile(jnp.arange(1, N + 1, dtype=jnp.float32),
+                                  (d_in, 1))),
+        "D_skip": jnp.ones((d_in,), jnp.float32),
+        "out_proj": dense_init(ks[4], d_in, D, dtype),
+    }
+
+
+def _conv_causal(p, x):
+    """Depthwise causal conv over (B, S, d_in) with taps K (K small)."""
+    K = p["conv_w"].shape[0]
+    w = p["conv_w"].astype(x.dtype)
+    y = x * w[K - 1]
+    for i in range(1, K):  # unrolled: K = 4
+        shifted = jnp.pad(x, ((0, 0), (i, 0), (0, 0)))[:, : x.shape[1]]
+        y = y + shifted * w[K - 1 - i]
+    return y + p["conv_b"].astype(x.dtype)
+
+
+def _ssm_inputs(p, cfg, xc):
+    """dt (B,S,d_in) f32, Bp/Cp (B,S,N) f32, A (d_in,N) f32."""
+    N, R = cfg.mamba.d_state, cfg.mamba_dt_rank
+    proj = dense(p["x_proj"], xc)
+    dt_r, Bp, Cp = jnp.split(proj, [R, R + N], axis=-1)
+    dt = jax.nn.softplus(
+        dense(p["dt_proj"], dt_r).astype(jnp.float32) + p["dt_bias"])
+    A = -jnp.exp(p["A_log"])
+    return dt, Bp.astype(jnp.float32), Cp.astype(jnp.float32), A
+
+
+def _scan_chunk(carry, inp, A):
+    """One chunk of the selective scan. carry: state (B, d_in, N)."""
+
+    def step(state, t):
+        dt_t, bx_t, c_t = t  # (B,d_in), (B,d_in? ...)
+        dA = jnp.exp(dt_t[..., None] * A)  # (B, d_in, N)
+        state = dA * state + bx_t
+        y = jnp.einsum("bdn,bn->bd", state, c_t)
+        return state, y
+
+    return jax.lax.scan(step, carry, inp)
+
+
+def mamba_train(p, cfg, x):
+    """x: (B, S, D) → (B, S, D). S must divide by cfg.mamba.chunk."""
+    B, S, D = x.shape
+    d_in = cfg.mamba_d_inner
+    N = cfg.mamba.d_state
+    xz = dense(p["in_proj"], x)
+    x_in, z = jnp.split(xz, 2, axis=-1)
+    xc = jax.nn.silu(_conv_causal(p, x_in))
+    dt, Bp, Cp, A = _ssm_inputs(p, cfg, xc)
+    # precompute dt·x·B (B,S,d_in,N) lazily per chunk to bound memory
+    ck = min(cfg.mamba.chunk, S)
+    nchunk = S // ck if S % ck == 0 else 1
+    ck = S // nchunk
+
+    xc32 = xc.astype(jnp.float32)
+
+    def chunk_body(state, sl):
+        dt_c, bx_c, c_c = sl  # (ck, B, ...) time-major
+        return _scan_chunk(state, (dt_c, bx_c, c_c), A)
+
+    # time-major chunked tensors
+    dt_t = dt.transpose(1, 0, 2).reshape(nchunk, ck, B, d_in)
+    bx = (dt * xc32)[..., None] * Bp[:, :, None, :]  # (B,S,d_in,N)
+    bx_t = bx.transpose(1, 0, 2, 3).reshape(nchunk, ck, B, d_in, N)
+    c_t = Cp.transpose(1, 0, 2).reshape(nchunk, ck, B, N)
+
+    state0 = jnp.zeros((B, d_in, N), jnp.float32)
+    body = jax.checkpoint(chunk_body) if cfg.remat else chunk_body
+    _, ys = jax.lax.scan(body, state0, (dt_t, bx_t, c_t))
+    y = ys.reshape(S, B, d_in).transpose(1, 0, 2)  # (B,S,d_in)
+    y = y + p["D_skip"] * xc32
+    y = (y.astype(x.dtype)) * jax.nn.silu(z)
+    return dense(p["out_proj"], y)
+
+
+def mamba_decode(p, cfg, x, cache):
+    """Single-token step. x: (B, 1, D); cache {conv (B,K-1,d_in),
+    ssm (B,d_in,N)} → (out (B,1,D), new cache)."""
+    B = x.shape[0]
+    K = cfg.mamba.d_conv
+    xz = dense(p["in_proj"], x)
+    x_in, z = jnp.split(xz, 2, axis=-1)  # (B,1,d_in)
+    window = jnp.concatenate([cache["conv"], x_in], axis=1)  # (B,K,d_in)
+    w = p["conv_w"].astype(x.dtype)
+    xc = jax.nn.silu(
+        jnp.einsum("bkd,kd->bd", window, w)[:, None, :]
+        + p["conv_b"].astype(x.dtype))
+    dt, Bp, Cp, A = _ssm_inputs(p, cfg, xc)
+    dA = jnp.exp(dt[:, 0, :, None] * A)
+    bx = (dt[:, 0] * xc[:, 0].astype(jnp.float32))[..., None] * Bp[:, 0, None, :]
+    state = dA * cache["ssm"] + bx
+    y = jnp.einsum("bdn,bn->bd", state, Cp[:, 0])[:, None, :]
+    y = y + p["D_skip"] * xc.astype(jnp.float32)
+    out = dense(p["out_proj"], y.astype(x.dtype) * jax.nn.silu(z))
+    return out, {"conv": window[:, 1:], "ssm": state}
+
+
+def mamba_cache_shape(cfg, batch, dtype):
+    return {
+        "conv": jax.ShapeDtypeStruct(
+            (batch, cfg.mamba.d_conv - 1, cfg.mamba_d_inner), dtype),
+        "ssm": jax.ShapeDtypeStruct(
+            (batch, cfg.mamba_d_inner, cfg.mamba.d_state), jnp.float32),
+    }

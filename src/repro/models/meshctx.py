@@ -1,0 +1,83 @@
+"""Activation-sharding context (MaxText-style logical axis rules).
+
+FSDP shards weight d_model over the "data" axis while activations shard
+batch over the same axis; GSPMD's cost model then prefers all-gathering
+the (smaller) activations — replicating the batch and blowing past HBM
+(measured: 4.2 GB/device logits at llama3 train_4k). Pinning activation
+shardings at block boundaries forces the weight-gather instead, which is
+the FSDP contract.
+
+Launchers call ``set_mesh(mesh)`` before tracing; without a mesh set (unit
+tests, single-device runs) every constraint is a no-op.
+"""
+
+from __future__ import annotations
+
+import contextlib
+
+import jax
+from jax.sharding import NamedSharding, PartitionSpec as P
+
+_MESH: jax.sharding.Mesh | None = None
+
+
+def set_mesh(mesh):
+    global _MESH
+    _MESH = mesh
+
+
+def get_mesh():
+    return _MESH
+
+
+@contextlib.contextmanager
+def use_mesh(mesh):
+    prev = _MESH
+    set_mesh(mesh)
+    try:
+        yield
+    finally:
+        set_mesh(prev)
+
+
+def _axes(logical: str | None):
+    if logical == "dp":
+        return ("pod", "data") if "pod" in _MESH.axis_names else ("data",)
+    if logical == "model":
+        return ("model",)
+    return None
+
+
+def constrain(x, *logical):
+    """with_sharding_constraint by logical dims ('dp' | 'model' | None per
+    array axis); skips non-divisible dims and is a no-op without a mesh."""
+    if _MESH is None or not hasattr(x, "ndim") or x.ndim != len(logical):
+        return x
+    spec = []
+    for dim_size, name in zip(x.shape, logical):
+        axes = _axes(name)
+        if axes is None:
+            spec.append(None)
+            continue
+        n = 1
+        for a in axes:
+            n *= _MESH.shape[a]
+        spec.append(axes if dim_size % n == 0 else None)
+    return jax.lax.with_sharding_constraint(
+        x, NamedSharding(_MESH, P(*spec)))
+
+
+# --- serving toggles (set by launchers; default off) -------------------
+
+_SEQPAR_DECODE = False
+
+
+def set_seqpar_decode(on: bool):
+    """Enable sequence-parallel KV decode attention (shard_map flash-
+    combine over the cache's model-sharded sequence axis)."""
+    global _SEQPAR_DECODE
+    _SEQPAR_DECODE = on
+
+
+def seqpar_decode() -> bool:
+    return _SEQPAR_DECODE and _MESH is not None

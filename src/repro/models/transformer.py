@@ -1,0 +1,359 @@
+"""Model assembly: pattern-based block stacks with scan-over-units.
+
+A config's ``pattern`` (e.g. ``("attn",)``, ``("attn_moe", "attn")``,
+Jamba's 8-layer hybrid unit) is instantiated once and scanned
+``n_units = n_layers / len(pattern)`` times with stacked parameters, so
+HLO size is O(|pattern|) regardless of depth and FSDP-style parameter
+gathering happens per scan step. Each unit body is rematerialized
+(jax.checkpoint) when cfg.remat.
+
+Entry points:
+  * ``init_params`` / ``abstract_params`` — concrete or ShapeDtypeStruct
+    parameter trees (dry-runs never allocate).
+  * ``loss_fn`` — next-token (causal) or framewise (encoder) CE + MoE aux.
+  * ``prefill`` — forward returning per-layer caches (attention KV /
+    SSM states) padded into S_max buffers.
+  * ``decode_step`` — one token against the cache (serve_step of the
+    decode_* and long_500k cells).
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+
+from repro.models import attention as attn
+from repro.models.meshctx import constrain
+from repro.models import mamba as mb
+from repro.models import moe as moe_mod
+from repro.models import xlstm as xl
+from repro.models.layers import (
+    dense,
+    embed,
+    embedding_init,
+    mlp,
+    mlp_init,
+    rmsnorm,
+    rmsnorm_init,
+    unembed,
+)
+
+ATTN_KINDS = ("attn", "attn_moe")
+
+
+def _dtype(cfg):
+    return jnp.dtype(cfg.dtype)
+
+
+def _pdtype(cfg):
+    return jnp.dtype(cfg.param_dtype)
+
+
+# ------------------------------------------------------------------ init
+
+
+def _layer_init(kind, key, cfg, dtype):
+    k1, k2, k3 = jax.random.split(key, 3)
+    p = {"norm1": rmsnorm_init(cfg.d_model, dtype)}
+    if kind in ATTN_KINDS:
+        init = attn.mla_init if cfg.attention == "mla" else attn.gqa_init
+        p["mix"] = init(k1, cfg, dtype)
+    elif kind in ("mamba", "mamba_moe"):
+        p["mix"] = mb.mamba_init(k1, cfg, dtype)
+    elif kind == "mlstm":
+        p["mix"] = xl.mlstm_init(k1, cfg, dtype)
+        return p  # single-residual block
+    elif kind == "slstm":
+        p["mix"] = xl.slstm_init(k1, cfg, dtype)
+        return p
+    else:
+        raise ValueError(f"unknown block kind {kind!r}")
+    p["norm2"] = rmsnorm_init(cfg.d_model, dtype)
+    if kind.endswith("_moe"):
+        p["mlp"] = moe_mod.moe_init(k2, cfg, dtype)
+    else:
+        p["mlp"] = mlp_init(k3, cfg.d_model, cfg.d_ff, cfg.mlp, dtype)
+    return p
+
+
+def _unit_init(key, cfg, dtype):
+    keys = jax.random.split(key, len(cfg.pattern))
+    return {f"l{i}": _layer_init(kind, keys[i], cfg, dtype)
+            for i, kind in enumerate(cfg.pattern)}
+
+
+def init_params(cfg, key):
+    dtype = _pdtype(cfg)
+    k_embed, k_units, k_head = jax.random.split(key, 3)
+    params = {}
+    if not cfg.embed_inputs or cfg.family == "vlm":
+        params["embed"] = embedding_init(k_embed, cfg.vocab_size,
+                                         cfg.d_model, dtype)
+    unit_keys = jax.random.split(k_units, cfg.n_units)
+    if cfg.scan_layers:
+        params["units"] = jax.vmap(
+            lambda k: _unit_init(k, cfg, dtype))(unit_keys)
+    else:
+        params["units"] = [
+            _unit_init(k, cfg, dtype) for k in unit_keys]
+    params["final_norm"] = rmsnorm_init(cfg.d_model, dtype)
+    if cfg.tie_embeddings and "embed" in params:
+        pass  # reuse embed table for the head
+    else:
+        # 1/√d head init keeps init CE ≈ log V (logits O(1))
+        params["lm_head"] = embedding_init(
+            k_head, cfg.vocab_size, cfg.d_model, dtype,
+            scale=cfg.d_model ** -0.5)
+    return params
+
+
+def abstract_params(cfg):
+    """Parameter tree of ShapeDtypeStructs — no allocation (dry-run path)."""
+    key = jax.ShapeDtypeStruct((2,), jnp.uint32)
+    return jax.eval_shape(functools.partial(init_params, cfg), key)
+
+
+# --------------------------------------------------------------- forward
+
+
+def _apply_layer_train(kind, p, *, cfg, x, positions, mode):
+    """mode: 'train' (full attention) or 'prefill' (chunked + cache out)."""
+    cache = None
+    h = rmsnorm(p["norm1"], x, cfg.norm_eps)
+    if kind in ATTN_KINDS:
+        if cfg.attention == "mla":
+            if mode == "prefill":
+                y, cache = attn.mla_full(p["mix"], cfg, h, positions,
+                                         return_cache=True)
+            else:
+                y = attn.mla_full(p["mix"], cfg, h, positions)
+        else:
+            if mode == "prefill":
+                y, cache = attn.gqa_prefill(p["mix"], cfg, h, positions)
+            else:
+                y = attn.gqa_full(p["mix"], cfg, h, positions)
+    elif kind in ("mamba", "mamba_moe"):
+        y = mb.mamba_train(p["mix"], cfg, h)
+    elif kind == "mlstm":
+        return x + xl.mlstm_train(p["mix"], cfg, h), 0.0, None
+    elif kind == "slstm":
+        return x + xl.slstm_train(p["mix"], cfg, h), 0.0, None
+    x = x + y
+    h2 = rmsnorm(p["norm2"], x, cfg.norm_eps)
+    aux = 0.0
+    if kind.endswith("_moe"):
+        y2, aux = moe_mod.moe_apply(p["mlp"], cfg, h2)
+    else:
+        y2 = mlp(p["mlp"], h2, cfg.mlp)
+    return x + y2, aux, cache
+
+
+def _unit_apply_train(uparams, cfg, x, positions, mode):
+    aux_total = 0.0
+    caches = {}
+    x = constrain(x, "dp", None, None)  # pin batch over data (FSDP contract)
+    for i, kind in enumerate(cfg.pattern):
+        # Remat at LAYER granularity: unit-level checkpoint keeps the whole
+        # unit's recomputed activations live in its backward (243 GB/device
+        # for deepseek's 27-layer pattern); per-layer checkpoints bound the
+        # live set to one layer.
+        layer = functools.partial(_apply_layer_train, kind, cfg=cfg,
+                                  mode=mode)
+        if cfg.remat:
+            layer = jax.checkpoint(layer)
+        x, aux, cache = layer(uparams[f"l{i}"], x=x, positions=positions)
+        aux_total = aux_total + aux
+        if cache is not None:
+            caches[f"l{i}"] = cache
+    return x, aux_total, caches
+
+
+def _stack_forward(params, cfg, x, positions, mode):
+    """Scan the unit over its stacked params. Returns (x, aux, caches)."""
+    if not cfg.scan_layers:
+        aux_total = 0.0
+        caches = []
+        for uparams in params["units"]:
+            x, aux, c = _unit_apply_train(uparams, cfg, x, positions, mode)
+            aux_total += aux
+            caches.append(c)
+        return x, aux_total, caches
+
+    def body(carry, uparams):
+        x, aux = carry
+        x, aux_u, caches = _unit_apply_train(uparams, cfg, x, positions, mode)
+        return (x, aux + aux_u), caches
+
+    # remat happens per layer inside the unit; the scan body itself is not
+    # checkpointed (scan already bounds residuals to per-unit carries).
+    (x, aux), caches = jax.lax.scan(body, (x, 0.0), params["units"])
+    return x, aux, caches
+
+
+def _inputs_to_h(params, cfg, batch):
+    if cfg.embed_inputs:
+        x = batch["embeds"].astype(_dtype(cfg))
+    else:
+        x = embed(params["embed"], batch["tokens"], _dtype(cfg))
+    x = constrain(x, "dp", None, None)
+    B, S = x.shape[0], x.shape[1]
+    positions = jnp.broadcast_to(jnp.arange(S, dtype=jnp.int32)[None], (B, S))
+    return x, positions
+
+
+def _head(params, cfg, x):
+    x = constrain(x, "dp", None, None)
+    x = rmsnorm(params["final_norm"], x, cfg.norm_eps)
+    table = params["embed"] if (cfg.tie_embeddings and "embed" in params) \
+        else params["lm_head"]
+    return constrain(unembed(table, x), "dp", None, "model")  # (B, S, V) f32
+
+
+def forward_train(params, cfg, batch):
+    x, positions = _inputs_to_h(params, cfg, batch)
+    x, aux, _ = _stack_forward(params, cfg, x, positions, mode="train")
+    return _head(params, cfg, x), aux
+
+
+def loss_fn(params, cfg, batch, *, aux_weight: float = 0.01,
+            zloss: float = 0.0):
+    """Mean CE (+ MoE aux, + optional z-loss). Returns (loss, metrics)."""
+    logits, aux = forward_train(params, cfg, batch)
+    labels = batch["labels"] if "labels" in batch else batch["tokens"]
+    if cfg.causal:
+        logits = logits[:, :-1]
+        labels = labels[:, 1:]
+    logp = jax.nn.log_softmax(logits, axis=-1)
+    ce = -jnp.take_along_axis(logp, labels[..., None], axis=-1)[..., 0]
+    loss = ce.mean()
+    metrics = {"ce": loss, "aux": aux}
+    if any(k.endswith("_moe") for k in cfg.pattern):
+        loss = loss + aux_weight * aux
+    if zloss:
+        lse = jax.nn.logsumexp(logits, axis=-1)
+        loss = loss + zloss * jnp.mean(lse**2)
+    metrics["loss"] = loss
+    return loss, metrics
+
+
+# --------------------------------------------------------------- serving
+
+
+def prefill(params, cfg, batch, *, s_max: int | None = None):
+    """Forward pass that also returns decode caches (padded to s_max)."""
+    x, positions = _inputs_to_h(params, cfg, batch)
+    x, _, caches = _stack_forward(params, cfg, x, positions, mode="prefill")
+    logits = _head(params, cfg, x[:, -1:, :])
+    S = positions.shape[1]
+    s_max = s_max or S
+    # scan-stacked caches carry a leading (units,) axis before (B, S, ...)
+    caches = _pad_attn_caches(caches, cfg, s_max,
+                              axis=2 if cfg.scan_layers else 1)
+    # recurrent-layer states come from a dedicated pass (cheap decode-style
+    # replay is avoided: mamba/xlstm prefill states are materialized by
+    # their train fns only on request — see serving engine).
+    return logits, caches
+
+
+def _pad_attn_caches(caches, cfg, s_max, *, axis):
+    def pad(leaf):
+        if leaf.ndim > axis and leaf.shape[axis] != s_max:
+            pad_width = [(0, 0)] * leaf.ndim
+            pad_width[axis] = (0, s_max - leaf.shape[axis])
+            return jnp.pad(leaf, pad_width)
+        return leaf
+
+    return jax.tree.map(pad, caches)
+
+
+def init_cache(cfg, batch: int, s_max: int, dtype=None, abstract=False):
+    """Per-unit stacked cache tree (zeros, or ShapeDtypeStructs)."""
+    dtype = dtype or _dtype(cfg)
+    unit = {}
+    for i, kind in enumerate(cfg.pattern):
+        if kind in ATTN_KINDS:
+            shape_fn = (attn.mla_cache_shape if cfg.attention == "mla"
+                        else attn.gqa_cache_shape)
+            unit[f"l{i}"] = shape_fn(cfg, batch, s_max, dtype)
+        elif kind in ("mamba", "mamba_moe"):
+            unit[f"l{i}"] = mb.mamba_cache_shape(cfg, batch, dtype)
+        elif kind == "mlstm":
+            unit[f"l{i}"] = xl.mlstm_cache_shape(cfg, batch, dtype)
+        elif kind == "slstm":
+            unit[f"l{i}"] = xl.slstm_cache_shape(cfg, batch, dtype)
+    n = cfg.n_units
+
+    def make(path, sds, lead=()):
+        shp = lead + sds.shape
+        if abstract:
+            return jax.ShapeDtypeStruct(shp, sds.dtype)
+        # xLSTM log-space stabilizer state must start at -inf, not 0.
+        fill = -1e30 if path[-1].key == "m" else 0.0
+        return jnp.full(shp, fill, sds.dtype)
+
+    if cfg.scan_layers:
+        return jax.tree_util.tree_map_with_path(
+            lambda p_, s_: make(p_, s_, (n,)), unit)
+    return [jax.tree_util.tree_map_with_path(make, unit) for _ in range(n)]
+
+
+def _apply_layer_decode(kind, p, cfg, x, cache, pos):
+    h = rmsnorm(p["norm1"], x, cfg.norm_eps)
+    if kind in ATTN_KINDS:
+        from repro.models.meshctx import seqpar_decode
+        if cfg.attention == "mla":
+            fn = attn.mla_decode
+        elif seqpar_decode():
+            fn = attn.gqa_decode_seqpar
+        else:
+            fn = attn.gqa_decode
+        y, new_cache = fn(p["mix"], cfg, h, cache, pos)
+    elif kind in ("mamba", "mamba_moe"):
+        y, new_cache = mb.mamba_decode(p["mix"], cfg, h, cache)
+    elif kind == "mlstm":
+        y, new_cache = xl.mlstm_decode(p["mix"], cfg, h, cache)
+        return x + y, new_cache
+    elif kind == "slstm":
+        y, new_cache = xl.slstm_decode(p["mix"], cfg, h, cache)
+        return x + y, new_cache
+    x = x + y
+    h2 = rmsnorm(p["norm2"], x, cfg.norm_eps)
+    if kind.endswith("_moe"):
+        y2, _ = moe_mod.moe_apply(p["mlp"], cfg, h2)
+    else:
+        y2 = mlp(p["mlp"], h2, cfg.mlp)
+    return x + y2, new_cache
+
+
+def decode_step(params, cfg, tokens, cache, pos):
+    """One-token serve step.
+
+    tokens: (B, 1) int32 (or {"embeds": (B,1,D)} for pure-embedding archs);
+    cache: tree from init_cache/prefill; pos: () int32 write position.
+    Returns (logits (B, 1, V) f32, new cache).
+    """
+    if isinstance(tokens, dict):
+        x = tokens["embeds"].astype(_dtype(cfg))
+    else:
+        x = embed(params["embed"], tokens, _dtype(cfg))
+
+    def body(x, unit):
+        uparams, ucache = unit
+        new_caches = {}
+        for i, kind in enumerate(cfg.pattern):
+            x, nc = _apply_layer_decode(
+                kind, uparams[f"l{i}"], cfg, x, ucache[f"l{i}"], pos)
+            new_caches[f"l{i}"] = nc
+        return x, new_caches
+
+    if cfg.scan_layers:
+        x, new_cache = jax.lax.scan(body, x, (params["units"], cache))
+    else:
+        new_cache = []
+        for uparams, ucache in zip(params["units"], cache):
+            x, nc = body(x, (uparams, ucache))
+            new_cache.append(nc)
+    logits = _head(params, cfg, x)
+    return logits, new_cache

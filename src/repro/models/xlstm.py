@@ -1,0 +1,226 @@
+"""xLSTM blocks: mLSTM (matrix memory) and sLSTM (scalar memory).
+
+mLSTM: per-head outer-product memory C ∈ R^{dk×dv} with exponential
+input/forget gates, stabilized in log space (Beck et al. 2024). Training
+runs a chunk-rematerialized sequential scan (same memory strategy as the
+Mamba block); decode is an O(1) state update — the property that makes
+xlstm-125m a ``long_500k``-capable arch.
+
+sLSTM: scalar-memory recurrence with per-head block-diagonal recurrent
+weights. Strictly sequential by construction (the paper's own caveat) —
+implemented as lax.scan; noted in DESIGN.md §5.
+"""
+
+from __future__ import annotations
+
+import math
+
+import jax
+import jax.numpy as jnp
+
+from repro.models.layers import _init, dense, dense_init, rmsnorm, rmsnorm_init
+
+
+# ----------------------------------------------------------------- mLSTM
+
+
+def mlstm_init(key, cfg, dtype):
+    D, H = cfg.d_model, cfg.n_heads
+    pf = cfg.xlstm.proj_factor_m
+    d_in = int(pf * D)
+    ks = jax.random.split(key, 8)
+    s = 1.0 / math.sqrt(d_in)
+    return {
+        "up": dense_init(ks[0], D, 2 * d_in, dtype),
+        "wq": dense_init(ks[1], d_in, d_in, dtype),
+        "wk": dense_init(ks[2], d_in, d_in, dtype),
+        "wv": dense_init(ks[3], d_in, d_in, dtype),
+        "wi": {"w": _init(ks[4], (d_in, H), s, jnp.float32),
+               "b": jnp.zeros((H,), jnp.float32)},
+        "wf": {"w": _init(ks[5], (d_in, H), s, jnp.float32),
+               "b": 3.0 + jnp.arange(H, dtype=jnp.float32)},  # open forget
+        "norm": rmsnorm_init(d_in, dtype),
+        "down": dense_init(ks[6], d_in, D, dtype),
+    }
+
+
+def _mlstm_gates(p, u):
+    """log-input/forget gate pre-activations per head: (B, S, H) f32."""
+    u32 = u.astype(jnp.float32)
+    logi = u32 @ p["wi"]["w"] + p["wi"]["b"]
+    logf = jax.nn.log_sigmoid(u32 @ p["wf"]["w"] + p["wf"]["b"])
+    return logi, logf
+
+
+def _mlstm_qkv(p, cfg, u):
+    B, S, d_in = u.shape
+    H = cfg.n_heads
+    dh = d_in // H
+    q = dense(p["wq"], u).reshape(B, S, H, dh)
+    k = dense(p["wk"], u).reshape(B, S, H, dh) / math.sqrt(dh)
+    v = dense(p["wv"], u).reshape(B, S, H, dh)
+    return q, k, v
+
+
+def _mlstm_step(carry, t):
+    """carry: (C (B,H,dk,dv), n (B,H,dk), m (B,H)); t: per-step tensors."""
+    C, n, m = carry
+    q, k, v, logi, logf = t  # (B,H,dk),(B,H,dk),(B,H,dv),(B,H),(B,H)
+    m_new = jnp.maximum(logf + m, logi)
+    i_ = jnp.exp(logi - m_new)[..., None]
+    f_ = jnp.exp(logf + m - m_new)[..., None]
+    C = f_[..., None] * C + i_[..., None] * (k[..., :, None] * v[..., None, :])
+    n = f_ * n + i_ * k
+    num = jnp.einsum("bhkv,bhk->bhv", C, q)
+    den = jnp.maximum(jnp.abs(jnp.einsum("bhk,bhk->bh", n, q)), 1.0)
+    return (C, n, m_new), num / den[..., None]
+
+
+def mlstm_train(p, cfg, x):
+    B, S, D = x.shape
+    H = cfg.n_heads
+    u, z = jnp.split(dense(p["up"], x), 2, axis=-1)  # (B,S,d_in) each
+    d_in = u.shape[-1]
+    dh = d_in // H
+    q, k, v = _mlstm_qkv(p, cfg, u)
+    logi, logf = _mlstm_gates(p, u)
+
+    tm = lambda a: jnp.moveaxis(a.astype(jnp.float32), 1, 0)  # time-major
+    ck = min(cfg.xlstm.chunk, S)
+    nchunk = S // ck if S % ck == 0 else 1
+    ck = S // nchunk
+
+    def chunk(carry, sl):
+        return jax.lax.scan(_mlstm_step, carry, sl)
+
+    body = jax.checkpoint(chunk) if cfg.remat else chunk
+    resh = lambda a: a.reshape((nchunk, ck) + a.shape[1:])
+    C0 = jnp.zeros((B, H, dh, dh), jnp.float32)
+    n0 = jnp.zeros((B, H, dh), jnp.float32)
+    m0 = jnp.full((B, H), -1e30, jnp.float32)
+    (_, _, _), ys = jax.lax.scan(
+        body, (C0, n0, m0),
+        tuple(resh(tm(a)) for a in (q, k, v, logi, logf)))
+    y = jnp.moveaxis(ys.reshape(S, B, H, dh), 0, 1).reshape(B, S, d_in)
+    y = rmsnorm(p["norm"], y.astype(x.dtype), cfg.norm_eps)
+    return dense(p["down"], y * jax.nn.silu(z))
+
+
+def mlstm_decode(p, cfg, x, cache):
+    B = x.shape[0]
+    u, z = jnp.split(dense(p["up"], x), 2, axis=-1)
+    q, k, v = _mlstm_qkv(p, cfg, u)
+    logi, logf = _mlstm_gates(p, u)
+    sq = lambda a: a[:, 0].astype(jnp.float32)
+    carry = (cache["C"], cache["n"], cache["m"])
+    (C, n, m), y = _mlstm_step(
+        carry, (sq(q), sq(k), sq(v), sq(logi), sq(logf)))
+    y = y.reshape(B, 1, -1).astype(x.dtype)
+    y = rmsnorm(p["norm"], y, cfg.norm_eps)
+    out = dense(p["down"], y * jax.nn.silu(z))
+    return out, {"C": C, "n": n, "m": m}
+
+
+def mlstm_cache_shape(cfg, batch, dtype):
+    H = cfg.n_heads
+    dh = int(cfg.xlstm.proj_factor_m * cfg.d_model) // H
+    return {
+        "C": jax.ShapeDtypeStruct((batch, H, dh, dh), jnp.float32),
+        "n": jax.ShapeDtypeStruct((batch, H, dh), jnp.float32),
+        "m": jax.ShapeDtypeStruct((batch, H), jnp.float32),
+    }
+
+
+# ----------------------------------------------------------------- sLSTM
+
+
+def slstm_init(key, cfg, dtype):
+    D, H = cfg.d_model, cfg.n_heads
+    dh = D // H
+    pf = cfg.xlstm.proj_factor_s
+    d_ff = int(2 * pf * D) // 2 * 2
+    ks = jax.random.split(key, 7)
+    s = 1.0 / math.sqrt(D)
+    gates = {}
+    for name, kk in zip(("z", "i", "f", "o"), jax.random.split(ks[0], 4)):
+        k1, k2 = jax.random.split(kk)
+        gates[name] = {
+            "w": _init(k1, (D, D), s, dtype),
+            "r": _init(k2, (H, dh, dh), 1.0 / math.sqrt(dh), dtype),
+            "b": (3.0 * jnp.ones((D,), jnp.float32) if name == "f"
+                  else jnp.zeros((D,), jnp.float32)),
+        }
+    return {
+        "gates": gates,
+        "ffn_gate": dense_init(ks[1], D, d_ff, dtype),
+        "ffn_up": dense_init(ks[2], D, d_ff, dtype),
+        "ffn_down": dense_init(ks[3], d_ff, D, dtype),
+        "norm": rmsnorm_init(D, dtype),
+    }
+
+
+def _slstm_pre(p, x):
+    """Input contributions of all four gates: (B, S, D) each, f32."""
+    g = p["gates"]
+    pre = {n: dense(g[n], x).astype(jnp.float32) + g[n]["b"]
+           for n in ("z", "i", "f", "o")}
+    return pre
+
+
+def _slstm_step(p, cfg, carry, pre_t):
+    """carry: (h, c, n, m) all (B, D) f32."""
+    h, c, n, m = carry
+    H = cfg.n_heads
+    B, D = h.shape
+    dh = D // H
+    g = p["gates"]
+    hh = h.reshape(B, H, dh)
+
+    def rec(name):
+        r = g[name]["r"].astype(jnp.float32)
+        return jnp.einsum("bhd,hde->bhe", hh, r).reshape(B, D)
+
+    z = jnp.tanh(pre_t["z"] + rec("z"))
+    o = jax.nn.sigmoid(pre_t["o"] + rec("o"))
+    logi = pre_t["i"] + rec("i")
+    logf = jax.nn.log_sigmoid(pre_t["f"] + rec("f"))
+    m_new = jnp.maximum(logf + m, logi)
+    i_ = jnp.exp(logi - m_new)
+    f_ = jnp.exp(logf + m - m_new)
+    c = f_ * c + i_ * z
+    n = f_ * n + i_
+    h_new = o * c / jnp.maximum(n, 1.0)
+    return (h_new, c, n, m_new), h_new
+
+
+def slstm_train(p, cfg, x):
+    B, S, D = x.shape
+    pre = _slstm_pre(p, x)
+    pre_tm = {k: jnp.moveaxis(v, 1, 0) for k, v in pre.items()}
+    z0 = jnp.zeros((B, D), jnp.float32)
+    carry0 = (z0, z0, z0, jnp.full((B, D), -1e30, jnp.float32))
+
+    def step(carry, t):
+        return _slstm_step(p, cfg, carry, t)
+
+    _, hs = jax.lax.scan(step, carry0, pre_tm)
+    y = jnp.moveaxis(hs, 0, 1).astype(x.dtype)
+    y = rmsnorm(p["norm"], y, cfg.norm_eps)
+    h = jax.nn.silu(dense(p["ffn_gate"], y)) * dense(p["ffn_up"], y)
+    return dense(p["ffn_down"], h)
+
+
+def slstm_decode(p, cfg, x, cache):
+    pre = {k: v[:, 0] for k, v in _slstm_pre(p, x).items()}
+    carry = (cache["h"], cache["c"], cache["n"], cache["m"])
+    (h, c, n, m), y = _slstm_step(p, cfg, carry, pre)
+    y = rmsnorm(p["norm"], y[:, None, :].astype(x.dtype), cfg.norm_eps)
+    hgate = jax.nn.silu(dense(p["ffn_gate"], y)) * dense(p["ffn_up"], y)
+    return dense(p["ffn_down"], hgate), {"h": h, "c": c, "n": n, "m": m}
+
+
+def slstm_cache_shape(cfg, batch, dtype):
+    D = cfg.d_model
+    f32 = jnp.float32
+    return {k: jax.ShapeDtypeStruct((batch, D), f32)
+            for k in ("h", "c", "n", "m")}

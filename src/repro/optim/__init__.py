@@ -1,0 +1,16 @@
+"""Optimizer substrate: AdamW (fp32 + 8-bit block-quantized moments),
+schedules, clipping, microbatch accumulation."""
+
+from repro.optim.adamw import adamw_init, adamw_update, make_optimizer
+from repro.optim.grad_utils import (
+    accumulate_microbatches,
+    clip_by_global_norm,
+    global_norm,
+)
+from repro.optim.schedule import constant, warmup_cosine
+
+__all__ = [
+    "adamw_init", "adamw_update", "make_optimizer",
+    "accumulate_microbatches", "clip_by_global_norm", "global_norm",
+    "constant", "warmup_cosine",
+]

@@ -1,0 +1,191 @@
+"""AdamW from scratch, plus an 8-bit block-quantized variant.
+
+The 8-bit optimizer (bitsandbytes/DeepSpeed-style: per-256-block absmax
+int8 moments with an fp32 scale) is the distributed-optimization trick
+that makes the llama4-maverick-400b train state fit 16 GB/chip on the
+single-pod mesh: (2 + 1 + 1 + ε) bytes/param instead of (4 + 4 + 4)
+(DESIGN.md §4). Moments are dequantized, updated, and requantized each
+step; the quantization error is bounded by the blockwise absmax.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+
+BLOCK = 256
+
+
+# ------------------------------------------------------- int8 block codec
+#
+# Linear absmax codes are fine for gradients but catastrophic for Adam's
+# second moment: v spans orders of magnitude within a block, small entries
+# round to zero and 1/sqrt(v) explodes. Like bitsandbytes' dynamic maps we
+# use nonlinear codes: signed-sqrt for m (resolution near 0) and a quartic
+# map for v (positive, heavy dynamic range).
+#
+# Layout matters under SPMD: flattening a leaf to (blocks, 256) destroys
+# its sharding — the dequantized moments then materialize REPLICATED
+# (measured 515 GB/device for llama4-maverick's stacked expert banks). The
+# optimizer therefore quantizes along the LAST axis only: q keeps the
+# parameter's shape (int8) and scale has shape (..., last/256), so both
+# inherit the parameter's PartitionSpec. Leaves whose last dim doesn't
+# block (biases, norms — a negligible fraction of parameters) keep fp32
+# moments. The flat (blocks, 256) codec below remains for the gradient
+# wire-compression path, where the payload is transient.
+
+
+def _encode(y, kind):
+    if kind == "lin":
+        return jnp.round(127.0 * y)
+    if kind == "sq":  # signed sqrt: fine resolution near zero
+        return jnp.round(127.0 * jnp.sign(y) * jnp.sqrt(jnp.abs(y)))
+    if kind == "q4":  # quartic: positive values, wide dynamic range
+        return jnp.round(127.0 * jnp.abs(y) ** 0.25)
+    raise ValueError(kind)
+
+
+def _decode(y, kind):
+    if kind == "sq":
+        return jnp.sign(y) * y * y
+    if kind == "q4":
+        return y**4
+    return y
+
+
+def q8_eligible(p) -> bool:
+    return p.ndim >= 1 and p.shape[-1] % BLOCK == 0 and p.size >= 65536
+
+
+def _quantize(x: jax.Array, kind: str = "lin") -> dict:
+    """Sharding-preserving last-axis block codec (optimizer moments).
+    Math runs in x.dtype (bf16 at 400B scale: fp32 codec transients were
+    the dominant HBM term)."""
+    *lead, last = x.shape
+    b = x.reshape(*lead, last // BLOCK, BLOCK)
+    amax = jnp.max(jnp.abs(b), axis=-1, keepdims=True)
+    y = b / jnp.maximum(amax, jnp.asarray(1e-30, x.dtype))
+    q = _encode(y, kind).astype(jnp.int8).reshape(x.shape)
+    return {"q": q, "scale": amax[..., 0].astype(jnp.float32)}
+
+
+def _dequantize(enc: dict, shape, size=None, kind: str = "lin",
+                dtype=jnp.float32) -> jax.Array:
+    *lead, last = shape
+    y = enc["q"].astype(dtype).reshape(*lead, last // BLOCK, BLOCK)
+    y = _decode(y / jnp.asarray(127.0, dtype), kind) \
+        * enc["scale"][..., None].astype(dtype)
+    return y.reshape(shape)
+
+
+def _quantize_flat(x: jax.Array, kind: str = "lin") -> dict:
+    """Flat (blocks, 256) codec — wire compression only (transient)."""
+    flat = x.reshape(-1)
+    pad = (-flat.size) % BLOCK
+    blocks = jnp.pad(flat, (0, pad)).reshape(-1, BLOCK)
+    amax = jnp.max(jnp.abs(blocks), axis=1, keepdims=True)
+    y = blocks / jnp.maximum(amax, 1e-30)
+    return {"q": _encode(y, kind).astype(jnp.int8),
+            "scale": amax.astype(jnp.float32)}
+
+
+def _dequantize_flat(enc: dict, shape, size, kind: str = "lin") -> jax.Array:
+    y = _decode(enc["q"].astype(jnp.float32) / 127.0, kind)
+    return (y * enc["scale"]).reshape(-1)[:size].reshape(shape)
+
+
+# --------------------------------------------------------------- AdamW
+
+
+def adamw_init(params, *, bits8: bool = False):
+    def zero_like(kind):
+        def f(p):
+            z = jnp.zeros(p.shape, jnp.float32)
+            return _quantize(z, kind) if (bits8 and q8_eligible(p)) else z
+        return f
+
+    return {
+        "step": jnp.zeros((), jnp.int32),
+        "m": jax.tree.map(zero_like("sq"), params),
+        "v": jax.tree.map(zero_like("q4"), params),
+    }
+
+
+def adamw_update(
+    grads,
+    state,
+    params,
+    *,
+    lr,
+    b1: float = 0.9,
+    b2: float = 0.95,
+    eps: float = 1e-8,
+    weight_decay: float = 0.1,
+    bits8: bool = False,
+):
+    """One AdamW step. Returns (new_params, new_state). ``lr`` may be a
+    traced scalar (schedules)."""
+    step = state["step"] + 1
+    c1 = 1.0 - b1 ** step.astype(jnp.float32)
+    c2 = 1.0 - b2 ** step.astype(jnp.float32)
+
+    def leaf(p, g, m, v):
+        leaf8 = bits8 and isinstance(m, dict)
+        # bf16-param leaves (maverick) do the moment math in bf16: the
+        # moments round-trip through int8 codes anyway, and fp32
+        # intermediates were the dominant HBM transient at 400B scale
+        # (several 2 GB copies per expert leaf). fp32-master models keep
+        # fp32 moment math.
+        ct = jnp.bfloat16 if (leaf8 and p.dtype == jnp.bfloat16) \
+            else jnp.float32
+        g32 = g.astype(ct)
+        if leaf8:
+            m_f = _dequantize(m, g.shape, kind="sq", dtype=ct)
+            v_f = _dequantize(v, g.shape, kind="q4", dtype=ct)
+        else:
+            m_f, v_f = m, v
+        m_f = (b1 * m_f + (1 - b1) * g32).astype(ct)
+        v_f = (b2 * v_f + (1 - b2) * g32 * g32).astype(ct)
+        upd = (m_f / c1.astype(ct)) / (jnp.sqrt(v_f / c2.astype(ct)) + eps)
+        p32 = p.astype(ct)
+        new_p = (p32 - jnp.asarray(lr, ct) * (upd + weight_decay * p32)).astype(
+            p.dtype)
+        if leaf8:
+            return new_p, _quantize(m_f, "sq"), _quantize(v_f, "q4")
+        return new_p, m_f, v_f
+
+    flat_p, treedef = jax.tree.flatten(params)
+    flat_g = treedef.flatten_up_to(grads)
+    flat_m = treedef.flatten_up_to(state["m"])
+    flat_v = treedef.flatten_up_to(state["v"])
+    # Sequence leaf updates: nothing data-depends between leaves, so the
+    # scheduler happily interleaves several multi-GB dequant/requant
+    # chains; the barrier chain bounds live transients to one leaf.
+    out = []
+    token = None
+    for p, g, m, v in zip(flat_p, flat_g, flat_m, flat_v):
+        if token is not None and p.size > (1 << 24):
+            g, _ = jax.lax.optimization_barrier((g, token))
+        res = leaf(p, g, m, v)
+        out.append(res)
+        token = res[0]
+    new_params = treedef.unflatten([o[0] for o in out])
+    new_state = {
+        "step": step,
+        "m": treedef.unflatten([o[1] for o in out]),
+        "v": treedef.unflatten([o[2] for o in out]),
+    }
+    return new_params, new_state
+
+
+def make_optimizer(train_cfg):
+    """(init_fn, update_fn) pair from a TrainConfig."""
+    bits8 = train_cfg.optimizer == "adamw8bit"
+    init = functools.partial(adamw_init, bits8=bits8)
+    update = functools.partial(
+        adamw_update, b1=train_cfg.b1, b2=train_cfg.b2, eps=train_cfg.eps,
+        weight_decay=train_cfg.weight_decay, bits8=bits8,
+    )
+    return init, update

@@ -1,0 +1,60 @@
+"""Gradient utilities: global-norm clipping, microbatch accumulation."""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def global_norm(tree) -> jax.Array:
+    return jnp.sqrt(sum(jnp.sum(jnp.square(g.astype(jnp.float32)))
+                        for g in jax.tree.leaves(tree)))
+
+
+def clip_by_global_norm(tree, max_norm: float):
+    norm = global_norm(tree)
+    scale = jnp.minimum(1.0, max_norm / jnp.maximum(norm, 1e-9))
+    return jax.tree.map(lambda g: (g * scale).astype(g.dtype), tree), norm
+
+
+def accumulate_microbatches(loss_fn, params, batch, n_micro: int,
+                            constrain=None, constrain_grads=None):
+    """Mean loss/grads over n_micro sequential microbatches (scan).
+
+    batch leaves must have a leading global-batch axis divisible by
+    n_micro. Peak activation memory drops ~n_micro×; HLO FLOPs unchanged.
+
+    ``constrain``: sharding-constraint fn applied per microbatch;
+    ``constrain_grads``: sharding-constraint fn applied to the gradient
+    carry — GSPMD otherwise replicates batch activations and gradient
+    accumulators inside the scan (measured: 4.2 GB/device logits at
+    llama3 train_4k; 64 GB/device full-expert grad buffers at
+    llama4-maverick). Accumulation dtype follows the parameter dtype
+    (f32 masters → f32 accumulation; bf16 params (maverick) accumulate
+    in bf16 — 8 addends, ≲1 ulp effect, halves accumulator HBM).
+    """
+    if n_micro <= 1:
+        return jax.value_and_grad(loss_fn, has_aux=True)(params, batch)
+
+    def split(x):
+        return x.reshape((n_micro, x.shape[0] // n_micro) + x.shape[1:])
+
+    micro = jax.tree.map(split, batch)
+    ident = lambda t: t
+    cg = constrain_grads or ident
+
+    def body(carry, mb):
+        if constrain is not None:
+            mb = constrain(mb)
+        (loss, aux), grads = jax.value_and_grad(loss_fn, has_aux=True)(
+            params, mb)
+        acc_loss, acc_grads = carry
+        new_grads = cg(jax.tree.map(
+            lambda a, g: a + (g / n_micro).astype(a.dtype), acc_grads, grads))
+        return (acc_loss + loss / n_micro, new_grads), aux
+
+    zero_g = cg(jax.tree.map(
+        lambda p: jnp.zeros(p.shape, p.dtype), params))
+    (loss, grads), auxs = jax.lax.scan(body, (jnp.zeros(()), zero_g), micro)
+    aux = jax.tree.map(lambda a: a[-1], auxs)
+    return (loss, aux), grads

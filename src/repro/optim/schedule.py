@@ -1,0 +1,20 @@
+"""Learning-rate schedules (warmup + cosine decay, constant)."""
+
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+
+def warmup_cosine(step, *, peak_lr, warmup_steps, total_steps,
+                  final_frac=0.1):
+    """Linear warmup then cosine decay to final_frac·peak. Traceable."""
+    step = jnp.asarray(step, jnp.float32)
+    warm = peak_lr * jnp.minimum(step / jnp.maximum(warmup_steps, 1), 1.0)
+    t = jnp.clip((step - warmup_steps)
+                 / jnp.maximum(total_steps - warmup_steps, 1), 0.0, 1.0)
+    cos = final_frac + (1 - final_frac) * 0.5 * (1 + jnp.cos(jnp.pi * t))
+    return jnp.where(step < warmup_steps, warm, peak_lr * cos)
+
+
+def constant(step, *, peak_lr, **_):
+    return jnp.full((), peak_lr, jnp.float32)

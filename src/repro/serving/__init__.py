@@ -1,0 +1,5 @@
+"""Serving substrate: batched prefill/decode engine."""
+
+from repro.serving.engine import ServeEngine
+
+__all__ = ["ServeEngine"]

@@ -1,0 +1,6 @@
+"""Training substrate: step construction + fault-tolerant loop."""
+
+from repro.training.loop import train
+from repro.training.step import make_train_step
+
+__all__ = ["train", "make_train_step"]

@@ -1,0 +1,69 @@
+"""train_step construction: loss → (microbatched) grads → EF-compression →
+clip → AdamW, as one jit-able pure function of (state, batch)."""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+
+from repro.distributed.compression import ef_compress_tree, init_error_buf
+from repro.models import transformer as tf
+from repro.optim import (
+    accumulate_microbatches,
+    clip_by_global_norm,
+    make_optimizer,
+    warmup_cosine,
+)
+
+
+def make_train_step(cfg, tcfg, batch_constraint=None,
+                    grad_constraint=None):
+    """Returns (init_state(key) → state, train_step(state, batch) →
+    (state, metrics)). Both pure; train_step is safe to jit/pjit.
+    ``batch_constraint``: optional per-microbatch sharding-constraint fn
+    (built by the launcher from the production mesh)."""
+    opt_init, opt_update = make_optimizer(tcfg)
+    sched = functools.partial(
+        warmup_cosine, peak_lr=tcfg.learning_rate,
+        warmup_steps=tcfg.warmup_steps, total_steps=tcfg.total_steps)
+
+    def init_state(key):
+        params = tf.init_params(cfg, key)
+        state = {"params": params, "opt": opt_init(params)}
+        if tcfg.grad_compression != "none":
+            state["ebuf"] = init_error_buf(params)
+        return state
+
+    def abstract_state():
+        params = tf.abstract_params(cfg)
+        state = {"params": params,
+                 "opt": jax.eval_shape(opt_init, params)}
+        if tcfg.grad_compression != "none":
+            state["ebuf"] = jax.eval_shape(init_error_buf, params)
+        return state
+
+    def loss_fn(params, batch):
+        return tf.loss_fn(params, cfg, batch, zloss=tcfg.zloss)
+
+    def train_step(state, batch):
+        (loss, metrics), grads = accumulate_microbatches(
+            loss_fn, state["params"], batch, max(tcfg.microbatch, 1),
+            constrain=batch_constraint, constrain_grads=grad_constraint)
+        new_state = dict(state)
+        if tcfg.grad_compression != "none":
+            grads, new_state["ebuf"] = ef_compress_tree(
+                grads, state["ebuf"], tcfg.grad_compression)
+        grads, gnorm = clip_by_global_norm(grads, tcfg.grad_clip)
+        lr = sched(state["opt"]["step"])
+        params, opt = opt_update(grads, state["opt"], state["params"], lr=lr)
+        new_state["params"] = params
+        new_state["opt"] = opt
+        metrics = dict(metrics)
+        metrics["loss"] = loss  # accumulated mean, not last-microbatch
+        metrics["grad_norm"] = gnorm
+        metrics["lr"] = lr
+        return new_state, metrics
+
+    return init_state, train_step, abstract_state

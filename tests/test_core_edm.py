@@ -1,0 +1,78 @@
+"""EDM behaviour: simplex projection, optimal-E recovery, S-Map."""
+
+import numpy as np
+import jax.numpy as jnp
+import pytest
+
+from repro import core
+from repro.data import timeseries as ts
+
+
+def test_simplex_forecasts_logistic_map():
+    x = jnp.asarray(ts.logistic_map(400))
+    rho = float(core.simplex_skill(x, E=2, tau=1, Tp=1))
+    assert rho > 0.95, f"deterministic chaos should be 1-step predictable, ρ={rho}"
+
+
+def test_simplex_skill_degrades_with_horizon():
+    """Chaos: skill must decay as the forecast horizon grows."""
+    x = jnp.asarray(ts.logistic_map(500))
+    rhos = [float(core.simplex_skill(x, E=2, tau=1, Tp=tp)) for tp in (1, 4, 12)]
+    assert rhos[0] > rhos[-1] + 0.1, f"no decay: {rhos}"
+
+
+def test_optimal_E_on_lorenz():
+    """Lorenz-63 needs E≈3 (2E+1 bound aside, in practice 2–5)."""
+    x = jnp.asarray(ts.lorenz63(800)[0])
+    best, rhos = core.optimal_E(x, E_max=8, tau=2, Tp=1)
+    assert 2 <= best <= 6, f"E*={best}, ρ={np.round(np.asarray(rhos), 3)}"
+    assert float(rhos[best - 1]) > 0.95
+
+
+def test_optimal_E_batch_agrees_with_scalar():
+    X = jnp.asarray(np.stack([ts.logistic_map(300, r=3.8),
+                              ts.logistic_map(300, r=3.7, x0=0.5)]))
+    E_opt, rho = core.optimal_E_batch(X, E_max=4)
+    for n in range(2):
+        _, rhos = core.optimal_E(X[n], E_max=4)
+        np.testing.assert_allclose(np.asarray(rho[n]), np.asarray(rhos),
+                                   rtol=1e-4, atol=1e-4)
+        assert int(E_opt[n]) == int(jnp.argmax(rhos)) + 1
+
+
+def test_knn_table_properties():
+    x = jnp.asarray(ts.logistic_map(300))
+    t = core.all_knn(x, E=3, tau=1)
+    assert t.k == 4
+    assert t.dists.shape == t.idx.shape == (298, 4)
+    w = np.asarray(t.weights)
+    np.testing.assert_allclose(w.sum(1), 1.0, rtol=1e-5)
+    assert (np.diff(np.asarray(t.dists), axis=1) >= 0).all()
+
+
+def test_smap_nonlinearity_detected():
+    """ρ(θ) must rise for a nonlinear system (the classic S-Map test)."""
+    x = jnp.asarray(ts.logistic_map(250))
+    rhos = np.asarray(core.nonlinearity_test(x, E=2, thetas=(0.0, 2.0, 8.0)))
+    assert rhos[-1] > rhos[0] + 0.02, f"no nonlinearity signal: {rhos}"
+    assert rhos[-1] > 0.9
+
+
+def test_smap_linear_system_flat_theta():
+    """AR(1) noise: skill must NOT rise materially with θ."""
+    rng = np.random.default_rng(7)
+    n = 300
+    x = np.zeros(n, np.float32)
+    for t in range(1, n):
+        x[t] = 0.8 * x[t - 1] + 0.1 * rng.standard_normal()
+    rhos = np.asarray(core.nonlinearity_test(jnp.asarray(x), E=2,
+                                             thetas=(0.0, 4.0)))
+    assert rhos[1] < rhos[0] + 0.05, f"spurious nonlinearity: {rhos}"
+
+
+def test_pred_rows_and_offset_helpers():
+    assert core.num_embedded(100, 5, 2) == 92
+    assert core.embed_offset(5, 2, Tp=3) == 11
+    assert core.pred_rows(100, 5, 2, Tp=3) == 89
+    with pytest.raises(ValueError):
+        core.num_embedded(10, 6, 2)

@@ -1,0 +1,86 @@
+"""Pallas batched-lookup kernel (+ fused Pearson ρ) vs jnp oracle."""
+
+import numpy as np
+import jax.numpy as jnp
+import pytest
+
+from repro.kernels import ops, ref
+
+
+def _tables(rng, L, E, tau, k):
+    x = jnp.asarray(rng.normal(size=L).astype(np.float32))
+    D = ref.pairwise_distances(x, E=E, tau=tau)
+    d, i = ref.topk_select(D, k=k)
+    return i, ref.make_weights(d)
+
+
+CASES = [
+    # (N, L, E, tau, k, block)
+    (1, 64, 2, 1, 3, (16, 8)),
+    (8, 137, 4, 2, 5, (16, 8)),
+    (23, 137, 4, 2, 5, (16, 8)),
+    (17, 100, 7, 1, 8, (32, 16)),
+    (5, 257, 20, 2, 21, (64, 8)),
+]
+
+
+@pytest.mark.parametrize("N,L,E,tau,k,block", CASES)
+def test_lookup_matches_ref(rng, N, L, E, tau, k, block):
+    idx, w = _tables(rng, L, E, tau, k)
+    Y = jnp.asarray(rng.normal(size=(N, L)).astype(np.float32))
+    off = (E - 1) * tau
+    want = ref.lookup(Y, idx, w, offset=off)
+    got = ops.lookup(Y, idx, w, offset=off, impl="interpret", block=block)
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want),
+                               rtol=1e-5, atol=1e-5)
+
+
+@pytest.mark.parametrize("N,L,E,tau,k,block", CASES)
+def test_lookup_rho_matches_ref(rng, N, L, E, tau, k, block):
+    idx, w = _tables(rng, L, E, tau, k)
+    Y = jnp.asarray(rng.normal(size=(N, L)).astype(np.float32))
+    off = (E - 1) * tau
+    want = ref.lookup_rho(Y, idx, w, offset=off)
+    got = ops.lookup_rho(Y, idx, w, offset=off, impl="interpret", block=block)
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want),
+                               rtol=1e-4, atol=1e-4)
+
+
+def test_lookup_rho_fused_equals_two_step(rng):
+    """Fused path == lookup → pearson composition (the paper's §3.4 claim)."""
+    idx, w = _tables(rng, 150, 5, 1, 6)
+    Y = jnp.asarray(rng.normal(size=(11, 150)).astype(np.float32))
+    off = 4
+    yhat = ops.lookup(Y, idx, w, offset=off, impl="interpret", block=(32, 8))
+    Lp = idx.shape[0]
+    truth = np.asarray(Y)[:, off:off + Lp]
+    want = ref.pearson_rows(jnp.asarray(yhat), jnp.asarray(truth))
+    got = ops.lookup_rho(Y, idx, w, offset=off, impl="interpret", block=(32, 8))
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want),
+                               rtol=1e-4, atol=1e-4)
+
+
+def test_lookup_rho_constant_target(rng):
+    """Zero-variance target → ρ defined as 0, not NaN."""
+    idx, w = _tables(rng, 80, 3, 1, 4)
+    Y = jnp.ones((3, 80), jnp.float32)
+    got = ops.lookup_rho(Y, idx, w, offset=2, impl="interpret", block=(16, 8))
+    assert np.isfinite(np.asarray(got)).all()
+    np.testing.assert_allclose(np.asarray(got), 0.0, atol=1e-6)
+
+
+def test_lookup_perfect_self_prediction(rng):
+    """Looking up the library itself with its own tables ≈ the series
+    (weights concentrate on near-identical states for smooth series)."""
+    t = np.linspace(0, 40 * np.pi, 800, dtype=np.float32)
+    x = jnp.asarray(np.sin(t))
+    E, tau, k = 3, 1, 4
+    D = ref.pairwise_distances(x, E=E, tau=tau)
+    d, i = ref.topk_select(D, k=k)
+    w = ref.make_weights(d)
+    off = (E - 1) * tau
+    got = ops.lookup(x[None, :], i, w, offset=off, impl="interpret",
+                     block=(64, 8))[0]
+    truth = np.asarray(x)[off:off + i.shape[0]]
+    rho = np.corrcoef(np.asarray(got), truth)[0, 1]
+    assert rho > 0.999

@@ -1,0 +1,79 @@
+"""Pallas k-pass top-k kernel vs jnp oracle and numpy full sort."""
+
+import numpy as np
+import jax.numpy as jnp
+import pytest
+
+from repro.kernels import ops, ref
+
+
+def _dist(rng, Lp):
+    x = jnp.asarray(rng.normal(size=Lp + 4).astype(np.float32))
+    return ref.pairwise_distances(x, E=5, tau=1)
+
+
+@pytest.mark.parametrize("Lp", [16, 33, 100, 131])
+@pytest.mark.parametrize("k", [1, 2, 6, 21])
+@pytest.mark.parametrize("block_rows", [4, 8, 16])
+def test_topk_matches_ref(rng, Lp, k, block_rows):
+    if k >= Lp:
+        pytest.skip("k must be < Lp with self-exclusion")
+    D = _dist(rng, Lp)
+    want_d, want_i = ref.topk_select(D, k=k)
+    got_d, got_i = ops.topk_select(D, k=k, impl="interpret",
+                                   block_rows=block_rows)
+    np.testing.assert_array_equal(np.asarray(got_i), np.asarray(want_i))
+    np.testing.assert_allclose(np.asarray(got_d), np.asarray(want_d),
+                               rtol=1e-6, atol=1e-6)
+
+
+def test_topk_vs_numpy_sort(rng):
+    D = np.asarray(_dist(rng, 77))
+    k = 8
+    got_d, got_i = ops.topk_select(jnp.asarray(D), k=k, impl="interpret")
+    Dm = D + np.where(np.eye(77, dtype=bool), np.inf, 0.0)
+    want = np.sqrt(np.sort(Dm, axis=1)[:, :k])
+    np.testing.assert_allclose(np.asarray(got_d), want, rtol=1e-5, atol=1e-6)
+    # indices actually point at those distances
+    rows = np.arange(77)[:, None]
+    np.testing.assert_allclose(
+        np.sqrt(Dm[rows, np.asarray(got_i)]), want, rtol=1e-5, atol=1e-6
+    )
+
+
+def test_topk_exclude_self_and_sorted(rng):
+    D = _dist(rng, 60)
+    d, i = ops.topk_select(D, k=5, impl="interpret")
+    i = np.asarray(i)
+    assert (i != np.arange(60)[:, None]).all(), "self must be excluded"
+    d = np.asarray(d)
+    assert (np.diff(d, axis=1) >= 0).all(), "ascending order"
+
+
+def test_topk_include_self(rng):
+    D = _dist(rng, 40)
+    d, i = ops.topk_select(D, k=3, exclude_self=False, impl="interpret")
+    assert (np.asarray(i)[:, 0] == np.arange(40)).all()
+    np.testing.assert_allclose(np.asarray(d)[:, 0], 0.0, atol=1e-6)
+
+
+@pytest.mark.parametrize("max_idx", [5, 20, 39])
+def test_topk_max_idx_dynamic(rng, max_idx):
+    """Library-prefix restriction (convergence sweeps) without re-lowering."""
+    D = _dist(rng, 40)
+    want_d, want_i = ref.topk_select(D, k=4, max_idx=max_idx)
+    got_d, got_i = ops.topk_select(D, k=4, max_idx=max_idx, impl="interpret")
+    assert int(np.asarray(got_i).max()) <= max_idx
+    np.testing.assert_array_equal(np.asarray(got_i), np.asarray(want_i))
+    np.testing.assert_allclose(np.asarray(got_d), np.asarray(want_d),
+                               rtol=1e-6, atol=1e-6)
+
+
+def test_topk_ties_are_stable(rng):
+    """Duplicate distances: first index wins, matching the oracle."""
+    Lp = 32
+    D = np.ones((Lp, Lp), np.float32)  # all distances equal
+    np.fill_diagonal(D, 0.0)
+    got_d, got_i = ops.topk_select(jnp.asarray(D), k=3, impl="interpret")
+    want_d, want_i = ref.topk_select(jnp.asarray(D), k=3)
+    np.testing.assert_array_equal(np.asarray(got_i), np.asarray(want_i))

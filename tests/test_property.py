@@ -1,0 +1,132 @@
+"""Hypothesis property tests on the system's invariants."""
+
+import numpy as np
+import jax.numpy as jnp
+from hypothesis import given, settings, strategies as st
+import hypothesis.extra.numpy as hnp
+
+from repro.core.stats import CoMoments
+from repro.kernels import ops, ref
+
+_settings = dict(max_examples=25, deadline=None)
+
+
+def series(min_len=24, max_len=96):
+    return hnp.arrays(
+        np.float32, st.integers(min_len, max_len),
+        elements=st.floats(-100, 100, width=32, allow_nan=False),
+    )
+
+
+@given(x=series(), E=st.integers(1, 6), tau=st.integers(1, 3))
+@settings(**_settings)
+def test_distance_matrix_invariants(x, E, tau):
+    if len(x) - (E - 1) * tau < 4:
+        return
+    D = np.asarray(ref.pairwise_distances(jnp.asarray(x), E=E, tau=tau))
+    assert (D >= -1e-5).all(), "squared distances are non-negative"
+    np.testing.assert_allclose(D, D.T, rtol=1e-4, atol=1e-3)  # symmetry
+    assert np.abs(np.diag(D)).max() <= 1e-3  # zero diagonal
+
+
+@given(x=series(), E=st.integers(1, 5), shift=st.floats(-50, 50, width=32))
+@settings(**_settings)
+def test_distance_shift_invariance(x, E, shift):
+    """Delay-embedding distances are invariant to additive shifts."""
+    if len(x) - (E - 1) < 4:
+        return
+    a = ref.pairwise_distances(jnp.asarray(x), E=E, tau=1)
+    b = ref.pairwise_distances(jnp.asarray(x + np.float32(shift)), E=E, tau=1)
+    scale = max(1.0, float(np.abs(np.asarray(a)).max()))
+    np.testing.assert_allclose(np.asarray(a) / scale, np.asarray(b) / scale,
+                               atol=1e-3)
+
+
+@given(x=series(min_len=32), k=st.integers(1, 8))
+@settings(**_settings)
+def test_topk_is_partial_sort(x, k):
+    x = x + np.linspace(0, 1e-3, len(x), dtype=np.float32)  # break mass ties
+    D = ref.pairwise_distances(jnp.asarray(x), E=2, tau=1)
+    Lp = D.shape[0]
+    if k >= Lp:
+        return
+    d, i = ref.topk_select(D, k=k)
+    d, i = np.asarray(d), np.asarray(i)
+    Dm = np.asarray(D) + np.where(np.eye(Lp, dtype=bool), np.inf, 0)
+    full = np.sqrt(np.sort(Dm, axis=1))
+    np.testing.assert_allclose(d, full[:, :k], rtol=1e-4, atol=1e-5)
+    assert (i >= 0).all() and (i < Lp).all()
+
+
+@given(
+    d=hnp.arrays(np.float32, (7, 5),
+                 elements=st.floats(0, 1000, width=32, allow_nan=False))
+)
+@settings(**_settings)
+def test_weights_are_simplex(d):
+    d = np.sort(d, axis=1)
+    w = np.asarray(ref.make_weights(jnp.asarray(d)))
+    assert (w >= 0).all()
+    np.testing.assert_allclose(w.sum(1), 1.0, rtol=1e-5)
+    # nearest neighbor never gets less weight than the farthest
+    assert (w[:, 0] >= w[:, -1] - 1e-6).all()
+
+
+@given(
+    a=hnp.arrays(np.float32, 50, elements=st.floats(-10, 10, width=32,
+                                                    allow_nan=False)),
+    scale=st.floats(0.125, 100, width=32),
+    shift=st.floats(-100, 100, width=32),
+)
+@settings(**_settings)
+def test_pearson_affine_invariance(a, scale, shift):
+    if np.std(a) < 1e-3:
+        return
+    b = np.float32(scale) * a + np.float32(shift)
+    rho = float(ref.pearson_rows(jnp.asarray(a[None]), jnp.asarray(b[None]))[0])
+    assert abs(rho - 1.0) < 1e-3
+
+
+@given(
+    ab=hnp.arrays(np.float32, (2, 60),
+                  elements=st.floats(-50, 50, width=32, allow_nan=False)),
+    split=st.integers(5, 55),
+)
+@settings(**_settings)
+def test_comoments_merge_equals_batch(ab, split):
+    """Schubert–Gertz merge of two chunks == stats of the concatenation."""
+    # ρ is ill-conditioned at (near-)zero variance; the merge identity is
+    # exact there only in exact arithmetic. Compare away from degeneracy.
+    if min(np.std(ab[0][:split]), np.std(ab[0][split:]),
+           np.std(ab[1][:split]), np.std(ab[1][split:])) < 1e-1:
+        return
+    a, b = jnp.asarray(ab[0]), jnp.asarray(ab[1])
+    whole = CoMoments.from_batch(a, b)
+    left = CoMoments.from_batch(a[:split], b[:split])
+    right = CoMoments.from_batch(a[split:], b[split:])
+    merged = left.merge(right)
+    np.testing.assert_allclose(float(merged.m2_a), float(whole.m2_a),
+                               rtol=1e-3, atol=1e-2)
+    np.testing.assert_allclose(float(merged.c_ab), float(whole.c_ab),
+                               rtol=1e-3, atol=1e-2)
+    np.testing.assert_allclose(float(merged.pearson), float(whole.pearson),
+                               rtol=1e-3, atol=1e-3)
+
+
+@given(x=series(min_len=40, max_len=80))
+@settings(**_settings)
+def test_lookup_convex_combination_bounds(x):
+    """Simplex predictions are convex combinations → bounded by the data."""
+    xs = jnp.asarray(x)
+    E, tau, k = 3, 1, 4
+    Lp = len(x) - (E - 1) * tau
+    if Lp <= k + 1:
+        return
+    D = ref.pairwise_distances(xs, E=E, tau=tau)
+    d, i = ref.topk_select(D, k=k)
+    w = ref.make_weights(d)
+    yhat = np.asarray(ref.lookup(xs[None], i, w, offset=(E - 1) * tau))
+    lo, hi = float(x.min()), float(x.max())
+    span = max(hi - lo, 1e-3)
+    assert yhat.min() >= lo - 1e-3 * span - 1e-4
+    assert yhat.max() <= hi + 1e-3 * span + 1e-4

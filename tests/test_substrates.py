@@ -1,0 +1,209 @@
+"""Substrate tests: optimizer (fp32 + 8-bit), schedules, checkpointing
+(atomic/retention/resume/elastic), data determinism, compression."""
+
+import os
+
+import numpy as np
+import jax
+import jax.numpy as jnp
+import pytest
+
+from repro.checkpoint import CheckpointManager
+from repro.data.pipeline import TokenPipeline
+from repro.distributed.compression import (
+    allreduce_compressed,
+    ef_compress_tree,
+    init_error_buf,
+)
+from repro.optim import (
+    adamw_init,
+    adamw_update,
+    clip_by_global_norm,
+    global_norm,
+    warmup_cosine,
+)
+
+
+# ---------------------------------------------------------------- optim
+
+
+def _rosenbrock_ish(params):
+    x, y = params["x"], params["y"]
+    return jnp.sum((1 - x) ** 2) + 5 * jnp.sum((y - x**2) ** 2)
+
+
+@pytest.mark.parametrize("bits8", [False, True])
+def test_adamw_optimizes(bits8):
+    params = {"x": jnp.full((8,), -1.0), "y": jnp.full((8,), 2.0)}
+    state = adamw_init(params, bits8=bits8)
+    loss0 = float(_rosenbrock_ish(params))
+
+    @jax.jit
+    def step(params, state):
+        loss, grads = jax.value_and_grad(_rosenbrock_ish)(params)
+        params, state = adamw_update(
+            grads, state, params, lr=3e-2, weight_decay=0.0, bits8=bits8)
+        return params, state, loss
+
+    for _ in range(300):
+        params, state, loss = step(params, state)
+    assert float(loss) < 0.05 * loss0, f"bits8={bits8}: loss {float(loss)}"
+
+
+def test_adamw8bit_tracks_fp32():
+    """8-bit moments must land within a few % of the fp32 trajectory.
+    Shape chosen to be codec-eligible (last dim % 256 == 0, ≥64k)."""
+    rng = np.random.default_rng(0)
+    w0 = jnp.asarray(rng.normal(size=(128, 512)).astype(np.float32))
+    tgt = jnp.asarray(rng.normal(size=(128, 512)).astype(np.float32))
+
+    def run(bits8):
+        params = {"w": w0}
+        state = adamw_init(params, bits8=bits8)
+        for _ in range(50):
+            grads = {"w": 2 * (params["w"] - tgt)}
+            params, state = adamw_update(
+                grads, state, params, lr=1e-2, weight_decay=0.0, bits8=bits8)
+        return np.asarray(params["w"])
+
+    a, b = run(False), run(True)
+    # quantization noise accumulates as a bounded random walk; what matters
+    # is trajectory-level agreement (divergence would be O(10+), see the
+    # linear-codemap failure mode documented in adamw.py)
+    assert np.abs(a - b).max() < 0.1, np.abs(a - b).max()
+
+
+def test_adamw8bit_state_is_int8():
+    params = {"w": jnp.zeros((64, 1024)), "b": jnp.zeros((100,))}
+    state = adamw_init(params, bits8=True)
+    assert state["m"]["w"]["q"].dtype == jnp.int8
+    assert state["m"]["w"]["q"].shape == (64, 1024)  # sharding-preserving
+    bytes_8 = state["m"]["w"]["q"].size + 4 * state["m"]["w"]["scale"].size
+    assert bytes_8 < 0.3 * 64 * 1024 * 4, "8-bit state must be ≲ 1/4 of fp32"
+    # small / non-blocking leaves keep fp32 moments
+    assert state["m"]["b"].dtype == jnp.float32
+
+
+def test_warmup_cosine_shape():
+    lr = [float(warmup_cosine(s, peak_lr=1.0, warmup_steps=10,
+                              total_steps=100)) for s in range(101)]
+    assert lr[0] == 0.0 and abs(lr[10] - 1.0) < 1e-6
+    assert lr[50] < lr[10] and lr[100] <= lr[50]
+    assert abs(lr[100] - 0.1) < 1e-6  # final_frac
+
+
+def test_clip_by_global_norm():
+    tree = {"a": jnp.full((4,), 10.0)}
+    clipped, norm = clip_by_global_norm(tree, 1.0)
+    assert abs(float(norm) - 20.0) < 1e-4
+    assert abs(float(global_norm(clipped)) - 1.0) < 1e-4
+
+
+# ------------------------------------------------------------ checkpoint
+
+
+def _tree(seed):
+    rng = np.random.default_rng(seed)
+    return {
+        "a": jnp.asarray(rng.normal(size=(4, 6)).astype(np.float32)),
+        "nested": {"b": jnp.arange(7, dtype=jnp.int32),
+                   "c": jnp.asarray(rng.normal(size=(3,)).astype(np.float32))},
+    }
+
+
+def test_checkpoint_roundtrip(tmp_path):
+    mgr = CheckpointManager(str(tmp_path), keep=2)
+    state = _tree(0)
+    mgr.save(10, state)
+    restored = mgr.restore(jax.tree.map(lambda x: x, state))
+    for a, b in zip(jax.tree.leaves(state), jax.tree.leaves(restored)):
+        np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
+
+
+def test_checkpoint_retention_and_latest(tmp_path):
+    mgr = CheckpointManager(str(tmp_path), keep=2)
+    for s in (1, 2, 3, 4):
+        mgr.save(s, _tree(s))
+    assert mgr.steps() == [3, 4]
+    assert mgr.latest_step() == 4
+    restored = mgr.restore(_tree(0))
+    np.testing.assert_array_equal(
+        np.asarray(restored["a"]), np.asarray(_tree(4)["a"]))
+
+
+def test_checkpoint_atomicity_no_tmp_left(tmp_path):
+    mgr = CheckpointManager(str(tmp_path), keep=3)
+    mgr.save(5, _tree(1))
+    assert not any(n.endswith(".tmp") for n in os.listdir(tmp_path))
+
+
+def test_checkpoint_structure_mismatch_raises(tmp_path):
+    mgr = CheckpointManager(str(tmp_path))
+    mgr.save(1, _tree(0))
+    with pytest.raises(ValueError):
+        mgr.restore({"only": jnp.zeros((2,))})
+
+
+def test_checkpoint_elastic_reshard(tmp_path):
+    """Restore onto an explicit sharding (elastic mesh change path)."""
+    mgr = CheckpointManager(str(tmp_path))
+    state = _tree(3)
+    mgr.save(1, state)
+    mesh = jax.make_mesh((1,), ("data",),
+                         axis_types=(jax.sharding.AxisType.Auto,))
+    sh = jax.sharding.NamedSharding(mesh, jax.sharding.PartitionSpec("data"))
+    shardings = jax.tree.map(lambda _: sh, state)
+    restored = mgr.restore(state, shardings=shardings)
+    assert restored["a"].sharding == sh
+    np.testing.assert_array_equal(np.asarray(restored["a"]),
+                                  np.asarray(state["a"]))
+
+
+# ------------------------------------------------------------------ data
+
+
+def test_pipeline_deterministic_and_sharded():
+    pipe = TokenPipeline(vocab_size=97, batch=8, seq_len=16, seed=3)
+    a = pipe.global_batch(5)["tokens"]
+    b = pipe.global_batch(5)["tokens"]
+    np.testing.assert_array_equal(a, b)
+    c = pipe.global_batch(6)["tokens"]
+    assert (a != c).any()
+    # rank slices tile the global batch exactly
+    parts = [pipe.batch_slice(5, rank=r, world=4)["tokens"] for r in range(4)]
+    np.testing.assert_array_equal(np.concatenate(parts, 0), a)
+    assert a.min() >= 0 and a.max() < 97
+
+
+# ---------------------------------------------------------- compression
+
+
+@pytest.mark.parametrize("kind", ["bf16", "int8"])
+def test_ef_compression_error_feedback(kind):
+    """Error feedback: the *accumulated* delivered signal converges to the
+    accumulated true gradient (residual stays bounded)."""
+    rng = np.random.default_rng(0)
+    g_true = jnp.asarray(rng.normal(size=(512,)).astype(np.float32)) * 1e-3
+    grads = {"w": g_true}
+    ebuf = init_error_buf(grads)
+    delivered = jnp.zeros_like(g_true)
+    for _ in range(30):
+        wire, ebuf = ef_compress_tree(grads, ebuf, kind)
+        delivered = delivered + wire["w"]
+    total_err = np.abs(np.asarray(delivered - 30 * g_true)).max()
+    # without EF, int8 bias would accumulate linearly; with EF it's ≤ 1 quantum
+    assert total_err < 2e-4, total_err
+
+
+def test_allreduce_compressed_single_device():
+    mesh = jax.make_mesh((1,), ("data",),
+                         axis_types=(jax.sharding.AxisType.Auto,))
+    g = jnp.asarray(np.random.default_rng(1).normal(size=(256,))
+                    .astype(np.float32))
+    out = jax.shard_map(
+        lambda x: allreduce_compressed(x, "data", "int8"),
+        mesh=mesh, in_specs=jax.sharding.PartitionSpec(None),
+        out_specs=jax.sharding.PartitionSpec(None), check_vma=False)(g)
+    # int8 quantum for N(0,1) data: absmax/127 ≈ 0.024 → half-quantum atol
+    np.testing.assert_allclose(np.asarray(out), np.asarray(g),
+                               rtol=2e-2, atol=1.5e-2)

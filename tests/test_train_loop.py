@@ -1,0 +1,145 @@
+"""Training-loop behaviour: convergence, checkpoint-restart continuity,
+preemption, microbatching equivalence, compressed-gradient training,
+serving engine end-to-end."""
+
+import dataclasses
+import os
+import signal
+
+import numpy as np
+import jax
+import jax.numpy as jnp
+import pytest
+
+from repro.configs import TrainConfig, get_config
+from repro.data.pipeline import TokenPipeline
+from repro.models import transformer as tf
+from repro.serving import ServeEngine
+from repro.training import make_train_step, train
+
+
+def _tiny():
+    cfg = dataclasses.replace(
+        get_config("llama3-8b", smoke=True), vocab_size=64)
+    tcfg = TrainConfig(learning_rate=3e-3, warmup_steps=5, total_steps=60,
+                       weight_decay=0.01, seed=0)
+    pipe = TokenPipeline(vocab_size=cfg.vocab_size, batch=4, seq_len=32,
+                         seed=1)
+    return cfg, tcfg, pipe
+
+
+def test_loss_decreases(tmp_path):
+    cfg, tcfg, pipe = _tiny()
+    _, hist = train(cfg, tcfg, pipe, workdir=str(tmp_path), num_steps=40,
+                    ckpt_every=100, verbose=False, handle_preemption=False)
+    first = np.mean([h["loss"] for h in hist[:5]])
+    last = np.mean([h["loss"] for h in hist[-5:]])
+    assert last < first - 0.2, f"no learning: {first:.3f} → {last:.3f}"
+
+
+def test_checkpoint_restart_continuity(tmp_path):
+    """Kill at step 20, restart, and land bitwise-equal to an unbroken run
+    (pure-function data pipeline + checkpointed state)."""
+    cfg, tcfg, pipe = _tiny()
+
+    state_a, _ = train(cfg, tcfg, pipe, workdir=str(tmp_path / "a"),
+                       num_steps=30, ckpt_every=100, verbose=False,
+                       handle_preemption=False)
+
+    train(cfg, tcfg, pipe, workdir=str(tmp_path / "b"), num_steps=20,
+          ckpt_every=10, verbose=False, handle_preemption=False)
+    state_b, _ = train(cfg, tcfg, pipe, workdir=str(tmp_path / "b"),
+                       num_steps=30, ckpt_every=10, verbose=False,
+                       handle_preemption=False)
+
+    for pa, pb in zip(jax.tree.leaves(state_a["params"]),
+                      jax.tree.leaves(state_b["params"])):
+        np.testing.assert_allclose(np.asarray(pa), np.asarray(pb),
+                                   rtol=1e-5, atol=1e-6)
+
+
+def test_preemption_checkpoint_and_clean_exit(tmp_path):
+    cfg, tcfg, pipe = _tiny()
+
+    class Boom:
+        def __init__(self):
+            self.n = 0
+
+        def global_batch(self, step):
+            self.n += 1
+            if self.n == 5:
+                os.kill(os.getpid(), signal.SIGTERM)  # simulate preemption
+            return pipe.global_batch(step)
+
+    _, hist = train(cfg, tcfg, Boom(), workdir=str(tmp_path), num_steps=50,
+                    ckpt_every=100, verbose=False, handle_preemption=True)
+    assert len(hist) <= 6, "loop must stop quickly after SIGTERM"
+    from repro.checkpoint import CheckpointManager
+    mgr = CheckpointManager(str(tmp_path / "ckpt"))
+    assert mgr.latest_step() is not None, "preemption must checkpoint"
+
+
+def test_microbatch_equivalence():
+    """grad-accumulated step == single-batch step (same loss, ~same params)."""
+    cfg, _, pipe = _tiny()
+    batch = jax.tree.map(jnp.asarray, pipe.global_batch(0))
+
+    outs = {}
+    for micro in (0, 2):
+        tcfg = TrainConfig(learning_rate=1e-3, warmup_steps=0,
+                           total_steps=10, microbatch=micro, seed=0)
+        init_state, step, _ = make_train_step(cfg, tcfg)
+        state = init_state(jax.random.key(0))
+        state, metrics = jax.jit(step)(state, batch)
+        outs[micro] = (metrics["loss"], state["params"])
+    np.testing.assert_allclose(float(outs[0][0]), float(outs[2][0]),
+                               rtol=1e-4)
+    for a, b in zip(jax.tree.leaves(outs[0][1]), jax.tree.leaves(outs[2][1])):
+        np.testing.assert_allclose(np.asarray(a), np.asarray(b),
+                                   rtol=1e-3, atol=1e-5)
+
+
+def test_compressed_training_converges(tmp_path):
+    cfg, tcfg, pipe = _tiny()
+    tcfg = dataclasses.replace(tcfg, grad_compression="int8")
+    _, hist = train(cfg, tcfg, pipe, workdir=str(tmp_path), num_steps=40,
+                    ckpt_every=100, verbose=False, handle_preemption=False)
+    first = np.mean([h["loss"] for h in hist[:5]])
+    last = np.mean([h["loss"] for h in hist[-5:]])
+    assert last < first - 0.2, f"int8-EF training broken: {first} → {last}"
+
+
+def test_adamw8bit_training_converges(tmp_path):
+    cfg, tcfg, pipe = _tiny()
+    tcfg = dataclasses.replace(tcfg, optimizer="adamw8bit")
+    _, hist = train(cfg, tcfg, pipe, workdir=str(tmp_path), num_steps=40,
+                    ckpt_every=100, verbose=False, handle_preemption=False)
+    first = np.mean([h["loss"] for h in hist[:5]])
+    last = np.mean([h["loss"] for h in hist[-5:]])
+    assert last < first - 0.2, f"8-bit Adam training broken: {first} → {last}"
+
+
+def test_serve_engine_generates(rng):
+    cfg = get_config("llama3-8b", smoke=True)
+    params = tf.init_params(cfg, jax.random.key(0))
+    engine = ServeEngine(cfg, params, s_max=64)
+    prompts = [[1, 2, 3, 4], [7, 8], [5, 5, 5, 5, 5, 5]]
+    res = engine.generate(prompts, max_new=8)
+    assert len(res.tokens) == 3
+    for p, o in zip(prompts, res.tokens):
+        assert o[: len(p)] == p
+        assert len(o) == len(p) + 8
+        assert all(0 <= t < cfg.vocab_size for t in o)
+
+
+def test_serve_engine_greedy_matches_forward(rng):
+    """Engine's first generated token == argmax of a parallel forward."""
+    cfg = get_config("llama3-8b", smoke=True)
+    params = tf.init_params(cfg, jax.random.key(3))
+    engine = ServeEngine(cfg, params, s_max=32)
+    prompt = [3, 1, 4, 1, 5, 9]
+    res = engine.generate([prompt], max_new=1)
+    logits, _ = tf.forward_train(
+        params, cfg, {"tokens": jnp.asarray([prompt], jnp.int32)})
+    want = int(jnp.argmax(logits[0, -1]))
+    assert res.tokens[0][-1] == want
