@@ -1,0 +1,36 @@
+"""Optimal-E sweep: seed per-E pipeline vs incremental multi-E engine.
+
+The acceptance benchmark for the one-pass sweep (ISSUE 1): the seed
+``optimal_E_batch`` re-runs pairwise+top-k per E — O(ΣE·Lp²) — while the
+multi-E engine exploits D_E = D_{E-1} + one rank-1 lag term to emit every
+per-E neighbor table in one O(E_max·Lp²) pass (kernels/knn_multi_e.py).
+Derived column records the speedup; run.py writes it to BENCH_esweep.json
+so the perf trajectory is machine-readable across PRs.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax.numpy as jnp
+
+from benchmarks.common import row, time_fn
+from repro import core
+from repro.data.timeseries import tent_map_panel
+
+L = 4096
+E_MAX = 20
+
+
+def run():
+    x = jnp.asarray(tent_map_panel(1, L, seed=0)[0])
+    old = functools.partial(core.optimal_E_sweep_seed, x, E_max=E_MAX,
+                            tau=1, Tp=1, impl="ref")
+    new = functools.partial(core.rho_curve, x, E_max=E_MAX, tau=1, Tp=1,
+                            impl="ref")
+    us_old = time_fn(old, warmup=1, iters=5, stat="min")
+    us_new = time_fn(new, warmup=1, iters=5, stat="min")
+    row(f"esweep_seed_perE_L{L}_E{E_MAX}", us_old,
+        f"O(sumE_Lp2)_{E_MAX}_pipelines")
+    row(f"esweep_multiE_L{L}_E{E_MAX}", us_new,
+        f"O(Emax_Lp2)_one_pass_speedup{us_old / us_new:.2f}x")

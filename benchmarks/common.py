@@ -8,8 +8,14 @@ import jax
 import numpy as np
 
 
-def time_fn(fn, *args, warmup: int = 1, iters: int = 5) -> float:
-    """Median wall-time (µs) of fn(*args) with block_until_ready."""
+def time_fn(fn, *args, warmup: int = 1, iters: int = 5,
+            stat: str = "median") -> float:
+    """Wall-time (µs) of fn(*args) with block_until_ready.
+
+    ``stat="median"`` for throughput-style rows; ``stat="min"`` for
+    noise-immune comparisons (the min is the least contaminated estimate
+    of intrinsic cost on a shared machine — cf. timeit's docs).
+    """
     for _ in range(warmup):
         jax.block_until_ready(fn(*args))
     times = []
@@ -17,8 +23,23 @@ def time_fn(fn, *args, warmup: int = 1, iters: int = 5) -> float:
         t0 = time.perf_counter()
         jax.block_until_ready(fn(*args))
         times.append(time.perf_counter() - t0)
-    return float(np.median(times) * 1e6)
+    if stat not in ("min", "median"):
+        raise ValueError(f"unknown stat {stat!r}")
+    agg = np.min if stat == "min" else np.median
+    return float(agg(times) * 1e6)
+
+
+_ROWS: list[dict] = []  # rows since the last drain (run.py → JSON artifact)
 
 
 def row(name: str, us: float, derived: str):
     print(f"{name},{us:.1f},{derived}")
+    _ROWS.append({"name": name, "us_per_call": round(us, 1),
+                  "derived": derived})
+
+
+def drain_rows() -> list[dict]:
+    """Return and clear the rows recorded since the last drain."""
+    rows = list(_ROWS)
+    _ROWS.clear()
+    return rows

@@ -1,32 +1,51 @@
 """Benchmark harness — one module per paper table/figure.
 
-Prints ``name,us_per_call,derived`` CSV rows:
+Prints ``name,us_per_call,derived`` CSV rows and, per module, writes a
+machine-readable ``BENCH_<name>.json`` artifact (same rows) to the current
+directory so the perf trajectory is diffable across PRs:
   bench_knn      → paper Figs. 2–3 (all-kNN breakdown vs E)
   bench_lookup   → paper Figs. 4–5 (batched lookups, fused ρ)
   bench_ccm      → paper Table 1 (pairwise CCM, dataset-shaped)
   bench_roofline → paper Figs. 6–9 (arithmetic intensity / roofline)
+  bench_esweep   → ISSUE 1 (seed per-E optimal-E sweep vs multi-E engine)
 """
 
 from __future__ import annotations
 
+import json
 import sys
+
+from benchmarks import common
 
 
 def main() -> None:
-    from benchmarks import bench_ccm, bench_knn, bench_lookup, bench_roofline
+    from benchmarks import (
+        bench_ccm,
+        bench_esweep,
+        bench_knn,
+        bench_lookup,
+        bench_roofline,
+    )
 
     mods = {
         "knn": bench_knn,
         "lookup": bench_lookup,
         "ccm": bench_ccm,
         "roofline": bench_roofline,
+        "esweep": bench_esweep,
     }
     only = sys.argv[1] if len(sys.argv) > 1 else None
     print("name,us_per_call,derived")
     for name, mod in mods.items():
         if only and only != name:
             continue
+        common.drain_rows()
         mod.run()
+        artifact = f"BENCH_{name}.json"
+        with open(artifact, "w") as f:
+            json.dump({"bench": name, "rows": common.drain_rows()}, f,
+                      indent=2)
+            f.write("\n")
 
 
 if __name__ == "__main__":

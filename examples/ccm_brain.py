@@ -56,10 +56,8 @@ def main():
 
     t0 = time.time()
     if args.sharded:
-        from repro.distributed import sharded_ccm_matrix
-        mesh = jax.make_mesh(
-            (args.devices // 2, 2), ("data", "model"),
-            axis_types=(jax.sharding.AxisType.Auto,) * 2)
+        from repro.distributed import make_ccm_mesh, sharded_ccm_matrix
+        mesh = make_ccm_mesh((args.devices // 2, 2), ("data", "model"))
         E = int(np.median(np.asarray(E_opt)))
         rho = np.asarray(sharded_ccm_matrix(panel, panel, E=E, mesh=mesh))
         print(f"sharded CCM matrix ({args.devices} devices, fixed E={E}): "

@@ -6,12 +6,14 @@ cross mapping, S-Map, and stable streaming statistics. The distributed
 pairwise-CCM engine lives in ``repro.distributed.sharded_ccm``.
 """
 
-from repro.core.ccm import ccm_matrix, cross_map
+from repro.core.ccm import ccm_group, ccm_matrix, cross_map
 from repro.core.embedding import delay_embed, embed_offset, num_embedded, pred_rows
 from repro.core.knn import KnnTable, all_knn
 from repro.core.simplex import (
     optimal_E,
     optimal_E_batch,
+    optimal_E_sweep_seed,
+    rho_curve,
     simplex_predict,
     simplex_skill,
 )
@@ -21,6 +23,7 @@ from repro.core.stats import CoMoments, pearson_rows
 __all__ = [
     "KnnTable",
     "all_knn",
+    "ccm_group",
     "ccm_matrix",
     "cross_map",
     "delay_embed",
@@ -29,6 +32,8 @@ __all__ = [
     "pred_rows",
     "optimal_E",
     "optimal_E_batch",
+    "optimal_E_sweep_seed",
+    "rho_curve",
     "simplex_predict",
     "simplex_skill",
     "nonlinearity_test",

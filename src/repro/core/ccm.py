@@ -14,6 +14,7 @@ series sharing that E (§3.4's grouping), fused Pearson ρ.
 from __future__ import annotations
 
 import collections
+import functools
 
 import jax
 import jax.numpy as jnp
@@ -68,6 +69,40 @@ def cross_map(
     return curves[:, 0] if squeeze else curves
 
 
+@functools.partial(jax.jit, static_argnames=("E", "tau", "Tp", "impl"))
+def ccm_group(
+    libs: jax.Array,
+    targets: jax.Array,
+    *,
+    E: int,
+    tau: int = 1,
+    Tp: int = 0,
+    impl: str = "auto",
+) -> jax.Array:
+    """Batched CCM block: every library × every target at one E → (Nl, Nt) ρ.
+
+    One jitted program drives the whole library axis with a sequential
+    ``lax.map`` (one (Lp, Lp) distance matrix in flight — kEDM's
+    per-library loop, minus the host round trip per library), replacing
+    N_lib separate ``cross_map`` dispatches.
+    """
+    L = libs.shape[-1]
+    Lp = num_embedded(L, E, tau)
+    rows = pred_rows(L, E, tau, Tp)
+    off = embed_offset(E, tau, Tp)
+    hard_max = Lp - 1 - max(Tp, 0)
+
+    def one_library(x):
+        D = ops.pairwise_distances(x, E=E, tau=tau, impl=impl)
+        d, i = ops.topk_select(D, k=E + 1, exclude_self=True,
+                               max_idx=hard_max, impl=impl)
+        w = ops.make_weights(d)
+        return ops.lookup_rho(targets, i[:rows], w[:rows], offset=off,
+                              impl=impl)
+
+    return jax.lax.map(one_library, libs)
+
+
 def ccm_matrix(
     X: jax.Array,
     E_opt,
@@ -80,8 +115,9 @@ def ccm_matrix(
 
     Entry (l, t) = skill of cross-mapping series t from series l's manifold
     (evidence "t causes l"). Per kEDM §3.4: the library is embedded at each
-    *target's* optimal E, targets grouped by E so each (library, E) pair
-    costs one kNN + one batched lookup.
+    *target's* optimal E, targets grouped by E so each E-group costs ONE
+    batched ``ccm_group`` launch over the full library axis (the seed ran a
+    host Python loop of N_lib ``cross_map`` calls per group).
     """
     X = jnp.asarray(X)
     N = X.shape[0]
@@ -94,9 +130,7 @@ def ccm_matrix(
     }
     rho = np.zeros((N, N), np.float32)
     for E, members in groups.items():
-        tgt = X[members]
-        for l in range(N):  # library loop — the sharded engine parallelizes this
-            rho[l, members] = np.asarray(
-                cross_map(X[l], tgt, E=E, tau=tau, Tp=Tp, impl=impl)
-            )
+        rho[:, members] = np.asarray(
+            ccm_group(X, X[members], E=E, tau=tau, Tp=Tp, impl=impl)
+        )
     return rho

@@ -9,6 +9,8 @@ excluded (leave-one-out), as in cppEDM's ``EmbedDimension``.
 
 from __future__ import annotations
 
+import functools
+
 import jax
 import jax.numpy as jnp
 
@@ -52,6 +54,57 @@ def simplex_skill(
     return ops.pearson_rows(pred[None, :], truth[None, :])[0]
 
 
+def optimal_E_sweep_seed(
+    x: jax.Array,
+    *,
+    E_max: int = 20,
+    tau: int = 1,
+    Tp: int = 1,
+    impl: str = "auto",
+) -> jax.Array:
+    """ρ(E) via the seed per-E pipeline — kEDM's ``edim`` structure.
+
+    One full pairwise+top-k+lookup per E: O(ΣE·Lp²). Kept as the oracle
+    and benchmark baseline for the incremental multi-E engine below.
+    """
+    return jnp.stack(
+        [simplex_skill(x, E=E, tau=tau, Tp=Tp, impl=impl)
+         for E in range(1, E_max + 1)]
+    )
+
+
+@functools.partial(jax.jit, static_argnames=("E_max", "tau", "Tp", "impl"))
+def rho_curve(
+    x: jax.Array,
+    *,
+    E_max: int = 20,
+    tau: int = 1,
+    Tp: int = 1,
+    impl: str = "auto",
+) -> jax.Array:
+    """ρ(E) for E = 1..E_max via the incremental multi-E engine — (E_max,).
+
+    One ``all_knn_multi_e`` call replaces the seed's E_max kernel
+    pipelines: the distance recurrence D_E = D_{E-1} + one lag term makes
+    the whole sweep O(E_max·Lp²). Per-E lookups are cheap static slices
+    of the stacked tables.
+    """
+    L = x.shape[-1]
+    # Neighbors must themselves have a Tp-ahead value inside the series.
+    mx = tuple(num_embedded(L, E, tau) - 1 - Tp for E in range(1, E_max + 1))
+    d, i = ops.all_knn_multi_e(x, E_max=E_max, tau=tau, exclude_self=True,
+                               max_idx=mx, impl=impl)
+    rhos = []
+    for E in range(1, E_max + 1):
+        rows = pred_rows(L, E, tau, Tp)
+        off = embed_offset(E, tau, Tp)
+        w = ops.make_weights(d[E - 1, :rows, :E + 1])
+        rhos.append(
+            ops.lookup_rho(x[None, :], i[E - 1, :rows, :E + 1], w,
+                           offset=off, impl=impl)[0])
+    return jnp.stack(rhos)
+
+
 def optimal_E(
     x: jax.Array,
     *,
@@ -60,16 +113,16 @@ def optimal_E(
     Tp: int = 1,
     impl: str = "auto",
 ) -> tuple[int, jax.Array]:
-    """Sweep E = 1..E_max, return (best E, ρ per E).
-
-    Shapes differ per E, so this is a host loop of jitted per-E computations
-    — exactly kEDM's ``edim`` structure.
-    """
-    rhos = jnp.stack(
-        [simplex_skill(x, E=E, tau=tau, Tp=Tp, impl=impl)
-         for E in range(1, E_max + 1)]
-    )
+    """Sweep E = 1..E_max, return (best E, ρ per E) — one engine call."""
+    rhos = rho_curve(x, E_max=E_max, tau=tau, Tp=Tp, impl=impl)
     return int(jnp.argmax(rhos)) + 1, rhos
+
+
+@functools.partial(jax.jit, static_argnames=("E_max", "tau", "Tp", "impl"))
+def _rho_curves(X, *, E_max, tau, Tp, impl):
+    # jitted wrapper: an eagerly-dispatched lax.map re-traces per call
+    fn = functools.partial(rho_curve, E_max=E_max, tau=tau, Tp=Tp, impl=impl)
+    return jax.lax.map(fn, X)  # sequential: bounds peak memory
 
 
 def optimal_E_batch(
@@ -82,11 +135,9 @@ def optimal_E_batch(
 ) -> tuple[jax.Array, jax.Array]:
     """Per-series optimal E for a (N, L) batch → (E_opt (N,) i32, ρ (N, E_max)).
 
-    vmapped over series per E (one pairwise matrix per series in flight).
+    One multi-E engine call per series (sequential ``lax.map``: bounds
+    peak memory at one series' accumulator), instead of the seed's
+    E_max × N kernel pipelines.
     """
-    rhos = []
-    for E in range(1, E_max + 1):
-        fn = lambda s: simplex_skill(s, E=E, tau=tau, Tp=Tp, impl=impl)
-        rhos.append(jax.lax.map(fn, X))  # sequential: bounds peak memory
-    rho = jnp.stack(rhos, axis=1)  # (N, E_max)
+    rho = _rho_curves(X, E_max=E_max, tau=tau, Tp=Tp, impl=impl)  # (N, E_max)
     return (jnp.argmax(rho, axis=1) + 1).astype(jnp.int32), rho

@@ -3,6 +3,12 @@ tolerance. The shard_map CCM engine is the multi-node scale story of the
 paper's predecessor (mpEDM on ABCI: whole-brain causal maps) expressed as
 one SPMD program instead of MPI ranks."""
 
-from repro.distributed.sharded_ccm import pad_to_multiple, sharded_ccm_matrix
+from repro.distributed.sharded_ccm import (
+    make_ccm_mesh,
+    pad_to_multiple,
+    sharded_ccm_matrix,
+    sharded_optimal_E,
+)
 
-__all__ = ["sharded_ccm_matrix", "pad_to_multiple"]
+__all__ = ["make_ccm_mesh", "sharded_ccm_matrix", "sharded_optimal_E",
+           "pad_to_multiple"]

@@ -63,7 +63,8 @@ def allreduce_compressed(g: jax.Array, axis: str, kind: str):
     int8: all_gather the (q, scale) payload (1 byte + 4/256 per element)
     and dequantize-sum locally. bf16: psum in bf16. none: psum fp32.
     """
-    n = jax.lax.axis_size(axis)
+    from repro.compat import axis_size
+    n = axis_size(axis)
     if kind == "none":
         return jax.lax.pmean(g, axis)
     if kind == "bf16":

@@ -25,6 +25,9 @@ from jax.sharding import PartitionSpec as P
 from repro.core.embedding import embed_offset, num_embedded, pred_rows
 from repro.kernels import ops
 
+from repro.compat import make_mesh as make_ccm_mesh  # noqa: F401 (re-export)
+from repro.compat import shard_map as _shard_map
+
 
 def pad_to_multiple(x: jax.Array, multiple: int, axis: int = 0) -> jax.Array:
     """Zero-pad ``axis`` up to a multiple (devices need equal blocks)."""
@@ -80,13 +83,48 @@ def sharded_ccm_matrix(
         _local_block, E=E, tau=tau, Tp=Tp, rows=rows, off=off,
         hard_max=hard_max, impl=impl,
     )
-    mapped = jax.shard_map(
+    mapped = _shard_map(
         fn,
         mesh=mesh,
         in_specs=(P(lib_axes, None), P(tgt_axes, None)),
         out_specs=P(lib_axes, tgt_axes),
     )
     return mapped(X_lib, X_tgt)
+
+
+def sharded_optimal_E(
+    X: jax.Array,
+    *,
+    E_max: int = 20,
+    tau: int = 1,
+    Tp: int = 1,
+    mesh: jax.sharding.Mesh,
+    axes=("data",),
+    impl: str = "ref",
+) -> tuple[jax.Array, jax.Array]:
+    """Per-series optimal E on a device mesh → (E_opt (N,), ρ (N, E_max)).
+
+    Series are sharded over ``axes``; each device runs the incremental
+    multi-E engine (ONE all-kNN pass per local series instead of E_max
+    pipelines — see kernels/knn_multi_e.py) on its shard with no
+    collectives at all. This is the in-shard front half of the whole-brain
+    CCM workload: the E_opt it emits feeds ``core.ccm.ccm_matrix``'s
+    E-grouping or per-group ``sharded_ccm_matrix`` calls.
+
+    N must divide evenly over ``axes`` (use pad_to_multiple).
+    """
+    from repro.core.simplex import optimal_E_batch
+
+    def local(Xl):  # the local driver, verbatim, on the shard's series
+        return optimal_E_batch(Xl, E_max=E_max, tau=tau, Tp=Tp, impl=impl)
+
+    mapped = _shard_map(
+        local,
+        mesh=mesh,
+        in_specs=(P(axes, None),),
+        out_specs=(P(axes), P(axes, None)),
+    )
+    return mapped(X)
 
 
 def ccm_step(X: jax.Array, *, E: int, tau: int, mesh: jax.sharding.Mesh,

@@ -114,6 +114,36 @@ def all_knn(
                        impl=impl)
 
 
+def all_knn_multi_e(
+    x: jax.Array,
+    *,
+    E_max: int,
+    tau: int = 1,
+    k: int | None = None,
+    exclude_self: bool = True,
+    max_idx=None,
+    impl: str = "auto",
+    block: tuple[int, int] = (128, 1024),
+) -> tuple[jax.Array, jax.Array]:
+    """Incremental all-kNN for every E in 1..E_max in ONE O(E_max·Lp²) pass.
+
+    Returns (dists, idx), both (E_max, Lp_1, k_max) padded with inf/-1;
+    ``[E-1, :Lp_E, :k_E]`` equals the per-E ``pairwise_distances`` +
+    ``topk_select`` result. This is the optimal-E sweep engine: the seed
+    per-E pipeline costs O(ΣE·Lp²); the recurrence D_E = D_{E-1} + one
+    rank-1 lag term collapses it (see kernels/knn_multi_e.py).
+    """
+    impl = _resolve(impl)
+    if impl == "ref":
+        return _ref.all_knn_multi_e(
+            x, E_max=E_max, tau=tau, k=k, exclude_self=exclude_self,
+            max_idx=max_idx)
+    from repro.kernels.knn_multi_e import all_knn_multi_e as _multi_e
+    return _multi_e(
+        x, E_max=E_max, tau=tau, k=k, exclude_self=exclude_self,
+        max_idx=max_idx, block=block, interpret=(impl == "interpret"))
+
+
 def lookup(
     Y: jax.Array,
     idx: jax.Array,

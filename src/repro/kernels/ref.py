@@ -20,6 +20,7 @@ import functools
 
 import jax
 import jax.numpy as jnp
+import numpy as np
 
 _INF = jnp.float32(jnp.inf)
 
@@ -97,10 +98,17 @@ def make_weights(dists: jax.Array, eps: float = 1e-30) -> jax.Array:
     w_i = exp(-d_i / d_min) normalized to sum 1; d_min is the nearest
     distance, guarded so exact-duplicate neighbors dominate (cppEDM
     semantics).
+
+    Rows with *no* valid neighbor (all-inf distances, e.g. from an
+    aggressive ``max_idx`` cap) get all-zero weights instead of NaN:
+    inf/inf ratios are forced to inf (→ zero weight) and the normalizer
+    is clamped away from zero.
     """
     d_min = jnp.maximum(dists[..., :1], eps)
-    w = jnp.exp(-dists / d_min)
-    return w / jnp.sum(w, axis=-1, keepdims=True)
+    ratio = jnp.where(jnp.isfinite(d_min), dists / d_min, jnp.inf)
+    w = jnp.exp(-ratio)
+    s = jnp.sum(w, axis=-1, keepdims=True)
+    return jnp.where(s > 0, w / jnp.maximum(s, eps), 0.0)
 
 
 @functools.partial(jax.jit, static_argnames=("offset",))
@@ -132,6 +140,171 @@ def lookup_rho(
     Lp = idx.shape[0]
     yt = jax.lax.dynamic_slice_in_dim(Y, offset, Lp, axis=-1)
     return pearson_rows(yhat, yt)
+
+
+# --------------------------------------------------------------------------
+# Incremental multi-E all-kNN (the one-pass optimal-E sweep engine).
+#
+# D_E = D_{E-1} + the rank-1 lag term (x[i+(E-1)τ] − x[j+(E-1)τ])², so the
+# full stack of per-E neighbor tables costs one O(E_max·Lp²) accumulation
+# instead of the O(ΣE·Lp²) of re-running the pairwise kernel per E.
+# Outputs are padded to the E=1 shape: (E_max, Lp_1, k_max) with Lp_1 = L,
+# k_max = max-per-E k; padding is dist=inf / idx=PAD_IDX.
+# --------------------------------------------------------------------------
+
+PAD_IDX = -1  # idx padding outside the valid (Lp_E, k_E) block per level
+
+_CHUNK_W = 32  # column-chunk width of the two-stage top-k; power of two
+
+
+def _chunked_topk(neg: jax.Array, k: int) -> tuple[jax.Array, jax.Array]:
+    """Exact top-k (largest) per row via a chunk-max prefilter.
+
+    Two-stage selection: (1) reduce each row to per-chunk maxima and pick
+    the k best chunks, (2) run the real top_k over only those chunks'
+    k·W candidates — ~W/k× fewer elements through the (single-threaded,
+    ~2ns/elem) XLA-CPU TopK scan. The chunk maxima are computed with a
+    pairwise elementwise max tree, NOT ``jnp.max(axis=-1)``: the XLA CPU
+    reduce emitter goes scalar on this shape when its input is an
+    in-graph accumulator (~15× slower than the tree; measured).
+
+    EXACT, ties included: if a chunk holding a true top-k element v were
+    not selected, each of the k selected chunks contributes a maximum
+    outranking v (greater value, or equal value in an earlier chunk —
+    stage-1 top_k is stable), giving v ≥ k predecessors — contradiction.
+    Sorting the selected chunk ids keeps candidates in global column
+    order, so stage-2 tie-breaking equals full-row stability; -inf pads
+    (last chunk only) can never displace a real candidate.
+    """
+    Lr, Lc = neg.shape
+    C = -(-Lc // _CHUNK_W)
+    if k >= C or Lc <= 4 * _CHUNK_W:  # prefilter can't shrink the scan
+        nd, ik = jax.lax.top_k(neg, k)
+        return nd, ik.astype(jnp.int32)
+    if C * _CHUNK_W != Lc:
+        neg = jnp.pad(neg, ((0, 0), (0, C * _CHUNK_W - Lc)),
+                      constant_values=-jnp.inf)
+    neg3 = neg.reshape(Lr, C, _CHUNK_W)
+    m, w = neg3, _CHUNK_W
+    while w > 1:  # vectorized pairwise max tree → (Lr, C) chunk maxima
+        m = jnp.maximum(m[..., :w // 2], m[..., w // 2:w])
+        w //= 2
+    _, cid = jax.lax.top_k(m[..., 0], k)
+    cid = jnp.sort(cid, axis=1)  # global column order → stable ties
+    cand = jnp.take_along_axis(neg3, cid[:, :, None], axis=1)
+    gidx = (cid[:, :, None] * _CHUNK_W
+            + jnp.arange(_CHUNK_W, dtype=cid.dtype)[None, None, :])
+    nd, pos = jax.lax.top_k(cand.reshape(Lr, k * _CHUNK_W), k)
+    ik = jnp.take_along_axis(gidx.reshape(Lr, k * _CHUNK_W), pos, axis=1)
+    return nd, ik.astype(jnp.int32)
+
+
+def multi_e_ks(E_max: int, k: int | None) -> tuple[int, ...]:
+    """Per-level neighbor counts: k_E = E+1 (simplex default) or uniform k."""
+    if E_max < 1:
+        raise ValueError(f"E_max must be >= 1, got {E_max}")
+    if k is None:
+        return tuple(e + 2 for e in range(E_max))  # E = e+1 → k = E+1
+    return (int(k),) * E_max
+
+
+def multi_e_max_idx(L: int, E_max: int, tau: int, max_idx) -> tuple[int, ...]:
+    """Per-level candidate caps, clamped to the level's last valid index.
+
+    ``max_idx`` may be None (no user cap), a python int, or a static
+    (E_max,) sequence of ints (e.g. ``Lp_E − 1 − Tp`` for optimal-E's
+    horizon-validity constraint). Static on purpose: the caps bake into
+    the accumulation stream as constants (see ``_all_knn_multi_e``), and
+    every caller derives them from already-static (L, E_max, tau, Tp).
+    """
+    base = [L - e * tau - 1 for e in range(E_max)]
+    if max_idx is None:
+        return tuple(base)
+    mx = np.broadcast_to(np.asarray(max_idx, np.int64), (E_max,))
+    return tuple(int(min(m, b)) for m, b in zip(mx, base))
+
+
+def pad_multi_e_tables(
+    dists: jax.Array, idx: jax.Array, *, E_max: int, tau: int,
+    ks: tuple[int, ...],
+) -> tuple[jax.Array, jax.Array]:
+    """Force dist=inf / idx=PAD_IDX outside each level's (Lp_E, k_E) block."""
+    L = dists.shape[1]
+    lev = jnp.arange(E_max, dtype=jnp.int32)[:, None, None]
+    rows = jnp.arange(L, dtype=jnp.int32)[None, :, None]
+    kcol = jnp.arange(dists.shape[2], dtype=jnp.int32)[None, None, :]
+    ks_a = jnp.asarray(ks, jnp.int32)[:, None, None]
+    valid = (rows < L - lev * tau) & (kcol < ks_a)
+    return (jnp.where(valid, dists, _INF),
+            jnp.where(valid, idx, jnp.int32(PAD_IDX)))
+
+
+@functools.partial(jax.jit, static_argnames=("E_max", "tau", "ks", "mxs",
+                                             "exclude_self"))
+def _all_knn_multi_e(x, *, E_max, tau, ks, mxs, exclude_self):
+    # Invalidity is monotone when the caps are non-increasing (always true
+    # for the defaults and for optimal-E's Lp_E−1−Tp caps): a column masked
+    # at level e stays masked at every later level. Then masking FUSES into
+    # the accumulation stream — the accumulator holds *negated* distances
+    # with invalid entries stuck at −inf (−inf − d² = −inf), and the level
+    # extraction runs directly on it: one read-modify-write of the matrix
+    # per level, no separate masked copy. (Negating the accumulator
+    # instead of the top_k input is bit-exact: f32 rounding commutes with
+    # negation.)
+    L = x.shape[-1]
+    k_max = max(ks)
+    xpad = jnp.pad(x.astype(jnp.float32), (0, (E_max - 1) * tau))
+    cols = jax.lax.broadcasted_iota(jnp.int32, (L, L), 1)
+    rows = jax.lax.broadcasted_iota(jnp.int32, (L, L), 0)
+    sticky = all(b <= a for a, b in zip(mxs, mxs[1:]))
+    acc = jnp.zeros((L, L), jnp.float32)
+    outs_d, outs_i = [], []
+    for e in range(E_max):  # level e ↔ embedding dim E = e+1
+        xk = jax.lax.dynamic_slice_in_dim(xpad, e * tau, L, axis=-1)
+        d = xk[:, None] - xk[None, :]
+        invalid = cols > mxs[e]
+        if exclude_self and (e == 0 or not sticky):
+            invalid = invalid | (cols == rows)
+        if sticky:
+            acc = jnp.where(invalid, -_INF, acc - d * d)
+            neg = acc
+        else:  # non-monotone caps: mask a per-level copy instead
+            acc = acc - d * d
+            neg = jnp.where(invalid, -_INF, acc)
+        # Rows ≥ Lp_E are garbage (x-padding) but cheap — the extraction
+        # scans them and the final pad mask discards them; this avoids a
+        # strided slice copy per level.
+        nd, ik = _chunked_topk(neg, ks[e])
+        pad = k_max - ks[e]
+        outs_d.append(jnp.pad(jnp.sqrt(jnp.maximum(-nd, 0.0)),
+                              ((0, 0), (0, pad)), constant_values=jnp.inf))
+        outs_i.append(jnp.pad(ik, ((0, 0), (0, pad)),
+                              constant_values=PAD_IDX))
+    return jnp.stack(outs_d), jnp.stack(outs_i)
+
+
+def all_knn_multi_e(
+    x: jax.Array,
+    *,
+    E_max: int,
+    tau: int = 1,
+    k: int | None = None,
+    exclude_self: bool = True,
+    max_idx=None,
+) -> tuple[jax.Array, jax.Array]:
+    """Neighbor tables for *every* E in 1..E_max in one incremental pass.
+
+    Returns (dists, idx), both (E_max, L, k_max): slice ``[E-1, :Lp_E, :k_E]``
+    for the table at dimension E — identical to running ``pairwise_distances``
+    + ``topk_select`` at that E. Padding is dist=inf / idx=PAD_IDX.
+    """
+    L = x.shape[-1]
+    num_embedded(L, E_max, tau)  # raises on too-short series
+    ks = multi_e_ks(E_max, k)
+    mxs = multi_e_max_idx(L, E_max, tau, max_idx)
+    d, i = _all_knn_multi_e(x, E_max=E_max, tau=tau, ks=ks, mxs=mxs,
+                            exclude_self=exclude_self)
+    return pad_multi_e_tables(d, i, E_max=E_max, tau=tau, ks=ks)
 
 
 def pearson_rows(a: jax.Array, b: jax.Array) -> jax.Array:

@@ -5,14 +5,15 @@ from __future__ import annotations
 
 import jax
 
+from repro.compat import make_mesh as _make_mesh
+
 
 def make_production_mesh(*, multi_pod: bool = False) -> jax.sharding.Mesh:
     """Single pod: (16, 16) over ("data", "model") — 256 chips (v5e pod).
     Multi-pod: (2, 16, 16) over ("pod", "data", "model") — 512 chips."""
     shape = (2, 16, 16) if multi_pod else (16, 16)
     axes = ("pod", "data", "model") if multi_pod else ("data", "model")
-    return jax.make_mesh(
-        shape, axes, axis_types=(jax.sharding.AxisType.Auto,) * len(axes))
+    return _make_mesh(shape, axes)
 
 
 def dp_axes(mesh: jax.sharding.Mesh):
@@ -32,5 +33,4 @@ def axis_size(mesh: jax.sharding.Mesh, axes) -> int:
 def make_test_mesh(shape=(2, 2), axes=("data", "model")) -> jax.sharding.Mesh:
     """Small mesh for CPU multi-device tests (subprocess with forced
     host device count)."""
-    return jax.make_mesh(
-        shape, axes, axis_types=(jax.sharding.AxisType.Auto,) * len(axes))
+    return _make_mesh(shape, axes)

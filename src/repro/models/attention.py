@@ -359,7 +359,8 @@ def gqa_decode_seqpar(p, cfg, x, cache, pos):
         return out, ck2, cv2
 
     shard_ids = jnp.arange(n_model, dtype=jnp.int32)
-    out, ck, cv = jax.shard_map(
+    from repro.compat import shard_map
+    out, ck, cv = shard_map(
         body, mesh=mesh,
         in_specs=(P("model"),
                   P(bspec, None, None, None, None),

@@ -136,7 +136,8 @@ def moe_apply(p, cfg, x):
             return _moe_local(x, router, wg, wu, wd, sid[0],
                               k=k, E=E, cf=cf, dp_names=dp_names)
 
-        y, aux = jax.shard_map(
+        from repro.compat import shard_map
+        y, aux = shard_map(
             shard_fn, mesh=mesh,
             in_specs=(P(batch_spec, None, None), P(None, None),
                       P("model"), P("model"), P("model"), P("model")),

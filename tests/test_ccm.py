@@ -11,7 +11,12 @@ import jax.numpy as jnp
 
 from repro import core
 from repro.data import timeseries as ts
-from repro.distributed import pad_to_multiple, sharded_ccm_matrix
+from repro.distributed import (
+    make_ccm_mesh,
+    pad_to_multiple,
+    sharded_ccm_matrix,
+    sharded_optimal_E,
+)
 
 
 def _coupled(n=600):
@@ -72,13 +77,25 @@ def test_sharded_ccm_matches_local_single_device():
     panel, _ = ts.forced_network_panel(6, 300, seed=9)
     X = jnp.asarray(panel)
     E = 2
-    mesh = jax.make_mesh((1, 1), ("data", "model"),
-                         axis_types=(jax.sharding.AxisType.Auto,) * 2)
+    mesh = make_ccm_mesh((1, 1), ("data", "model"))
     rho_sharded = np.asarray(
         sharded_ccm_matrix(X, X, E=E, mesh=mesh, impl="ref")
     )
     rho_local = core.ccm_matrix(X, np.full(6, E, np.int32))
     np.testing.assert_allclose(rho_sharded, rho_local, rtol=1e-4, atol=1e-4)
+
+
+def test_sharded_optimal_E_matches_local():
+    """In-shard multi-E tables ≡ the local optimal_E_batch driver."""
+    panel, _ = ts.forced_network_panel(4, 220, seed=13)
+    X = jnp.asarray(panel)
+    mesh = make_ccm_mesh((1,), ("data",))
+    E_s, rho_s = sharded_optimal_E(X, E_max=5, mesh=mesh, axes=("data",),
+                                   impl="ref")
+    E_l, rho_l = core.optimal_E_batch(X, E_max=5, impl="ref")
+    np.testing.assert_array_equal(np.asarray(E_s), np.asarray(E_l))
+    np.testing.assert_allclose(np.asarray(rho_s), np.asarray(rho_l),
+                               rtol=1e-5, atol=1e-5)
 
 
 def test_pad_to_multiple():
@@ -96,14 +113,21 @@ def test_sharded_ccm_multidevice_subprocess():
         import numpy as np, jax, jax.numpy as jnp
         from repro import core
         from repro.data import timeseries as ts
-        from repro.distributed import sharded_ccm_matrix
+        from repro.distributed import (
+            make_ccm_mesh, sharded_ccm_matrix, sharded_optimal_E)
         panel, _ = ts.forced_network_panel(8, 240, seed=11)
         X = jnp.asarray(panel)
-        mesh = jax.make_mesh((4, 2), ("data", "model"),
-                             axis_types=(jax.sharding.AxisType.Auto,) * 2)
+        mesh = make_ccm_mesh((4, 2), ("data", "model"))
         rho_s = np.asarray(sharded_ccm_matrix(X, X, E=2, mesh=mesh, impl="ref"))
         rho_l = core.ccm_matrix(X, np.full(8, 2, np.int32))
         np.testing.assert_allclose(rho_s, rho_l, rtol=1e-3, atol=1e-3)
+        mesh1 = make_ccm_mesh((8,), ("data",))
+        E_s, rho_es = sharded_optimal_E(X, E_max=4, mesh=mesh1,
+                                        axes=("data",), impl="ref")
+        E_l, rho_el = core.optimal_E_batch(X, E_max=4, impl="ref")
+        np.testing.assert_array_equal(np.asarray(E_s), np.asarray(E_l))
+        np.testing.assert_allclose(np.asarray(rho_es), np.asarray(rho_el),
+                                   rtol=1e-3, atol=1e-3)
         print("SHARDED_OK")
     """)
     env = dict(os.environ)

@@ -1,0 +1,131 @@
+"""cross_map lib-size sweeps and max_idx/exclude_self vs a numpy oracle.
+
+The oracle re-implements the whole simplex cross-map pipeline (embed,
+mask, k-NN by stable argsort, exponential weights, lookup, Pearson) in
+plain numpy with no shared code, so any indexing or masking slip in the
+jax path shows up as a mismatch rather than cancelling out.
+"""
+
+import numpy as np
+import jax.numpy as jnp
+
+from repro import core
+from repro.data import timeseries as ts
+from repro.kernels import ref
+
+
+def np_embed(x, E, tau):
+    Lp = len(x) - (E - 1) * tau
+    return np.stack([x[k * tau:k * tau + Lp] for k in range(E)], axis=1)
+
+
+def np_cross_map(lib, targets, *, E, tau=1, Tp=0, lib_size=None,
+                 exclude_self=True):
+    """Brute-force CCM skill of each target from lib's manifold, (N,)."""
+    lib = np.asarray(lib, np.float32)
+    targets = np.asarray(targets, np.float32)
+    Z = np_embed(lib, E, tau)
+    Lp = Z.shape[0]
+    rows = Lp - max(Tp, 0)
+    off = (E - 1) * tau + Tp
+    k = E + 1
+    D = ((Z[:, None, :] - Z[None, :, :]) ** 2).sum(-1)
+    hard_max = Lp - 1 - max(Tp, 0)
+    cap = hard_max if lib_size is None else min(lib_size - 1, hard_max)
+    mask = np.arange(Lp)[None, :] > cap
+    if exclude_self:
+        mask = mask | np.eye(Lp, dtype=bool)
+    Dm = np.where(mask, np.inf, D)
+    idx = np.argsort(Dm, axis=1, kind="stable")[:, :k]
+    d = np.sqrt(np.take_along_axis(Dm, idx, axis=1))
+    w = np.exp(-d / np.maximum(d[:, :1], 1e-30))
+    w = w / w.sum(axis=1, keepdims=True)
+    g = targets[:, idx[:rows] + off]                    # (N, rows, k)
+    yhat = (g * w[None, :rows]).sum(-1)                 # (N, rows)
+    yt = targets[:, off:off + rows]
+    out = []
+    for n in range(targets.shape[0]):
+        a = yhat[n] - yhat[n].mean()
+        b = yt[n] - yt[n].mean()
+        denom = np.sqrt((a * a).sum() * (b * b).sum())
+        out.append((a * b).sum() / denom if denom > 0 else 0.0)
+    return np.asarray(out, np.float32)
+
+
+def _coupled(n):
+    x, y = ts.coupled_logistic(n, b_xy=0.0, b_yx=0.32, seed=3)
+    return np.asarray(x, np.float32), np.asarray(y, np.float32)
+
+
+def test_cross_map_matches_numpy_oracle():
+    x, y = _coupled(400)
+    for E, tau, Tp in ((2, 1, 0), (3, 2, 1)):
+        want = np_cross_map(y, x[None, :], E=E, tau=tau, Tp=Tp)
+        got = np.asarray(core.cross_map(jnp.asarray(y), jnp.asarray(x),
+                                        E=E, tau=tau, Tp=Tp))
+        np.testing.assert_allclose(got, want[0], rtol=1e-3, atol=2e-3)
+
+
+def test_cross_map_lib_sizes_sweep_matches_oracle():
+    """The convergence sweep (CCM's causality criterion) point by point."""
+    x, y = _coupled(500)
+    sizes = (25, 60, 150, 300, 10_000)  # last one over-caps → hard_max
+    got = np.asarray(core.cross_map(jnp.asarray(y), jnp.asarray(x), E=2,
+                                    lib_sizes=sizes))
+    for s, g in zip(sizes, got):
+        want = np_cross_map(y, x[None, :], E=2, lib_size=s)
+        np.testing.assert_allclose(g, want[0], rtol=1e-3, atol=2e-3,
+                                   err_msg=f"lib_size={s}")
+
+
+def test_cross_map_exclude_self_matches_oracle():
+    x, y = _coupled(350)
+    for excl in (True, False):
+        want = np_cross_map(y, np.stack([x, y]), E=2, exclude_self=excl)
+        got = np.asarray(core.cross_map(jnp.asarray(y),
+                                        jnp.asarray(np.stack([x, y])),
+                                        E=2, exclude_self=excl))
+        np.testing.assert_allclose(got, want, rtol=1e-3, atol=2e-3)
+    # with self allowed, mapping a series onto itself is (near-)perfect
+    rho_self = float(core.cross_map(jnp.asarray(y), jnp.asarray(y), E=2,
+                                    exclude_self=False))
+    assert rho_self > 0.999
+
+
+def test_topk_max_idx_exclude_self_interaction(rng):
+    """All four (max_idx, exclude_self) combinations vs stable argsort."""
+    x = rng.normal(size=120).astype(np.float32)
+    D = np.asarray(ref.pairwise_distances(jnp.asarray(x), E=3, tau=1))
+    Lp = D.shape[0]
+    for cap in (None, 0, 5, 40, Lp - 1):
+        for excl in (True, False):
+            mask = np.zeros((Lp, Lp), bool)
+            if cap is not None:
+                mask |= np.arange(Lp)[None, :] > cap
+            if excl:
+                mask |= np.eye(Lp, dtype=bool)
+            Dm = np.where(mask, np.inf, D)
+            want_i = np.argsort(Dm, axis=1, kind="stable")[:, :4]
+            want_d = np.sqrt(np.take_along_axis(Dm, want_i, axis=1))
+            got_d, got_i = ref.topk_select(jnp.asarray(D), k=4,
+                                           exclude_self=excl, max_idx=cap)
+            np.testing.assert_array_equal(np.asarray(got_i), want_i,
+                                          err_msg=f"cap={cap} excl={excl}")
+            np.testing.assert_allclose(np.asarray(got_d), want_d,
+                                       rtol=1e-5, atol=1e-5)
+
+
+def test_multi_e_max_idx_matches_capped_oracle(rng):
+    """The engine's per-level caps reproduce capped per-E argsort tables."""
+    x = rng.normal(size=90).astype(np.float32)
+    cap = 30
+    d, i = ref.all_knn_multi_e(jnp.asarray(x), E_max=3, tau=1, max_idx=cap)
+    for E in (1, 2, 3):
+        Lp = 90 - (E - 1)
+        Z = np_embed(x, E, 1)
+        D = ((Z[:, None, :] - Z[None, :, :]) ** 2).sum(-1)
+        Dm = np.where((np.arange(Lp)[None, :] > cap) | np.eye(Lp, dtype=bool),
+                      np.inf, D)
+        want_i = np.argsort(Dm, axis=1, kind="stable")[:, :E + 1]
+        np.testing.assert_array_equal(np.asarray(i[E - 1, :Lp, :E + 1]),
+                                      want_i)

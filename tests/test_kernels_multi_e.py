@@ -1,0 +1,157 @@
+"""Incremental multi-E all-kNN engine ≡ the per-E two-kernel pipeline."""
+
+import numpy as np
+import jax.numpy as jnp
+import pytest
+
+from repro import core
+from repro.data import timeseries as ts
+from repro.kernels import ops, ref
+
+
+def _check_against_per_E(x, d, i, *, E_max, tau, ks, max_idx=None,
+                         exclude_self=True):
+    """Every level of the stacked tables equals its per-E oracle; padding
+    outside each level's (Lp_E, k_E) block is inf / -1."""
+    L = x.shape[-1]
+    k_max = max(ks)
+    assert d.shape == i.shape == (E_max, L, k_max)
+    for E in range(1, E_max + 1):
+        Lp = L - (E - 1) * tau
+        kE = ks[E - 1]
+        mx = None if max_idx is None else min(max_idx, Lp - 1)
+        D = ref.pairwise_distances(x, E=E, tau=tau)
+        want_d, want_i = ref.topk_select(D, k=kE, exclude_self=exclude_self,
+                                         max_idx=mx)
+        np.testing.assert_array_equal(np.asarray(i[E - 1, :Lp, :kE]),
+                                      np.asarray(want_i), err_msg=f"E={E}")
+        np.testing.assert_allclose(np.asarray(d[E - 1, :Lp, :kE]),
+                                   np.asarray(want_d), rtol=1e-5, atol=1e-5,
+                                   err_msg=f"E={E}")
+        assert np.all(np.isinf(np.asarray(d[E - 1, Lp:, :])))
+        assert np.all(np.asarray(i[E - 1, Lp:, :]) == ref.PAD_IDX)
+        assert np.all(np.isinf(np.asarray(d[E - 1, :, kE:])))
+        assert np.all(np.asarray(i[E - 1, :, kE:]) == ref.PAD_IDX)
+
+
+@pytest.mark.parametrize("L,E_max,tau,k", [
+    (137, 5, 2, None),
+    (200, 1, 1, None),
+    (96, 8, 1, 4),      # uniform-k override
+    (193, 6, 3, None),  # partial tiles at every level
+])
+def test_ref_multi_e_matches_per_E(rng, L, E_max, tau, k):
+    x = jnp.asarray(rng.normal(size=L).astype(np.float32))
+    d, i = ref.all_knn_multi_e(x, E_max=E_max, tau=tau, k=k)
+    _check_against_per_E(x, d, i, E_max=E_max, tau=tau,
+                         ks=ref.multi_e_ks(E_max, k))
+
+
+@pytest.mark.parametrize("L,E_max,tau,k,block", [
+    (137, 5, 2, None, (16, 128)),   # gj > 1: streaming merge across tiles
+    (200, 1, 1, None, (32, 128)),
+    (96, 8, 1, 4, (8, 128)),
+    (300, 4, 1, None, (64, 128)),   # 3 column tiles, partial last tile
+])
+def test_interpret_kernel_matches_ref(rng, L, E_max, tau, k, block):
+    x = jnp.asarray(rng.normal(size=L).astype(np.float32))
+    want_d, want_i = ref.all_knn_multi_e(x, E_max=E_max, tau=tau, k=k)
+    got_d, got_i = ops.all_knn_multi_e(x, E_max=E_max, tau=tau, k=k,
+                                       impl="interpret", block=block)
+    np.testing.assert_array_equal(np.asarray(got_i), np.asarray(want_i))
+    np.testing.assert_allclose(np.asarray(got_d), np.asarray(want_d),
+                               rtol=1e-6, atol=1e-6)
+
+
+def test_interpret_kernel_max_idx_and_no_self(rng):
+    x = jnp.asarray(rng.normal(size=150).astype(np.float32))
+    for excl in (True, False):
+        want_d, want_i = ref.all_knn_multi_e(x, E_max=4, tau=1, max_idx=40,
+                                             exclude_self=excl)
+        got_d, got_i = ops.all_knn_multi_e(x, E_max=4, tau=1, max_idx=40,
+                                           exclude_self=excl,
+                                           impl="interpret", block=(16, 128))
+        assert int(np.asarray(got_i).max()) <= 40
+        np.testing.assert_array_equal(np.asarray(got_i), np.asarray(want_i))
+        np.testing.assert_allclose(np.asarray(got_d), np.asarray(want_d),
+                                   rtol=1e-6, atol=1e-6)
+
+
+def test_interpret_kernel_fewer_valid_candidates_than_k(rng):
+    """Regression: rows with < k valid candidates must emit distinct
+    (lowest-index) fill entries, not the same index repeated — removal in
+    the streaming merge has to be by index, since inf entries can't be
+    retired by setting them to inf again."""
+    x = jnp.asarray(rng.normal(size=100).astype(np.float32))
+    for cap in (0, 1):
+        want_d, want_i = ref.all_knn_multi_e(x, E_max=3, tau=1, max_idx=cap)
+        got_d, got_i = ops.all_knn_multi_e(x, E_max=3, tau=1, max_idx=cap,
+                                           impl="interpret", block=(16, 128))
+        np.testing.assert_array_equal(np.asarray(got_i), np.asarray(want_i))
+        np.testing.assert_allclose(np.asarray(got_d), np.asarray(want_d),
+                                   rtol=1e-6, atol=1e-6)
+
+
+def test_interpret_kernel_column_tiled_large_L(rng):
+    """Acceptance: Lp beyond one VMEM block — L ≥ 8192 forces the streaming
+    k-best merge across 4 column tiles (and 8 row blocks) in interpret."""
+    L = 8192
+    x = jnp.asarray(rng.normal(size=L).astype(np.float32))
+    want_d, want_i = ref.all_knn_multi_e(x, E_max=2, tau=1)
+    got_d, got_i = ops.all_knn_multi_e(x, E_max=2, tau=1, impl="interpret",
+                                       block=(1024, 2048))
+    np.testing.assert_array_equal(np.asarray(got_i), np.asarray(want_i))
+    np.testing.assert_allclose(np.asarray(got_d), np.asarray(want_d),
+                               rtol=1e-6, atol=1e-6)
+
+
+def test_multi_e_sorted_ascending(rng):
+    x = jnp.asarray(rng.normal(size=180).astype(np.float32))
+    d, _ = ref.all_knn_multi_e(x, E_max=6, tau=1)
+    for E in range(1, 7):
+        Lp = 180 - (E - 1)
+        dE = np.asarray(d[E - 1, :Lp, :E + 1])
+        assert (np.diff(dE, axis=1) >= 0).all(), f"E={E} not sorted"
+
+
+def test_rho_curve_matches_seed_sweep_every_E(rng):
+    """Acceptance: ρ(E) from the one-pass engine ≡ the seed per-E sweep for
+    every E in 1..E_max, f32 tolerance."""
+    x = jnp.asarray(ts.logistic_map(400))
+    for tau, Tp in ((1, 1), (2, 3)):
+        want = np.asarray(core.optimal_E_sweep_seed(x, E_max=10, tau=tau,
+                                                    Tp=Tp, impl="ref"))
+        got = np.asarray(core.rho_curve(x, E_max=10, tau=tau, Tp=Tp,
+                                        impl="ref"))
+        np.testing.assert_allclose(got, want, rtol=1e-4, atol=1e-4)
+
+
+def test_rho_curve_interpret_matches_ref():
+    x = jnp.asarray(ts.logistic_map(300))
+    want = np.asarray(core.rho_curve(x, E_max=6, impl="ref"))
+    got = np.asarray(core.rho_curve(x, E_max=6, impl="interpret"))
+    np.testing.assert_allclose(got, want, rtol=1e-4, atol=1e-4)
+
+
+def test_make_weights_all_inf_row_is_zero_not_nan():
+    """Regression: an all-inf distance row (aggressive max_idx cap leaves no
+    valid neighbor) must yield zero weights, not NaN ρ downstream."""
+    d = jnp.asarray(np.array([[np.inf, np.inf, np.inf],
+                              [0.5, 1.0, np.inf],
+                              [0.0, 0.0, 1.0]], np.float32))
+    w = np.asarray(ref.make_weights(d))
+    assert np.isfinite(w).all(), f"NaN/inf weights: {w}"
+    np.testing.assert_allclose(w[0], 0.0)
+    np.testing.assert_allclose(w[1:].sum(axis=1), 1.0, rtol=1e-5)
+    # duplicate-neighbor guard still intact (cppEDM semantics)
+    assert w[2, 0] == w[2, 1] > w[2, 2]
+
+
+def test_make_weights_zero_row_via_engine_cap():
+    """End-to-end: a max_idx cap of -1 (no candidates at all) flows through
+    make_weights without NaN."""
+    x = jnp.asarray(np.linspace(0, 1, 50, dtype=np.float32))
+    d, i = ref.all_knn_multi_e(x, E_max=2, tau=1, max_idx=-1)
+    w = np.asarray(ref.make_weights(d[0, :49, :2]))
+    assert np.isfinite(w).all()
+    np.testing.assert_allclose(w, 0.0)

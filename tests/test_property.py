@@ -2,6 +2,9 @@
 
 import numpy as np
 import jax.numpy as jnp
+import pytest
+
+pytest.importorskip("hypothesis")  # optional dep: skip, don't break collection
 from hypothesis import given, settings, strategies as st
 import hypothesis.extra.numpy as hnp
 

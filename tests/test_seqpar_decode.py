@@ -22,9 +22,10 @@ def test_seqpar_decode_matches_plain_multidevice():
         toks = [jnp.asarray(rng.integers(0, cfg.vocab_size, (B, 1)),
                             jnp.int32) for _ in range(6)]
 
+        from repro.launch.mesh import make_test_mesh
+
         def run(seqpar):
-            mesh = jax.make_mesh((2, 4), ("data", "model"),
-                                 axis_types=(jax.sharding.AxisType.Auto,)*2)
+            mesh = make_test_mesh((2, 4), ("data", "model"))
             with meshctx.use_mesh(mesh if seqpar else None):
                 meshctx.set_seqpar_decode(seqpar)
                 cache = tf.init_cache(cfg, B, S)

@@ -8,6 +8,7 @@ import jax
 import jax.numpy as jnp
 import pytest
 
+from repro import compat
 from repro.checkpoint import CheckpointManager
 from repro.data.pipeline import TokenPipeline
 from repro.distributed.compression import (
@@ -149,8 +150,7 @@ def test_checkpoint_elastic_reshard(tmp_path):
     mgr = CheckpointManager(str(tmp_path))
     state = _tree(3)
     mgr.save(1, state)
-    mesh = jax.make_mesh((1,), ("data",),
-                         axis_types=(jax.sharding.AxisType.Auto,))
+    mesh = compat.make_mesh((1,), ("data",))
     sh = jax.sharding.NamedSharding(mesh, jax.sharding.PartitionSpec("data"))
     shardings = jax.tree.map(lambda _: sh, state)
     restored = mgr.restore(state, shardings=shardings)
@@ -196,11 +196,10 @@ def test_ef_compression_error_feedback(kind):
 
 
 def test_allreduce_compressed_single_device():
-    mesh = jax.make_mesh((1,), ("data",),
-                         axis_types=(jax.sharding.AxisType.Auto,))
+    mesh = compat.make_mesh((1,), ("data",))
     g = jnp.asarray(np.random.default_rng(1).normal(size=(256,))
                     .astype(np.float32))
-    out = jax.shard_map(
+    out = compat.shard_map(
         lambda x: allreduce_compressed(x, "data", "int8"),
         mesh=mesh, in_specs=jax.sharding.PartitionSpec(None),
         out_specs=jax.sharding.PartitionSpec(None), check_vma=False)(g)
