@@ -6,20 +6,30 @@ multi-E engine exploits D_E = D_{E-1} + one rank-1 lag term to emit every
 per-E neighbor table in one O(E_max·Lp²) pass (kernels/knn_multi_e.py).
 Derived column records the speedup; run.py writes it to BENCH_esweep.json
 so the perf trajectory is machine-readable across PRs.
+
+NOTE (chunked top-k, ISSUE 2 satellite): ``ref.topk_select`` now routes
+through the exact two-stage chunk-max prefilter (``ref._chunked_topk``) —
+deferred from PR 1 so the recorded esweep baseline stayed the untouched
+seed pipeline. The ``topk_plain`` / ``topk_chunked`` rows below record the
+before/after of that selection step in isolation; the ``esweep_seed_perE``
+row (whose per-E pipeline calls topk_select) now includes the benefit.
 """
 
 from __future__ import annotations
 
 import functools
 
+import jax
 import jax.numpy as jnp
 
 from benchmarks.common import row, time_fn
 from repro import core
+from repro.kernels import ref
 from repro.data.timeseries import tent_map_panel
 
 L = 4096
 E_MAX = 20
+TOPK_K = 21  # E_max + 1: the largest simplex k the CCM pipeline requests
 
 
 def run():
@@ -34,3 +44,21 @@ def run():
         f"O(sumE_Lp2)_{E_MAX}_pipelines")
     row(f"esweep_multiE_L{L}_E{E_MAX}", us_new,
         f"O(Emax_Lp2)_one_pass_speedup{us_old / us_new:.2f}x")
+
+    # Chunked top-k before/after on the selection step alone (same masked
+    # matrix both ways; plain = the seed's full-row jax.lax.top_k).
+    D = ref.pairwise_distances(x, E=3, tau=1)
+
+    @jax.jit
+    def plain(D):
+        nd, ik = jax.lax.top_k(-D, TOPK_K)
+        return jnp.sqrt(jnp.maximum(-nd, 0.0)), ik
+
+    chunked = functools.partial(ref.topk_select, D, k=TOPK_K,
+                                exclude_self=False)
+    us_plain = time_fn(lambda: plain(D), warmup=1, iters=5, stat="min")
+    us_chunk = time_fn(chunked, warmup=1, iters=5, stat="min")
+    row(f"topk_plain_L{L}_k{TOPK_K}", us_plain, "seed_full_row_lax_top_k")
+    row(f"topk_chunked_L{L}_k{TOPK_K}", us_chunk,
+        f"two_stage_chunk_max_speedup{us_plain / us_chunk:.2f}x"
+        "_now_default_in_topk_select")

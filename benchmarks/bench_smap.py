@@ -1,0 +1,52 @@
+"""S-Map θ-sweep: seed per-query lstsq loop vs batched Gram/Cholesky engine.
+
+The acceptance benchmark for the S-Map engine (ISSUE 2): the seed path
+pays one host-sequential ``lstsq`` per (query row, θ) over √W-scaled
+design-matrix copies — S·|θ|·rows solves for a panel — while the engine
+accumulates every (row, θ) pair's (E+1, E+1) weighted Gram matrix in one
+pass (kernels/smap_gram.py) and batch-solves all the ridge normal
+equations with one Cholesky (core/smap_engine.py). Derived column records
+the speedup; run.py writes BENCH_smap.json so the perf trajectory is
+machine-readable across PRs.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax.numpy as jnp
+
+from benchmarks.common import row, time_fn
+from repro import core
+from repro.data.timeseries import tent_map_panel
+
+L = 4096
+E = 2
+THETAS = (0.0, 0.1, 0.3, 0.5, 1.0, 2.0, 4.0, 8.0)
+
+
+def run():
+    x = jnp.asarray(tent_map_panel(1, L, seed=0)[0])
+
+    def seed_sweep():
+        # The seed nonlinearity test: re-enter the per-query solve loop
+        # once per θ (jitted once; θ is a traced scalar).
+        return jnp.stack([core.smap_predict_seed(x, E=E, tau=1, Tp=1,
+                                                 theta=t)[0]
+                          for t in THETAS])
+
+    new = functools.partial(core.smap_theta_sweep, x[None, :], E=E, tau=1,
+                            Tp=1, thetas=THETAS, impl="ref")
+    us_old = time_fn(seed_sweep, warmup=1, iters=3, stat="min")
+    us_new = time_fn(new, warmup=1, iters=3, stat="min")
+    row(f"smap_seed_lstsq_L{L}_E{E}_T{len(THETAS)}",
+        us_old, f"per_query_lstsq_{len(THETAS)}x{L - E}_solves")
+    row(f"smap_engine_L{L}_E{E}_T{len(THETAS)}",
+        us_new, f"batched_gram_cho_solve_speedup{us_old / us_new:.2f}x")
+
+    # The new S-Map causality workload: one library × 8 targets per call.
+    Y = jnp.asarray(tent_map_panel(8, L, seed=1))
+    xmap = functools.partial(core.smap_cross_map, x, Y, E=E, theta=2.0,
+                             impl="ref")
+    us_xmap = time_fn(xmap, warmup=1, iters=3, stat="min")
+    row(f"smap_xmap_L{L}_E{E}_N8", us_xmap, "smap_ccm_8_targets_one_call")

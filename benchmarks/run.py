@@ -8,6 +8,7 @@ directory so the perf trajectory is diffable across PRs:
   bench_ccm      → paper Table 1 (pairwise CCM, dataset-shaped)
   bench_roofline → paper Figs. 6–9 (arithmetic intensity / roofline)
   bench_esweep   → ISSUE 1 (seed per-E optimal-E sweep vs multi-E engine)
+  bench_smap     → ISSUE 2 (seed per-query S-Map lstsq vs batched engine)
 """
 
 from __future__ import annotations
@@ -25,6 +26,7 @@ def main() -> None:
         bench_knn,
         bench_lookup,
         bench_roofline,
+        bench_smap,
     )
 
     mods = {
@@ -33,6 +35,7 @@ def main() -> None:
         "ccm": bench_ccm,
         "roofline": bench_roofline,
         "esweep": bench_esweep,
+        "smap": bench_smap,
     }
     only = sys.argv[1] if len(sys.argv) > 1 else None
     print("name,us_per_call,derived")

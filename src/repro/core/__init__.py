@@ -17,7 +17,22 @@ from repro.core.simplex import (
     simplex_predict,
     simplex_skill,
 )
-from repro.core.smap import nonlinearity_test, smap_predict, smap_skill
+from repro.core.smap import (
+    nonlinearity_test,
+    smap_predict,
+    smap_predict_seed,
+    smap_skill,
+)
+from repro.core.smap_engine import (
+    DEFAULT_THETAS,
+    smap_cross_map,
+    smap_fit,
+    smap_group,
+    smap_jacobian,
+    smap_matrix,
+    smap_predict_batch,
+    smap_theta_sweep,
+)
 from repro.core.stats import CoMoments, pearson_rows
 
 __all__ = [
@@ -37,7 +52,16 @@ __all__ = [
     "simplex_predict",
     "simplex_skill",
     "nonlinearity_test",
+    "DEFAULT_THETAS",
     "smap_predict",
+    "smap_predict_seed",
+    "smap_predict_batch",
+    "smap_theta_sweep",
+    "smap_fit",
+    "smap_cross_map",
+    "smap_group",
+    "smap_matrix",
+    "smap_jacobian",
     "smap_skill",
     "CoMoments",
     "pearson_rows",

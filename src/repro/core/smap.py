@@ -2,9 +2,16 @@
 
 The paper validates kEDM against cppEDM; S-Map is the other core EDM
 method there (and the standard EDM nonlinearity test: skill rising with
-the locality parameter θ ⇒ state-dependent, nonlinear dynamics). Included
-for framework completeness; it shares the embedding/stats substrate but
-not the kNN kernels (S-Map weights *all* library points).
+the locality parameter θ ⇒ state-dependent, nonlinear dynamics — the test
+the whole-brain causal-inference workload runs per channel).
+
+The public entry points here are thin wrappers over the batched engine
+(``core/smap_engine.py``): every (query row, θ) pair's weighted Gram
+matrix is accumulated in one pass (``kernels/smap_gram.py``) and all the
+ridge-regularized normal-equations systems are solved by one batched
+Cholesky — no host loop over θ or queries. ``smap_predict_seed`` keeps the
+seed's per-query ``lstsq`` path as the parity oracle and the benchmark
+baseline (``benchmarks/bench_smap.py``).
 """
 
 from __future__ import annotations
@@ -15,19 +22,22 @@ import jax
 import jax.numpy as jnp
 
 from repro.core.embedding import embed_offset, num_embedded, pred_rows
+from repro.core.smap_engine import DEFAULT_THETAS, smap_fit, smap_theta_sweep
 from repro.kernels import ops
 from repro.kernels.ref import delay_embed
 
 
 @functools.partial(jax.jit, static_argnames=("E", "tau", "Tp"))
-def smap_predict(
+def smap_predict_seed(
     x: jax.Array, *, E: int, tau: int = 1, Tp: int = 1, theta: float = 0.0
 ) -> tuple[jax.Array, jax.Array]:
-    """Leave-one-out S-Map forecasts. Returns (pred, truth), shape (rows,).
+    """Seed S-Map: one lstsq per query row (oracle + benchmark baseline).
 
     For each query j: weights w_i = exp(-θ d_ij / d̄_j) over all library
     points i (self excluded), then a weighted ridge-free least-squares fit
-    ŷ = [1, z_j]·b with b = argmin Σ w_i (y_i − [1, z_i]·b)².
+    ŷ = [1, z_j]·b with b = argmin Σ w_i (y_i − [1, z_i]·b)². Host-
+    sequential ``lax.map`` of solves on √w-scaled design-matrix copies —
+    kept verbatim so the engine's speedup stays measurable across PRs.
     """
     x = x.astype(jnp.float32)
     L = x.shape[-1]
@@ -55,10 +65,42 @@ def smap_predict(
     return pred, y
 
 
+def smap_predict(
+    x: jax.Array,
+    *,
+    E: int,
+    tau: int = 1,
+    Tp: int = 1,
+    theta: float = 0.0,
+    ridge: float = 1e-6,
+    impl: str = "auto",
+) -> tuple[jax.Array, jax.Array]:
+    """Leave-one-out S-Map forecasts. Returns (pred, truth), shape (rows,).
+
+    Engine-backed: one batched Gram accumulation + Cholesky solve instead
+    of a per-query lstsq loop (see core/smap_engine.py).
+    """
+    pred, _ = smap_fit(x, x[None], E=E, tau=tau, Tp=Tp,
+                       thetas=(float(theta),), ridge=ridge, impl=impl)
+    rows = pred_rows(x.shape[-1], E, tau, Tp)
+    off = embed_offset(E, tau, Tp)
+    truth = jax.lax.dynamic_slice_in_dim(x.astype(jnp.float32), off, rows,
+                                         axis=-1)
+    return pred[0, 0], truth
+
+
 def smap_skill(
-    x: jax.Array, *, E: int, tau: int = 1, Tp: int = 1, theta: float = 0.0
+    x: jax.Array,
+    *,
+    E: int,
+    tau: int = 1,
+    Tp: int = 1,
+    theta: float = 0.0,
+    ridge: float = 1e-6,
+    impl: str = "auto",
 ) -> jax.Array:
-    pred, truth = smap_predict(x, E=E, tau=tau, Tp=Tp, theta=theta)
+    pred, truth = smap_predict(x, E=E, tau=tau, Tp=Tp, theta=theta,
+                               ridge=ridge, impl=impl)
     return ops.pearson_rows(pred[None, :], truth[None, :])[0]
 
 
@@ -68,8 +110,15 @@ def nonlinearity_test(
     E: int,
     tau: int = 1,
     Tp: int = 1,
-    thetas=(0.0, 0.1, 0.3, 0.5, 1.0, 2.0, 4.0, 8.0),
+    thetas=DEFAULT_THETAS,
+    ridge: float = 1e-6,
+    impl: str = "auto",
 ) -> jax.Array:
-    """ρ(θ) curve — increasing skill with θ indicates nonlinear dynamics."""
-    return jnp.stack([smap_skill(x, E=E, tau=tau, Tp=Tp, theta=float(t))
-                      for t in thetas])
+    """ρ(θ) curve — increasing skill with θ indicates nonlinear dynamics.
+
+    One jitted engine call for the whole θ grid (the seed re-entered the
+    per-query solve loop once per θ).
+    """
+    return smap_theta_sweep(x[None, :], E=E, tau=tau, Tp=Tp,
+                            thetas=tuple(float(t) for t in thetas),
+                            ridge=ridge, impl=impl)[0]

@@ -8,7 +8,9 @@ from repro.distributed.sharded_ccm import (
     pad_to_multiple,
     sharded_ccm_matrix,
     sharded_optimal_E,
+    sharded_smap_matrix,
+    sharded_smap_theta,
 )
 
 __all__ = ["make_ccm_mesh", "sharded_ccm_matrix", "sharded_optimal_E",
-           "pad_to_multiple"]
+           "sharded_smap_matrix", "sharded_smap_theta", "pad_to_multiple"]

@@ -127,6 +127,84 @@ def sharded_optimal_E(
     return mapped(X)
 
 
+def sharded_smap_theta(
+    X: jax.Array,
+    *,
+    E: int,
+    tau: int = 1,
+    Tp: int = 1,
+    thetas: tuple[float, ...] | None = None,
+    ridge: float = 1e-6,
+    mesh: jax.sharding.Mesh,
+    axes=("data",),
+    impl: str = "ref",
+) -> jax.Array:
+    """Per-series S-Map θ-sweeps on a device mesh → ρ (N, |θ|).
+
+    The nonlinearity-test half of the whole-brain workload: series are
+    sharded over ``axes`` and each device runs the batched S-Map engine
+    (one Gram accumulation + one batched Cholesky per local series, every
+    θ at once — core/smap_engine.py) on its shard with no collectives at
+    all. N must divide evenly over ``axes`` (use pad_to_multiple).
+    """
+    from repro.core.smap_engine import DEFAULT_THETAS, smap_theta_sweep
+
+    thetas = DEFAULT_THETAS if thetas is None else tuple(
+        float(t) for t in thetas)
+
+    def local(Xl):  # the local engine, verbatim, on the shard's series
+        return smap_theta_sweep(Xl, E=E, tau=tau, Tp=Tp, thetas=thetas,
+                                ridge=ridge, impl=impl)
+
+    mapped = _shard_map(
+        local,
+        mesh=mesh,
+        in_specs=(P(axes, None),),
+        out_specs=P(axes, None),
+    )
+    return mapped(X)
+
+
+def sharded_smap_matrix(
+    X_lib: jax.Array,
+    X_tgt: jax.Array,
+    *,
+    E: int,
+    tau: int = 1,
+    Tp: int = 0,
+    theta: float = 1.0,
+    ridge: float = 1e-6,
+    mesh: jax.sharding.Mesh,
+    lib_axes=("data",),
+    tgt_axes=("model",),
+    impl: str = "ref",
+) -> jax.Array:
+    """All-pairs S-Map cross-map skill matrix on a device mesh.
+
+    Same 2-D (library × target) decomposition and zero-collective inner
+    loop as ``sharded_ccm_matrix``, with the simplex lookup replaced by
+    the batched S-Map engine (fit on each local library's manifold,
+    predict the local targets). Returns (N_lib, N_tgt) ρ sharded as
+    P(lib_axes, tgt_axes).
+    """
+    from repro.core.smap_engine import smap_group
+
+    if X_tgt.shape[-1] != X_lib.shape[-1]:
+        raise ValueError("library/target series length mismatch")
+
+    def local(libs, tgts):
+        return smap_group(libs, tgts, E=E, tau=tau, Tp=Tp,
+                          theta=float(theta), ridge=ridge, impl=impl)
+
+    mapped = _shard_map(
+        local,
+        mesh=mesh,
+        in_specs=(P(lib_axes, None), P(tgt_axes, None)),
+        out_specs=P(lib_axes, tgt_axes),
+    )
+    return mapped(X_lib, X_tgt)
+
+
 def ccm_step(X: jax.Array, *, E: int, tau: int, mesh: jax.sharding.Mesh,
              lib_axes=("data",), tgt_axes=("model",), impl: str = "ref"):
     """Dry-run entry point: all-pairs CCM of one (N, L) panel (lib == tgt)."""

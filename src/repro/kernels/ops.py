@@ -144,6 +144,38 @@ def all_knn_multi_e(
         max_idx=max_idx, block=block, interpret=(impl == "interpret"))
 
 
+def smap_gram(
+    x: jax.Array,
+    Y: jax.Array,
+    *,
+    E: int,
+    tau: int = 1,
+    Tp: int = 1,
+    thetas: tuple[float, ...],
+    exclude_self: bool = True,
+    impl: str = "auto",
+    block: tuple[int, int] = (128, 1024),
+) -> tuple[jax.Array, jax.Array]:
+    """S-Map weighted normal-equations accumulation for every (row, θ, target).
+
+    Returns (G (rows, T, E+1, E+1), M (rows, T, N, E+1)) — the AᵀWA Gram
+    matrices and AᵀWy moments the batched S-Map engine solves downstream
+    (core/smap_engine.py). The kernel path streams library column tiles
+    and never materializes any (rows, rows) object (kernels/smap_gram.py);
+    the ref path holds one (rows, rows) weight matrix at a time (never the
+    (T, rows, rows) stack).
+    """
+    impl = _resolve(impl)
+    thetas = tuple(float(t) for t in thetas)
+    if impl == "ref":
+        return _ref.smap_gram(x, Y, E=E, tau=tau, Tp=Tp, thetas=thetas,
+                              exclude_self=exclude_self)
+    from repro.kernels.smap_gram import smap_gram as _smap_gram_k
+    return _smap_gram_k(
+        x, Y, E=E, tau=tau, Tp=Tp, thetas=thetas, exclude_self=exclude_self,
+        block=block, interpret=(impl == "interpret"))
+
+
 def lookup(
     Y: jax.Array,
     idx: jax.Array,

@@ -88,7 +88,10 @@ def topk_select(
     if max_idx is not None:
         mask = mask | (cols[None, :] > jnp.asarray(max_idx, jnp.int32))
     Dm = jnp.where(mask, _INF, D)
-    neg_d, idx = jax.lax.top_k(-Dm, k)
+    # Two-stage chunk-max top-k (exact incl. ties — see _chunked_topk):
+    # ~W/k× fewer elements through XLA-CPU's sequential TopK scan than the
+    # plain full-row jax.lax.top_k the seed used.
+    neg_d, idx = _chunked_topk(-Dm, k)
     return jnp.sqrt(jnp.maximum(-neg_d, 0.0)), idx.astype(jnp.int32)
 
 
@@ -173,29 +176,37 @@ def _chunked_topk(neg: jax.Array, k: int) -> tuple[jax.Array, jax.Array]:
     outranking v (greater value, or equal value in an earlier chunk —
     stage-1 top_k is stable), giving v ≥ k predecessors — contradiction.
     Sorting the selected chunk ids keeps candidates in global column
-    order, so stage-2 tie-breaking equals full-row stability; -inf pads
-    (last chunk only) can never displace a real candidate.
+    order, so stage-2 tie-breaking equals full-row stability; the ragged
+    last chunk's out-of-range candidate slots are masked to -inf (same
+    semantics as padding the row, without the full-matrix pad copy that
+    used to dominate the cost on materialized inputs — ~70ms of the
+    ~200ms total at Lp=4096).
     """
     Lr, Lc = neg.shape
     C = -(-Lc // _CHUNK_W)
     if k >= C or Lc <= 4 * _CHUNK_W:  # prefilter can't shrink the scan
         nd, ik = jax.lax.top_k(neg, k)
         return nd, ik.astype(jnp.int32)
-    if C * _CHUNK_W != Lc:
-        neg = jnp.pad(neg, ((0, 0), (0, C * _CHUNK_W - Lc)),
-                      constant_values=-jnp.inf)
-    neg3 = neg.reshape(Lr, C, _CHUNK_W)
-    m, w = neg3, _CHUNK_W
-    while w > 1:  # vectorized pairwise max tree → (Lr, C) chunk maxima
+    C0 = Lc // _CHUNK_W
+    body = neg[:, :C0 * _CHUNK_W].reshape(Lr, C0, _CHUNK_W)
+    m, w = body, _CHUNK_W
+    while w > 1:  # vectorized pairwise max tree → (Lr, C0) chunk maxima
         m = jnp.maximum(m[..., :w // 2], m[..., w // 2:w])
         w //= 2
-    _, cid = jax.lax.top_k(m[..., 0], k)
+    m = m[..., 0]
+    if C0 != C:  # ragged last chunk: tiny (Lr, Lc−C0·W) reduce
+        m = jnp.concatenate(
+            [m, jnp.max(neg[:, C0 * _CHUNK_W:], axis=1, keepdims=True)],
+            axis=1)
+    _, cid = jax.lax.top_k(m, k)
     cid = jnp.sort(cid, axis=1)  # global column order → stable ties
-    cand = jnp.take_along_axis(neg3, cid[:, :, None], axis=1)
     gidx = (cid[:, :, None] * _CHUNK_W
-            + jnp.arange(_CHUNK_W, dtype=cid.dtype)[None, None, :])
-    nd, pos = jax.lax.top_k(cand.reshape(Lr, k * _CHUNK_W), k)
-    ik = jnp.take_along_axis(gidx.reshape(Lr, k * _CHUNK_W), pos, axis=1)
+            + jnp.arange(_CHUNK_W, dtype=cid.dtype)[None, None, :]
+            ).reshape(Lr, k * _CHUNK_W)
+    cand = jnp.take_along_axis(neg, jnp.minimum(gidx, Lc - 1), axis=1)
+    cand = jnp.where(gidx < Lc, cand, -_INF)
+    nd, pos = jax.lax.top_k(cand, k)
+    ik = jnp.take_along_axis(gidx, pos, axis=1)
     return nd, ik.astype(jnp.int32)
 
 
@@ -305,6 +316,89 @@ def all_knn_multi_e(
     d, i = _all_knn_multi_e(x, E_max=E_max, tau=tau, ks=ks, mxs=mxs,
                             exclude_self=exclude_self)
     return pad_multi_e_tables(d, i, E_max=E_max, tau=tau, ks=ks)
+
+
+# --------------------------------------------------------------------------
+# S-Map weighted normal equations (the batched S-Map engine substrate).
+#
+# For query row j and locality θ, S-Map fits ŷ = [1, z_j]·b with
+# b = argmin Σ_i w_i (y_i − [1, z_i]·b)²,  w_i = exp(−θ d_ij / d̄_j).
+# Instead of one lstsq per (j, θ) on √w-scaled copies of the design matrix
+# (the seed path), the engine accumulates the (E+1, E+1) weighted Gram
+# matrix G = AᵀWA and moment vector m = AᵀWy for EVERY (j, θ, target) at
+# once and batch-solves the ridge-regularized normal equations downstream
+# (core/smap_engine.py has the conditioning discussion).
+# --------------------------------------------------------------------------
+
+_DBAR_TINY = 1e-30  # d̄ below this ⇒ degenerate (constant) row: use ratio 0
+
+
+def smap_ratio(x: jax.Array, *, E: int, tau: int, rows: int) -> jax.Array:
+    """(rows, rows) S-Map distance ratios d_ij / d̄_j over the library.
+
+    d̄_j is the mean Euclidean distance from query j to ALL library points
+    (self included — its zero distance is part of the mean, matching
+    cppEDM). Degenerate rows (d̄ ≈ 0, e.g. a constant series) would make
+    the exp(−θ·d/d̄) weights NaN/inf; they get ratio 0 (⇒ weight 1), the
+    only consistent limit since d̄ = 0 forces every d_ij = 0 too.
+    """
+    d = jnp.sqrt(jnp.maximum(
+        pairwise_distances(x, E=E, tau=tau)[:rows, :rows], 0.0))
+    dbar = jnp.mean(d, axis=1, keepdims=True)
+    return d / jnp.where(dbar > _DBAR_TINY, dbar, 1.0)
+
+
+@functools.partial(
+    jax.jit, static_argnames=("E", "tau", "Tp", "thetas", "exclude_self"))
+def smap_gram(
+    x: jax.Array,
+    Y: jax.Array,
+    *,
+    E: int,
+    tau: int = 1,
+    Tp: int = 1,
+    thetas: tuple[float, ...],
+    exclude_self: bool = True,
+) -> tuple[jax.Array, jax.Array]:
+    """Weighted Gram/moment accumulation for every (query row, θ, target).
+
+    x: (L,) library series; Y: (N, L) target panel (self-prediction is
+    Y = x[None]). With rows = Lp − max(Tp, 0) library points (those whose
+    Tp-ahead truth exists) and A = [1 | delay_embed(x)[:rows]] of shape
+    (rows, E+1):
+
+      G[j, t]    = Aᵀ W_{j,θ_t} A            (rows, T, E+1, E+1)
+      M[j, t, n] = Aᵀ W_{j,θ_t} y_n          (rows, T, N,   E+1)
+
+    where W_{j,θ} = diag(exp(−θ d_ij / d̄_j)) with the self weight zeroed
+    when ``exclude_self`` (leave-one-out) and y_n[i] = Y[n, i + off],
+    off = (E−1)τ + Tp. Each θ is one (rows, rows) @ (rows, (E+1)²) matmul
+    — no per-query solve loop, no (T, rows, rows) weight tensor. Tp ≥ 0.
+    """
+    x = x.astype(jnp.float32)
+    Y = Y.astype(jnp.float32)
+    L = x.shape[-1]
+    Lp = num_embedded(L, E, tau)
+    rows = Lp - max(Tp, 0)
+    off = (E - 1) * tau + Tp
+    E1 = E + 1
+    A = jnp.concatenate(
+        [jnp.ones((rows, 1), jnp.float32), delay_embed(x, E, tau)[:rows]],
+        axis=1)
+    ratio = smap_ratio(x, E=E, tau=tau, rows=rows)
+    yv = jax.lax.dynamic_slice_in_dim(Y, off, rows, axis=-1)  # (N, rows)
+    N = yv.shape[0]
+    AA = (A[:, :, None] * A[:, None, :]).reshape(rows, E1 * E1)
+    yA = (yv.T[:, :, None] * A[:, None, :]).reshape(rows, N * E1)
+    self_mask = jnp.eye(rows, dtype=bool)
+    Gs, Ms = [], []
+    for t in thetas:  # |θ| ≤ ~16: unrolled, two matmuls per θ
+        W = jnp.exp(jnp.float32(-t) * ratio)
+        if exclude_self:
+            W = jnp.where(self_mask, 0.0, W)
+        Gs.append((W @ AA).reshape(rows, E1, E1))
+        Ms.append((W @ yA).reshape(rows, N, E1))
+    return jnp.stack(Gs, axis=1), jnp.stack(Ms, axis=1)
 
 
 def pearson_rows(a: jax.Array, b: jax.Array) -> jax.Array:

@@ -1,6 +1,7 @@
 """Pallas k-pass top-k kernel vs jnp oracle and numpy full sort."""
 
 import numpy as np
+import jax
 import jax.numpy as jnp
 import pytest
 
@@ -67,6 +68,37 @@ def test_topk_max_idx_dynamic(rng, max_idx):
     np.testing.assert_array_equal(np.asarray(got_i), np.asarray(want_i))
     np.testing.assert_allclose(np.asarray(got_d), np.asarray(want_d),
                                rtol=1e-6, atol=1e-6)
+
+
+def test_topk_select_chunked_path_matches_plain(rng):
+    """ref.topk_select now routes through the two-stage chunk-max prefilter
+    (ISSUE 2 satellite); on an Lp large enough to activate it (Lp > 4·W,
+    k < n_chunks) it must stay bit-identical to full-row lax.top_k —
+    values, indices, and tie order."""
+    Lp = 333  # 11 chunks of W=32, padded last chunk
+    x = jnp.asarray(rng.normal(size=Lp + 4).astype(np.float32))
+    D = ref.pairwise_distances(x, E=5, tau=1)
+    for k, max_idx in ((4, None), (1, None), (8, 100)):
+        got_d, got_i = ref.topk_select(D, k=k, max_idx=max_idx)
+        Dm = jnp.where(jnp.eye(Lp, dtype=bool), jnp.inf, D)
+        if max_idx is not None:
+            Dm = jnp.where(jnp.arange(Lp)[None, :] > max_idx, jnp.inf, Dm)
+        nd, ik = jax.lax.top_k(-Dm, k)
+        np.testing.assert_array_equal(np.asarray(got_i), np.asarray(ik))
+        np.testing.assert_array_equal(np.asarray(got_d),
+                                      np.sqrt(np.maximum(-np.asarray(nd), 0)))
+
+
+def test_topk_select_chunked_path_tie_stability():
+    """Mass ties across chunk boundaries: first (lowest) index must win,
+    exactly as the seed's full-row stable top_k."""
+    Lp = 256  # 8 chunks, all-equal rows force cross-chunk ties everywhere
+    D = jnp.ones((Lp, Lp), jnp.float32)
+    got_d, got_i = ref.topk_select(D, k=5, exclude_self=True)
+    want_i = np.tile(np.arange(5), (Lp, 1))
+    want_i[:5] = [[j for j in range(6) if j != r][:5] for r in range(5)]
+    np.testing.assert_array_equal(np.asarray(got_i), want_i)
+    np.testing.assert_allclose(np.asarray(got_d), 1.0)
 
 
 def test_topk_ties_are_stable(rng):

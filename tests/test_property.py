@@ -8,10 +8,16 @@ pytest.importorskip("hypothesis")  # optional dep: skip, don't break collection
 from hypothesis import given, settings, strategies as st
 import hypothesis.extra.numpy as hnp
 
+from repro.core.smap_engine import smap_theta_sweep
 from repro.core.stats import CoMoments
+from repro.data import timeseries as ts
 from repro.kernels import ops, ref
 
 _settings = dict(max_examples=25, deadline=None)
+
+# The S-Map sweeps below run a full engine program per example; keep the
+# example count small and derandomized (stable examples across CI runs).
+_smap_settings = dict(max_examples=6, deadline=None, derandomize=True)
 
 
 def series(min_len=24, max_len=96):
@@ -114,6 +120,33 @@ def test_comoments_merge_equals_batch(ab, split):
                                rtol=1e-3, atol=1e-2)
     np.testing.assert_allclose(float(merged.pearson), float(whole.pearson),
                                rtol=1e-3, atol=1e-3)
+
+
+@given(x0=st.floats(0.15, 0.85), n=st.integers(250, 380))
+@settings(**_smap_settings)
+def test_smap_rho_rises_with_theta_on_logistic_map(x0, n):
+    """Nonlinear (state-dependent) dynamics: S-Map skill must rise with the
+    locality parameter θ, for any chaotic-logistic initial condition."""
+    x = jnp.asarray(ts.logistic_map(int(n), x0=float(x0)))
+    rho = np.asarray(smap_theta_sweep(x[None], E=2, thetas=(0.0, 2.0, 8.0),
+                                      impl="ref"))[0]
+    assert rho[-1] > rho[0] + 0.02, f"no nonlinearity signal: {rho}"
+    assert rho[-1] > 0.9
+
+
+@given(phi=st.floats(0.25, 0.9), seed=st.integers(0, 2**16))
+@settings(**_smap_settings)
+def test_smap_rho_flat_on_ar1(phi, seed):
+    """Linear stochastic dynamics: localizing the fit can only lose data —
+    ρ(θ) must NOT rise materially for AR(1) noise, for any (φ, seed)."""
+    rng = np.random.default_rng(seed)
+    n = 300
+    x = np.zeros(n, np.float32)
+    for t in range(1, n):
+        x[t] = np.float32(phi) * x[t - 1] + 0.1 * rng.standard_normal()
+    rho = np.asarray(smap_theta_sweep(jnp.asarray(x)[None], E=2,
+                                      thetas=(0.0, 4.0), impl="ref"))[0]
+    assert rho[1] < rho[0] + 0.05, f"spurious nonlinearity: {rho}"
 
 
 @given(x=series(min_len=40, max_len=80))

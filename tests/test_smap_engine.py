@@ -1,0 +1,248 @@
+"""Batched S-Map engine ≡ the per-query weighted-lstsq oracle.
+
+Covers the Gram kernel (interpret vs ref), the normal-equations engine vs
+an explicit float64 numpy lstsq oracle across E/τ/Tp/θ grids, the seed
+parity of the rewritten public API, the d̄=0 degenerate-series guard, the
+S-Map cross-mapping workload, Jacobian extraction, and the sharded
+θ-sweep/matrix wiring.
+"""
+
+import numpy as np
+import jax.numpy as jnp
+import pytest
+
+from repro import core
+from repro.data import timeseries as ts
+from repro.distributed import (
+    make_ccm_mesh,
+    sharded_smap_matrix,
+    sharded_smap_theta,
+)
+from repro.kernels import ops, ref
+from repro.kernels.smap_gram import smap_gram as smap_gram_kernel
+
+
+def _numpy_smap(x, Y, *, E, tau, Tp, theta, exclude_self=True):
+    """Explicit per-query weighted lstsq in float64 — the brute-force oracle.
+
+    Returns (pred (N, rows), truth (N, rows), coef (N, rows, E+1)).
+    """
+    x = np.asarray(x, np.float64)
+    Y = np.asarray(Y, np.float64)
+    L = x.shape[-1]
+    Lp = L - (E - 1) * tau
+    rows = Lp - max(Tp, 0)
+    off = (E - 1) * tau + Tp
+    Z = np.stack([x[k * tau:k * tau + Lp] for k in range(E)], axis=1)[:rows]
+    A = np.concatenate([np.ones((rows, 1)), Z], axis=1)
+    d = np.sqrt(((Z[:, None, :] - Z[None, :, :]) ** 2).sum(-1))
+    yv = Y[:, off:off + rows]
+    N = Y.shape[0]
+    pred = np.zeros((N, rows))
+    coef = np.zeros((N, rows, E + 1))
+    for j in range(rows):
+        dbar = d[j].mean()
+        w = np.exp(-theta * d[j] / max(dbar, 1e-30))
+        if exclude_self:
+            w[j] = 0.0
+        sw = np.sqrt(w)[:, None]
+        for n in range(N):
+            b, *_ = np.linalg.lstsq(A * sw, yv[n] * sw[:, 0], rcond=None)
+            pred[n, j] = A[j] @ b
+            coef[n, j] = b
+    return pred, yv, coef
+
+
+def _rho(pred, truth):
+    return np.asarray(ref.pearson_rows(jnp.asarray(pred[None]),
+                                       jnp.asarray(truth[None])))[0]
+
+
+@pytest.mark.parametrize("E,tau,Tp", [
+    (1, 1, 1), (2, 1, 0), (3, 2, 1), (2, 2, 3), (4, 1, 2),
+])
+@pytest.mark.parametrize("theta", [0.0, 0.5, 4.0])
+def test_engine_matches_numpy_lstsq_oracle(rng, E, tau, Tp, theta):
+    """Acceptance: engine ρ agrees with the per-query lstsq oracle ≤1e-4."""
+    x = np.asarray(ts.logistic_map(130)) + 0.01 * rng.normal(size=130).astype(
+        np.float32)
+    want_p, truth, _ = _numpy_smap(x, x[None], E=E, tau=tau, Tp=Tp,
+                                   theta=theta)
+    got_p, got_t = core.smap_predict(jnp.asarray(x), E=E, tau=tau, Tp=Tp,
+                                     theta=theta, impl="ref")
+    np.testing.assert_allclose(np.asarray(got_t), truth[0], rtol=1e-5,
+                               atol=1e-5)
+    np.testing.assert_allclose(np.asarray(got_p), want_p[0], rtol=1e-2,
+                               atol=1e-3)
+    assert abs(_rho(np.asarray(got_p), truth[0])
+               - _rho(want_p[0], truth[0])) <= 1e-4
+
+
+@pytest.mark.parametrize("L,E,tau,Tp,excl,block", [
+    (137, 3, 2, 1, True, (16, 128)),   # gj = 1, partial row tiles
+    (300, 2, 1, 1, True, (16, 128)),   # gj > 1: streaming column merge
+    (300, 1, 1, 0, False, (8, 256)),   # E=1, Tp=0, self included
+    (413, 5, 1, 3, True, (64, 128)),   # partial tiles at both axes
+])
+def test_gram_kernel_interpret_matches_ref(rng, L, E, tau, Tp, excl, block):
+    x = jnp.asarray(rng.normal(size=L).astype(np.float32))
+    Y = jnp.asarray(rng.normal(size=(2, L)).astype(np.float32))
+    thetas = (0.0, 0.7, 3.0)
+    want_G, want_M = ref.smap_gram(x, Y, E=E, tau=tau, Tp=Tp, thetas=thetas,
+                                   exclude_self=excl)
+    got_G, got_M = smap_gram_kernel(x, Y, E=E, tau=tau, Tp=Tp, thetas=thetas,
+                                    exclude_self=excl, block=block,
+                                    interpret=True)
+    scale_G = float(np.abs(np.asarray(want_G)).max())
+    scale_M = float(np.abs(np.asarray(want_M)).max())
+    np.testing.assert_allclose(np.asarray(got_G), np.asarray(want_G),
+                               rtol=1e-5, atol=1e-5 * max(scale_G, 1.0))
+    np.testing.assert_allclose(np.asarray(got_M), np.asarray(want_M),
+                               rtol=1e-5, atol=1e-5 * max(scale_M, 1.0))
+
+
+def test_gram_dispatch_interpret_matches_ref():
+    x = jnp.asarray(ts.logistic_map(200))
+    want = ops.smap_gram(x, x[None], E=2, thetas=(0.0, 2.0), impl="ref")
+    got = ops.smap_gram(x, x[None], E=2, thetas=(0.0, 2.0),
+                        impl="interpret", block=(32, 128))
+    for w, g in zip(want, got):
+        np.testing.assert_allclose(np.asarray(g), np.asarray(w), rtol=1e-4,
+                                   atol=1e-4)
+
+
+@pytest.mark.parametrize("theta", [0.0, 2.0, 8.0])
+def test_smap_predict_matches_seed(theta):
+    """Engine path ≡ the seed per-query lstsq path (ρ within 1e-4)."""
+    x = jnp.asarray(ts.logistic_map(250))
+    p_new, t_new = core.smap_predict(x, E=2, theta=theta, impl="ref")
+    p_old, t_old = core.smap_predict_seed(x, E=2, theta=theta)
+    np.testing.assert_allclose(np.asarray(t_new), np.asarray(t_old),
+                               rtol=1e-6, atol=1e-6)
+    assert abs(_rho(np.asarray(p_new), np.asarray(t_new))
+               - _rho(np.asarray(p_old), np.asarray(t_old))) <= 1e-4
+
+
+def test_nonlinearity_test_is_one_engine_call_and_matches_seed():
+    """ρ(θ) from the fused sweep ≡ stacking per-θ seed skills."""
+    x = jnp.asarray(ts.logistic_map(220))
+    thetas = (0.0, 0.5, 2.0, 8.0)
+    got = np.asarray(core.nonlinearity_test(x, E=2, thetas=thetas,
+                                            impl="ref"))
+    for t, theta in enumerate(thetas):
+        pred, truth = core.smap_predict_seed(x, E=2, theta=theta)
+        want = _rho(np.asarray(pred), np.asarray(truth))
+        np.testing.assert_allclose(got[t], want, rtol=1e-4, atol=1e-4)
+
+
+def test_smap_predict_batch_agrees_per_series():
+    X = jnp.asarray(np.stack([ts.logistic_map(180, r=3.8),
+                              ts.logistic_map(180, r=3.7, x0=0.5)]))
+    thetas = (0.0, 1.0, 4.0)
+    preds, truth = core.smap_predict_batch(X, E=2, thetas=thetas, impl="ref")
+    rho = np.asarray(core.smap_theta_sweep(X, E=2, thetas=thetas, impl="ref"))
+    assert preds.shape == (2, 3, 178) and truth.shape == (2, 178)
+    assert rho.shape == (2, 3)
+    for s in range(2):
+        want = np.asarray(core.nonlinearity_test(X[s], E=2, thetas=thetas,
+                                                 impl="ref"))
+        np.testing.assert_allclose(rho[s], want, rtol=1e-5, atol=1e-5)
+
+
+def test_constant_series_dbar_guard():
+    """Regression (ISSUE 2 satellite): d̄ = 0 for a constant series must not
+    produce NaN weights/predictions — mirrors the PR 1 make_weights all-inf
+    fix. The ridge solve degrades to shrinkage toward the constant."""
+    xc = jnp.full((80,), 0.7, jnp.float32)
+    for theta in (0.0, 4.0):
+        pred, truth = core.smap_predict(xc, E=2, theta=theta, impl="ref")
+        assert np.isfinite(np.asarray(pred)).all(), f"NaN pred at θ={theta}"
+        np.testing.assert_allclose(np.asarray(pred), 0.7, atol=1e-3)
+    rho = np.asarray(core.smap_theta_sweep(xc[None], E=2,
+                                           thetas=(0.0, 2.0), impl="ref"))
+    assert np.isfinite(rho).all()  # zero-variance truth → ρ = 0, not NaN
+
+
+def test_smap_cross_map_matches_numpy_oracle():
+    xs, ys = ts.coupled_logistic(160, b_xy=0.0, b_yx=0.3, seed=7)
+    lib, tgt = np.asarray(ys), np.asarray(xs)
+    for theta in (0.0, 2.0):
+        want_p, truth, _ = _numpy_smap(lib, tgt[None], E=2, tau=1, Tp=0,
+                                       theta=theta)
+        got = float(core.smap_cross_map(jnp.asarray(lib), jnp.asarray(tgt),
+                                        E=2, theta=theta, impl="ref"))
+        want = _rho(want_p[0], truth[0])
+        np.testing.assert_allclose(got, want, rtol=1e-4, atol=1e-4)
+
+
+def test_smap_cross_map_theta_grid_shape_and_direction():
+    xs, ys = ts.coupled_logistic(500, b_xy=0.0, b_yx=0.32, seed=3)
+    x, y = jnp.asarray(xs), jnp.asarray(ys)
+    thetas = (0.0, 1.0, 4.0)
+    rho_grid = np.asarray(core.smap_cross_map(y, jnp.stack([x, y]), E=2,
+                                              thetas=thetas, impl="ref"))
+    assert rho_grid.shape == (3, 2)
+    # X forces Y: cross-mapping X from Y's manifold beats the converse.
+    rho_x_from_y = float(core.smap_cross_map(y, x, E=2, theta=2.0))
+    rho_y_from_x = float(core.smap_cross_map(x, y, E=2, theta=2.0))
+    assert rho_x_from_y > rho_y_from_x + 0.1, (
+        f"asymmetry missing: {rho_x_from_y} vs {rho_y_from_x}")
+
+
+def test_smap_matrix_group_consistency():
+    panel, _ = ts.forced_network_panel(4, 260, seed=2)
+    X = jnp.asarray(panel)
+    E_opt = np.array([2, 3, 2, 3], np.int32)
+    rho = core.smap_matrix(X, E_opt, theta=1.0)
+    assert rho.shape == (4, 4)
+    for l in range(4):
+        for t in range(4):
+            want = float(core.smap_cross_map(X[l], X[t], E=int(E_opt[t]),
+                                             theta=1.0))
+            np.testing.assert_allclose(rho[l, t], want, rtol=1e-4, atol=1e-4)
+
+
+def test_smap_jacobian_tracks_logistic_derivative():
+    """Deyle–Sugihara: at large θ the S-Map coefficients approximate the
+    true state-dependent Jacobian — for the logistic map, f'(x) = r − 2rx."""
+    r = 3.8
+    x = jnp.asarray(ts.logistic_map(400, r=r))
+    J = np.asarray(core.smap_jacobian(x, E=1, theta=8.0, impl="ref"))
+    assert J.shape == (399, 1)
+    truth = r - 2 * r * np.asarray(x)[:399]
+    corr = np.corrcoef(J[:, 0], truth)[0, 1]
+    assert corr > 0.95, f"Jacobian does not track f'(x): corr={corr}"
+
+
+def test_smap_fit_coef_matches_oracle_coefficients(rng):
+    x = np.asarray(ts.logistic_map(140)) + 0.01 * rng.normal(
+        size=140).astype(np.float32)
+    _, _, want_c = _numpy_smap(x, x[None], E=2, tau=1, Tp=1, theta=2.0)
+    _, coef = core.smap_fit(jnp.asarray(x), jnp.asarray(x)[None], E=2,
+                            thetas=(2.0,), impl="ref")
+    assert coef.shape == (1, 1, 138, 3)
+    np.testing.assert_allclose(np.asarray(coef[0, 0]), want_c[0], rtol=5e-2,
+                               atol=5e-3)
+
+
+def test_sharded_smap_theta_matches_local_single_device():
+    panel, _ = ts.forced_network_panel(4, 220, seed=13)
+    X = jnp.asarray(panel)
+    mesh = make_ccm_mesh((1,), ("data",))
+    thetas = (0.0, 1.0, 4.0)
+    rho_s = np.asarray(sharded_smap_theta(X, E=2, thetas=thetas, mesh=mesh,
+                                          impl="ref"))
+    rho_l = np.asarray(core.smap_theta_sweep(X, E=2, thetas=thetas,
+                                             impl="ref"))
+    assert rho_s.shape == (4, 3)
+    np.testing.assert_allclose(rho_s, rho_l, rtol=1e-5, atol=1e-5)
+
+
+def test_sharded_smap_matrix_matches_local_single_device():
+    panel, _ = ts.forced_network_panel(4, 220, seed=9)
+    X = jnp.asarray(panel)
+    mesh = make_ccm_mesh((1, 1), ("data", "model"))
+    rho_s = np.asarray(sharded_smap_matrix(X, X, E=2, theta=1.0, mesh=mesh,
+                                           impl="ref"))
+    rho_l = core.smap_matrix(X, 2, theta=1.0, impl="ref")
+    np.testing.assert_allclose(rho_s, rho_l, rtol=1e-4, atol=1e-4)
