@@ -9,6 +9,7 @@ directory so the perf trajectory is diffable across PRs:
   bench_roofline → paper Figs. 6–9 (arithmetic intensity / roofline)
   bench_esweep   → ISSUE 1 (seed per-E optimal-E sweep vs multi-E engine)
   bench_smap     → ISSUE 2 (seed per-query S-Map lstsq vs batched engine)
+  bench_edm      → ISSUE 3 (session facade overhead; cached-kNN CCM reuse)
 """
 
 from __future__ import annotations
@@ -22,6 +23,7 @@ from benchmarks import common
 def main() -> None:
     from benchmarks import (
         bench_ccm,
+        bench_edm,
         bench_esweep,
         bench_knn,
         bench_lookup,
@@ -36,6 +38,7 @@ def main() -> None:
         "roofline": bench_roofline,
         "esweep": bench_esweep,
         "smap": bench_smap,
+        "edm": bench_edm,
     }
     only = sys.argv[1] if len(sys.argv) > 1 else None
     print("name,us_per_call,derived")

@@ -4,11 +4,12 @@ Run:  PYTHONPATH=src python examples/ccm_brain.py [--series 24] [--steps 600]
       PYTHONPATH=src python examples/ccm_brain.py --sharded --devices 8
 
 Builds a panel of coupled "neurons" where a few driver units force the
-rest, determines each series' optimal embedding dimension (simplex),
-computes the full N×N cross-map skill matrix (grouped by E, exactly
-kEDM §3.4), and reports how well the known driver topology is recovered.
-``--sharded`` re-runs the matrix through the shard_map engine on emulated
-devices — the same code path the 512-chip dry-run lowers.
+rest, then runs the whole workload through ONE ``repro.edm.EDM`` session:
+per-series optimal embedding dimension, and the full N×N cross-map skill
+matrix (grouped by E, exactly kEDM §3.4) reusing the optimal-E pass's
+kNN master tables. ``--sharded`` hands the SAME session a device mesh —
+the plan layer then routes the matrix through the E-grouped
+zero-collective shard_map engine instead, no other code change.
 """
 
 import argparse
@@ -30,41 +31,40 @@ def main():
         os.environ["XLA_FLAGS"] = (
             f"--xla_force_host_platform_device_count={args.devices}")
 
-    import jax
-    import jax.numpy as jnp
     import numpy as np
 
-    from repro import core
     from repro.data import timeseries as ts
+    from repro.edm import EDM, EDMConfig
 
     panel_np, adj = ts.forced_network_panel(
         args.series, args.steps, n_drivers=args.drivers, coupling=0.1,
         seed=11)
-    panel = jnp.asarray(panel_np)
     N = args.series
 
     print(f"panel: {N} series × {args.steps} steps, "
           f"{args.drivers} hidden drivers")
 
-    t0 = time.time()
-    E_opt, _ = core.optimal_E_batch(panel, E_max=5)
-    # CCM needs E ≥ 2: an E=1 'manifold' is a line and cross-map skill
-    # from it is degenerate (biases the asymmetry statistic)
-    E_opt = np.maximum(np.asarray(E_opt), 2)
-    print(f"optimal-E search: {time.time() - t0:.1f}s, "
-          f"E histogram: {np.bincount(E_opt)[1:]}")
+    cfg = EDMConfig(E_max=5)
+    if args.sharded:
+        from repro.distributed import make_ccm_mesh
+        cfg = cfg.replace(mesh=make_ccm_mesh((args.devices // 2, 2),
+                                             ("data", "model")))
+    sess = EDM(panel_np, cfg)
 
     t0 = time.time()
-    if args.sharded:
-        from repro.distributed import make_ccm_mesh, sharded_ccm_matrix
-        mesh = make_ccm_mesh((args.devices // 2, 2), ("data", "model"))
-        E = int(np.median(np.asarray(E_opt)))
-        rho = np.asarray(sharded_ccm_matrix(panel, panel, E=E, mesh=mesh))
-        print(f"sharded CCM matrix ({args.devices} devices, fixed E={E}): "
-              f"{time.time() - t0:.1f}s")
-    else:
-        rho = core.ccm_matrix(panel, E_opt)
-        print(f"CCM matrix (grouped by optimal E): {time.time() - t0:.1f}s")
+    E_opt, _ = sess.optimal_E()
+    # CCM needs E ≥ 2: an E=1 'manifold' is a line and cross-map skill
+    # from it is degenerate (biases the asymmetry statistic)
+    E_opt = np.maximum(E_opt, 2)
+    print(f"optimal-E search [{sess.plan('optimal_E').placement}]: "
+          f"{time.time() - t0:.1f}s, E histogram: {np.bincount(E_opt)[1:]}")
+
+    t0 = time.time()
+    print(f"xmap plan: {sess.plan('xmap').describe()}")
+    rho = sess.xmap(E_opt=E_opt)
+    where = (f"sharded, {args.devices} devices, E-grouped"
+             if args.sharded else "local, cached-kNN E-groups")
+    print(f"CCM matrix ({where}): {time.time() - t0:.1f}s")
 
     # driver detection: evidence that unit d forces unit j is rho[j, d]
     # (cross-map the driver from the follower's manifold). The standard

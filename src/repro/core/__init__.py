@@ -1,9 +1,19 @@
-"""repro.core — the paper's contribution: EDM as a composable JAX library.
+"""repro.core — the EDM compute primitives underneath the session facade.
 
-Layers (kEDM §3): fused-embedding all-kNN search, batched simplex lookups
-with optional fused Pearson ρ, simplex projection (optimal-E), convergent
-cross mapping, S-Map, and stable streaming statistics. The distributed
-pairwise-CCM engine lives in ``repro.distributed.sharded_ccm``.
+The user-facing entry point is ``repro.edm``: an ``EDM`` session binds a
+panel + ``EDMConfig`` once, and its ``optimal_E`` / ``simplex`` / ``smap``
+/ ``ccm`` / ``xmap`` methods dispatch plans that share kNN/embedding state
+and pick local vs sharded placement — kEDM's "small API over one
+codebase" design. This package holds the primitives those plans compose
+(kEDM §3): fused-embedding all-kNN search, batched simplex lookups with
+fused Pearson ρ, the incremental multi-E optimal-E sweep, convergent
+cross mapping, the batched S-Map Gram engine, and stable streaming
+statistics. The free functions here remain supported — the matrix
+drivers (``ccm_matrix``, ``smap_matrix``) are now thin wrappers over the
+facade — but new code should prefer a session: it computes neighbor
+tables once per panel instead of once per call site. The zero-collective
+sharded engines live in ``repro.distributed.sharded_ccm``; the migration
+table from pyEDM/kEDM names is in docs/API.md.
 """
 
 from repro.core.ccm import ccm_group, ccm_matrix, cross_map

@@ -13,7 +13,6 @@ series sharing that E (§3.4's grouping), fused Pearson ρ.
 
 from __future__ import annotations
 
-import collections
 import functools
 
 import jax
@@ -105,7 +104,7 @@ def ccm_group(
 
 def ccm_matrix(
     X: jax.Array,
-    E_opt,
+    E_opt=None,
     *,
     tau: int = 1,
     Tp: int = 0,
@@ -115,22 +114,24 @@ def ccm_matrix(
 
     Entry (l, t) = skill of cross-mapping series t from series l's manifold
     (evidence "t causes l"). Per kEDM §3.4: the library is embedded at each
-    *target's* optimal E, targets grouped by E so each E-group costs ONE
-    batched ``ccm_group`` launch over the full library axis (the seed ran a
-    host Python loop of N_lib ``cross_map`` calls per group).
+    *target's* optimal E, targets grouped by E so each E-group is one
+    batched launch over the full library axis.
+
+    .. deprecated:: thin wrapper over ``repro.edm.EDM.xmap`` kept for
+       compatibility — a session reuses its kNN master tables and E_opt
+       across *every* method call instead of per ``ccm_matrix`` call;
+       prefer it for anything beyond a one-shot matrix. ``E_opt=None``
+       now computes the per-series optimal E through the session cache.
     """
+    from repro.edm import EDM, EDMConfig
+
     X = jnp.asarray(X)
-    N = X.shape[0]
-    E_opt = np.asarray(E_opt, dtype=np.int32)
-    if E_opt.shape != (N,):
-        raise ValueError(f"E_opt must be ({N},), got {E_opt.shape}")
-    groups: dict[int, np.ndarray] = {
-        int(E): np.nonzero(E_opt == E)[0]
-        for E in sorted(collections.Counter(E_opt.tolist()))
-    }
-    rho = np.zeros((N, N), np.float32)
-    for E, members in groups.items():
-        rho[:, members] = np.asarray(
-            ccm_group(X, X[members], E=E, tau=tau, Tp=Tp, impl=impl)
-        )
-    return rho
+    if E_opt is not None:
+        E_opt = np.asarray(E_opt, dtype=np.int32)
+        if E_opt.shape != (X.shape[0],):
+            raise ValueError(
+                f"E_opt must be ({X.shape[0]},), got {E_opt.shape}")
+    sess = EDM(X, EDMConfig(tau=tau, Tp_cross=Tp, impl=impl,
+                            E_max=int(np.max(E_opt)) if E_opt is not None
+                            else 20))
+    return sess.xmap(method="simplex", E_opt=E_opt)

@@ -5,6 +5,10 @@ EDM step the paper relies on to pick each series' embedding dimension
 module determines). Forecast skill ρ(E) is evaluated by predicting
 ``x(t + Tp)`` from the E-dimensional manifold with the point itself
 excluded (leave-one-out), as in cppEDM's ``EmbedDimension``.
+
+These are the facade's primitives: prefer ``repro.edm.EDM.optimal_E`` /
+``.simplex``, which run the same engine once per panel and cache the
+multi-E kNN tables for every later simplex/CCM call on the session.
 """
 
 from __future__ import annotations

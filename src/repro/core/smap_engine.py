@@ -35,7 +35,6 @@ tested E/τ/Tp/θ grid. For tighter parity enable x64 and feed float64.
 
 from __future__ import annotations
 
-import collections
 import functools
 
 import jax
@@ -242,7 +241,7 @@ def smap_group(
 
 def smap_matrix(
     X: jax.Array,
-    E_opt,
+    E_opt=None,
     *,
     tau: int = 1,
     Tp: int = 0,
@@ -254,24 +253,27 @@ def smap_matrix(
 
     The S-Map-based causality workload beside simplex CCM: entry (l, t) is
     the skill of cross-mapping series t from series l's manifold at
-    locality θ. As in ``core.ccm.ccm_matrix``, the library is embedded at
-    each *target's* optimal E and targets are grouped by E so each E-group
-    costs one batched ``smap_group`` launch. ``E_opt`` may be an int
-    (uniform E) or a per-series (N,) array.
+    locality θ. The library is embedded at each *target's* optimal E and
+    targets are grouped by E so each E-group costs one batched
+    ``smap_group`` launch. ``E_opt`` may be an int (uniform E), a
+    per-series (N,) array, or ``None`` to compute the optimal E through
+    the session cache.
+
+    .. deprecated:: thin wrapper over
+       ``repro.edm.EDM.xmap(method="smap")`` kept for compatibility — a
+       session shares E_opt/kNN state across methods; prefer it.
     """
+    from repro.edm import EDM, EDMConfig
+
     X = jnp.asarray(X)
-    N = X.shape[0]
-    E_opt = np.broadcast_to(np.asarray(E_opt, dtype=np.int32), (N,))
-    groups: dict[int, np.ndarray] = {
-        int(E): np.nonzero(E_opt == E)[0]
-        for E in sorted(collections.Counter(E_opt.tolist()))
-    }
-    rho = np.zeros((N, N), np.float32)
-    for E, members in groups.items():
-        rho[:, members] = np.asarray(
-            smap_group(X, X[members], E=E, tau=tau, Tp=Tp,
-                       theta=float(theta), ridge=ridge, impl=impl))
-    return rho
+    if E_opt is not None:
+        E_opt = np.broadcast_to(np.asarray(E_opt, dtype=np.int32),
+                                (X.shape[0],))
+    sess = EDM(X, EDMConfig(tau=tau, Tp_cross=Tp, theta=float(theta),
+                            ridge=ridge, impl=impl,
+                            E_max=int(np.max(E_opt)) if E_opt is not None
+                            else 20))
+    return sess.xmap(method="smap", E_opt=E_opt)
 
 
 def smap_jacobian(

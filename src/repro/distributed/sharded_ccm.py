@@ -9,9 +9,12 @@ all-kNN + one batched fused-ρ lookup per library — and owns the matching
 data movement is the initial placement of the two (replicated-axis) input
 views, matching mpEDM's embarrassingly-parallel MPI layout.
 
-The engine uses a fixed embedding dimension E (the paper's synthetic
-benchmarks do the same); per-target optimal-E grouping is handled at the
-driver level (repro.core.ccm.ccm_matrix) by calling this once per E-group.
+Two embedding-dimension modes: a fixed E (the paper's synthetic
+benchmarks), or a per-target ``E_opt`` table — targets are then laid out
+so every shard owns an identical *static* segment structure of E-groups
+(see ``_egroup_layout``) and the inner loop switches E per segment with
+still zero collectives. The facade (``repro.edm.EDM.xmap``) feeds
+``sharded_optimal_E``'s output straight into the ``E_opt`` mode.
 """
 
 from __future__ import annotations
@@ -20,6 +23,7 @@ import functools
 
 import jax
 import jax.numpy as jnp
+import numpy as np
 from jax.sharding import PartitionSpec as P
 
 from repro.core.embedding import embed_offset, num_embedded, pred_rows
@@ -38,6 +42,53 @@ def pad_to_multiple(x: jax.Array, multiple: int, axis: int = 0) -> jax.Array:
     widths = [(0, 0)] * x.ndim
     widths[axis] = (0, pad)
     return jnp.pad(x, widths)
+
+
+def mesh_axes_size(mesh, axes) -> int:
+    """Total device count across the named mesh axes."""
+    shape = dict(mesh.shape)
+    size = 1
+    for ax in axes:
+        size *= int(shape[ax])
+    return size
+
+
+def pad_members(members: np.ndarray, multiple: int) -> np.ndarray:
+    """Pad an index list to a multiple by repeating its last entry
+    (real data — padded slots' results are discarded by the caller)."""
+    pad = (-len(members)) % multiple
+    if pad == 0:
+        return members
+    return np.concatenate([members, np.repeat(members[-1:], pad)])
+
+
+def _egroup_layout(E_opt, S: int):
+    """Host-side target layout giving every shard identical E-groups.
+
+    Sharding a contiguously E-sorted target axis would hand each device
+    an arbitrary mix of groups (data-dependent, untraceable). Instead
+    each group's member list is padded to a multiple of the S target
+    shards (repeating its last member — real data, results discarded)
+    and split into S equal chunks; shard d's block is its chunk of every
+    group in order. Every shard then shares ONE static segment structure
+    ``segs = ((E, width), ...)``, so the SPMD inner loop switches E per
+    segment with no collective and no data-dependent shapes.
+
+    Returns (perm, keep, segs): permuted-target order (take ``X[perm]``),
+    the per-slot "not a pad" mask, and the per-shard segments.
+    """
+    seg_perm, seg_keep, segs = [], [], []
+    for E in sorted(set(np.asarray(E_opt, np.int32).tolist())):
+        members = np.nonzero(np.asarray(E_opt, np.int32) == E)[0]
+        padded = pad_members(members, S)
+        keep = np.arange(len(padded)) < len(members)
+        w = len(padded) // S
+        segs.append((int(E), w))
+        seg_perm.append(padded.reshape(S, w))
+        seg_keep.append(keep.reshape(S, w))
+    perm = np.concatenate(seg_perm, axis=1).reshape(-1)
+    keep = np.concatenate(seg_keep, axis=1).reshape(-1)
+    return perm, keep, tuple(segs)
 
 
 def _local_block(libs, tgts, *, E, tau, Tp, rows, off, hard_max, impl):
@@ -59,37 +110,82 @@ def sharded_ccm_matrix(
     X_lib: jax.Array,
     X_tgt: jax.Array,
     *,
-    E: int,
+    E: int | None = None,
     tau: int = 1,
     Tp: int = 0,
     mesh: jax.sharding.Mesh,
     lib_axes=("data",),
     tgt_axes=("model",),
     impl: str = "ref",
-) -> jax.Array:
+    E_opt=None,
+):
     """All-pairs CCM skill matrix on a device mesh.
 
     X_lib: (N_lib, L) — N_lib must divide evenly over ``lib_axes``.
     X_tgt: (N_tgt, L) — likewise over ``tgt_axes`` (use pad_to_multiple).
-    Returns (N_lib, N_tgt) ρ sharded as P(lib_axes, tgt_axes).
+
+    Fixed-E mode (``E=``): returns (N_lib, N_tgt) ρ sharded as
+    P(lib_axes, tgt_axes), never leaving the devices.
+    Per-target optimal-E mode (``E_opt=`` (N_tgt,) table): targets are
+    laid out per ``_egroup_layout`` so each shard runs identical static
+    E-segments (zero collectives; libraries are auto-padded over
+    ``lib_axes``); returns a host (N_lib, N_tgt) np.ndarray in the
+    original target order.
     """
     L = X_lib.shape[-1]
     if X_tgt.shape[-1] != L:
         raise ValueError("library/target series length mismatch")
-    rows = pred_rows(L, E, tau, Tp)
-    off = embed_offset(E, tau, Tp)
-    hard_max = num_embedded(L, E, tau) - 1 - max(Tp, 0)
-    fn = functools.partial(
-        _local_block, E=E, tau=tau, Tp=Tp, rows=rows, off=off,
-        hard_max=hard_max, impl=impl,
-    )
+    if (E is None) == (E_opt is None):
+        raise ValueError("pass exactly one of E= or E_opt=")
+
+    def block_fn(Eb):
+        return functools.partial(
+            _local_block, E=Eb, tau=tau, Tp=Tp,
+            rows=pred_rows(L, Eb, tau, Tp), off=embed_offset(Eb, tau, Tp),
+            hard_max=num_embedded(L, Eb, tau) - 1 - max(Tp, 0), impl=impl)
+
+    if E_opt is None:
+        mapped = _shard_map(
+            block_fn(E),
+            mesh=mesh,
+            in_specs=(P(lib_axes, None), P(tgt_axes, None)),
+            out_specs=P(lib_axes, tgt_axes),
+        )
+        return mapped(X_lib, X_tgt)
+    return _egrouped_matrix(X_lib, X_tgt, block_fn, E_opt=E_opt, mesh=mesh,
+                            lib_axes=lib_axes, tgt_axes=tgt_axes)
+
+
+def _egrouped_matrix(X_lib, X_tgt, block_fn, *, E_opt, mesh, lib_axes,
+                     tgt_axes) -> np.ndarray:
+    """Shared E-grouped driver: per-shard static E-segments, one SPMD
+    program, no collectives; host unpermute at result delivery."""
+    N_lib, N_tgt = X_lib.shape[0], X_tgt.shape[0]
+    E_opt = np.broadcast_to(np.asarray(E_opt, np.int32), (N_tgt,))
+    S_t = mesh_axes_size(mesh, tgt_axes)
+    S_l = mesh_axes_size(mesh, lib_axes)
+    perm, keep, segs = _egroup_layout(E_opt, S_t)
+    Xl = pad_to_multiple(X_lib, S_l, axis=0)
+    Xt = jnp.take(X_tgt, jnp.asarray(perm), axis=0)
+
+    def local(libs, tgts):
+        outs, o = [], 0
+        for Eg, w in segs:
+            seg = jax.lax.slice_in_dim(tgts, o, o + w, axis=0)
+            outs.append(block_fn(Eg)(libs, seg))
+            o += w
+        return jnp.concatenate(outs, axis=1)
+
     mapped = _shard_map(
-        fn,
+        local,
         mesh=mesh,
         in_specs=(P(lib_axes, None), P(tgt_axes, None)),
         out_specs=P(lib_axes, tgt_axes),
     )
-    return mapped(X_lib, X_tgt)
+    R = np.asarray(mapped(Xl, Xt))
+    rho = np.zeros((N_lib, N_tgt), np.float32)
+    rho[:, perm[keep]] = R[:N_lib, keep]
+    return rho
 
 
 def sharded_optimal_E(
@@ -169,7 +265,7 @@ def sharded_smap_matrix(
     X_lib: jax.Array,
     X_tgt: jax.Array,
     *,
-    E: int,
+    E: int | None = None,
     tau: int = 1,
     Tp: int = 0,
     theta: float = 1.0,
@@ -178,31 +274,46 @@ def sharded_smap_matrix(
     lib_axes=("data",),
     tgt_axes=("model",),
     impl: str = "ref",
-) -> jax.Array:
+    E_opt=None,
+):
     """All-pairs S-Map cross-map skill matrix on a device mesh.
 
     Same 2-D (library × target) decomposition and zero-collective inner
     loop as ``sharded_ccm_matrix``, with the simplex lookup replaced by
     the batched S-Map engine (fit on each local library's manifold,
-    predict the local targets). Returns (N_lib, N_tgt) ρ sharded as
-    P(lib_axes, tgt_axes).
+    predict the local targets).
+
+    Fixed-E mode (``E=``): returns (N_lib, N_tgt) ρ sharded as
+    P(lib_axes, tgt_axes). Per-target optimal-E mode (``E_opt=`` (N_tgt,)
+    table — ROADMAP item (b), fed by ``sharded_optimal_E``): each shard
+    fits its local libraries at every E-segment of its static layout
+    (see ``_egroup_layout``), still zero collectives; returns a host
+    (N_lib, N_tgt) np.ndarray in the original target order. Exposed as
+    ``repro.edm.EDM.xmap(method="smap")`` on mesh sessions.
     """
     from repro.core.smap_engine import smap_group
 
     if X_tgt.shape[-1] != X_lib.shape[-1]:
         raise ValueError("library/target series length mismatch")
+    if (E is None) == (E_opt is None):
+        raise ValueError("pass exactly one of E= or E_opt=")
 
-    def local(libs, tgts):
-        return smap_group(libs, tgts, E=E, tau=tau, Tp=Tp,
-                          theta=float(theta), ridge=ridge, impl=impl)
+    def block_fn(Eb):
+        def block(libs, tgts):
+            return smap_group(libs, tgts, E=Eb, tau=tau, Tp=Tp,
+                              theta=float(theta), ridge=ridge, impl=impl)
+        return block
 
-    mapped = _shard_map(
-        local,
-        mesh=mesh,
-        in_specs=(P(lib_axes, None), P(tgt_axes, None)),
-        out_specs=P(lib_axes, tgt_axes),
-    )
-    return mapped(X_lib, X_tgt)
+    if E_opt is None:
+        mapped = _shard_map(
+            block_fn(E),
+            mesh=mesh,
+            in_specs=(P(lib_axes, None), P(tgt_axes, None)),
+            out_specs=P(lib_axes, tgt_axes),
+        )
+        return mapped(X_lib, X_tgt)
+    return _egrouped_matrix(X_lib, X_tgt, block_fn, E_opt=E_opt, mesh=mesh,
+                            lib_axes=lib_axes, tgt_axes=tgt_axes)
 
 
 def ccm_step(X: jax.Array, *, E: int, tau: int, mesh: jax.sharding.Mesh,

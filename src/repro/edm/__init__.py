@@ -1,0 +1,25 @@
+"""repro.edm — the unified session API over the EDM toolkit.
+
+kEDM exposes a small facade (``edm.simplex``, ``edm.smap``,
+``edm.xmap``) over one performance-portable codebase; this package is
+that facade for the reproduction, subsuming the free-function zoo in
+``repro.core`` / ``repro.distributed``:
+
+* ``EDMConfig`` — frozen, validated hyperparameters (E/tau/Tp/θ/k/impl/
+  mesh) bound once instead of threaded through every call.
+* ``Dataset``  — an (N, L) panel with cached delay embeddings.
+* ``EDM``      — the session: ``optimal_E`` / ``simplex`` / ``smap`` /
+  ``ccm`` / ``xmap`` / ``submit_panel``, each dispatched through a
+  ``Plan`` that picks kernels + placement and reuses the session's
+  cached multi-E kNN master tables.
+
+See docs/API.md for the pyEDM/kEDM migration table.
+"""
+
+from repro.edm.config import DEFAULT_THETAS, EDMConfig
+from repro.edm.dataset import Dataset
+from repro.edm.plan import Plan
+from repro.edm.session import EDM, PanelResult
+
+__all__ = ["DEFAULT_THETAS", "EDM", "EDMConfig", "Dataset", "PanelResult",
+           "Plan"]

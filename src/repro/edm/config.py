@@ -1,0 +1,137 @@
+"""``EDMConfig`` — one frozen, validated home for every EDM hyperparameter.
+
+The free-function era threaded ``E/tau/Tp/theta/k/impl`` through ~25
+signatures; a config object is bound to a panel once (``repro.edm.EDM``)
+and every method derives what it needs from it. Validation happens in two
+stages: ``__post_init__`` checks everything that is knowable without data,
+``validate_panel`` checks the config against a concrete (N, L) panel
+(neighbor counts vs library size, mesh divisibility).
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Any
+
+from repro.core.embedding import num_embedded, pred_rows
+from repro.core.smap_engine import DEFAULT_THETAS
+from repro.kernels import ops
+
+
+@dataclasses.dataclass(frozen=True)
+class EDMConfig:
+    """Frozen EDM session configuration (kEDM's knobs, validated once).
+
+    E:        fixed embedding dimension; ``None`` means "per-series
+              optimal E" (the session sweeps 1..E_max and caches it).
+    E_max:    upper bound of the optimal-E sweep.
+    tau:      time-delay lag.
+    Tp:       forecast horizon for simplex / optimal-E / S-Map sweeps.
+    Tp_cross: cross-map horizon for ccm / xmap (kEDM uses 0).
+    theta:    S-Map locality for single-θ tasks (xmap method="smap").
+    thetas:   θ grid for the S-Map sweep / nonlinearity test.
+    k:        neighbor count; ``None`` means the simplex default E + 1.
+    ridge:    relative Tikhonov strength of the S-Map normal equations.
+    impl:     kernel implementation ("auto" | "pallas" | "interpret" |
+              "ref"); plans resolve it once via ``ops.resolve_impl``.
+    mesh:     a ``jax.sharding.Mesh`` routes every plan through the
+              zero-collective sharded engines; ``None`` stays local.
+    lib_axes / tgt_axes: mesh axis names of the library / target
+              decomposition (matching ``distributed.sharded_ccm``).
+    pad:      auto-pad panels to mesh multiples (``False`` = reject
+              panels the mesh does not divide evenly).
+    cache:    hold multi-E kNN master tables / E_opt in the session and
+              reuse them across methods (the facade's raison d'être).
+    """
+
+    E: int | None = None
+    E_max: int = 20
+    tau: int = 1
+    Tp: int = 1
+    Tp_cross: int = 0
+    theta: float = 1.0
+    thetas: tuple[float, ...] = DEFAULT_THETAS
+    k: int | None = None
+    ridge: float = 1e-6
+    impl: str = "auto"
+    mesh: Any = None
+    lib_axes: tuple[str, ...] = ("data",)
+    tgt_axes: tuple[str, ...] = ("model",)
+    pad: bool = True
+    cache: bool = True
+
+    def __post_init__(self):
+        if self.E is not None and self.E < 1:
+            raise ValueError(f"E must be >= 1, got {self.E}")
+        if self.E_max < 1:
+            raise ValueError(f"E_max must be >= 1, got {self.E_max}")
+        if self.E is not None and self.E > self.E_max:
+            object.__setattr__(self, "E_max", self.E)
+        if self.tau < 1:
+            raise ValueError(f"tau must be >= 1, got {self.tau}")
+        if self.Tp < 0 or self.Tp_cross < 0:
+            raise ValueError(
+                f"horizons must be >= 0, got Tp={self.Tp}, "
+                f"Tp_cross={self.Tp_cross}")
+        if self.theta < 0:
+            raise ValueError(f"theta must be >= 0, got {self.theta}")
+        thetas = tuple(float(t) for t in self.thetas)
+        if not thetas:
+            raise ValueError("thetas grid must not be empty")
+        if any(t < 0 for t in thetas):
+            raise ValueError(f"thetas must all be >= 0, got {thetas}")
+        object.__setattr__(self, "thetas", thetas)
+        if self.k is not None and self.k < 1:
+            raise ValueError(f"k must be >= 1, got {self.k}")
+        if self.ridge < 0:
+            raise ValueError(f"ridge must be >= 0, got {self.ridge}")
+        if self.impl not in ops.IMPLS:
+            raise ValueError(
+                f"unknown impl {self.impl!r}; expected one of {ops.IMPLS}")
+        object.__setattr__(self, "lib_axes", tuple(self.lib_axes))
+        object.__setattr__(self, "tgt_axes", tuple(self.tgt_axes))
+        if self.mesh is not None:
+            names = tuple(self.mesh.axis_names)
+            for ax in self.lib_axes + self.tgt_axes:
+                if ax not in names:
+                    raise ValueError(
+                        f"mesh has axes {names}, missing {ax!r}")
+
+    # ------------------------------------------------------------ derived
+
+    def k_for(self, E: int) -> int:
+        """Neighbor count at dimension E (simplex default E + 1)."""
+        return (E + 1) if self.k is None else self.k
+
+    @property
+    def slack(self) -> int:
+        """Extra master-table columns so every planned ``max_idx`` cap can
+        be applied post hoc: one candidate is lost per horizon step."""
+        return max(1, self.Tp, self.Tp_cross)
+
+    def mesh_axis_size(self, axes: tuple[str, ...]) -> int:
+        from repro.distributed.sharded_ccm import mesh_axes_size
+        return mesh_axes_size(self.mesh, axes)
+
+    # --------------------------------------------------------- validation
+
+    def validate_panel(self, N: int, L: int) -> None:
+        """Bind-time checks against a concrete (N, L) panel."""
+        E_chk = self.E if self.E is not None else self.E_max
+        num_embedded(L, E_chk, self.tau)  # raises "series too short"
+        rows = pred_rows(L, E_chk, self.tau, self.Tp)
+        if self.k is not None and self.k > rows:
+            raise ValueError(
+                f"k={self.k} exceeds the {rows} prediction rows of an "
+                f"(L={L}, E={E_chk}, tau={self.tau}, Tp={self.Tp}) panel")
+        if self.mesh is not None and not self.pad:
+            for axes in (self.lib_axes, self.tgt_axes):
+                size = self.mesh_axis_size(axes)
+                if N % size != 0:
+                    raise ValueError(
+                        f"mesh axes {axes} (size {size}) do not divide the "
+                        f"{N}-series panel; pass pad=True or pad the panel")
+
+    def replace(self, **changes) -> "EDMConfig":
+        """A copy with ``changes`` applied (and re-validated)."""
+        return dataclasses.replace(self, **changes)

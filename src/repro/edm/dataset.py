@@ -1,0 +1,66 @@
+"""``Dataset`` — a panel of time series plus cached delay embeddings."""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels import ops
+
+
+class Dataset:
+    """An (N, L) panel of equal-length series with embedding caches.
+
+    The facade's unit of state: every ``EDM`` session method operates on
+    one Dataset, and materialized delay embeddings (used by S-Map design
+    matrices and user inspection — the distance kernels fuse theirs) are
+    computed once per (E, tau) and held here.
+    """
+
+    def __init__(self, panel, *, names=None):
+        panel = jnp.asarray(panel)
+        if panel.ndim == 1:
+            panel = panel[None, :]
+        if panel.ndim != 2:
+            raise ValueError(f"panel must be (N, L) or (L,), got {panel.shape}")
+        self.panel = panel
+        if names is not None:
+            names = list(names)
+            if len(names) != panel.shape[0]:
+                raise ValueError(
+                    f"{len(names)} names for {panel.shape[0]} series")
+        self.names = names
+        self._embeddings: dict[tuple[int, int], jax.Array] = {}
+
+    @property
+    def N(self) -> int:
+        return self.panel.shape[0]
+
+    @property
+    def L(self) -> int:
+        return self.panel.shape[1]
+
+    def index_of(self, key) -> int:
+        """Series index for an int position or a name."""
+        if isinstance(key, str):
+            if self.names is None:
+                raise KeyError(f"panel has no names (asked for {key!r})")
+            return self.names.index(key)
+        return int(key)
+
+    def series(self, key) -> jax.Array:
+        return self.panel[self.index_of(key)]
+
+    def embedding(self, E: int, tau: int = 1) -> jax.Array:
+        """Cached (N, Lp, E) delay embeddings of every series."""
+        key = (int(E), int(tau))
+        if key not in self._embeddings:
+            self._embeddings[key] = jax.vmap(
+                lambda x: ops.delay_embed(x, E, tau))(self.panel)
+        return self._embeddings[key]
+
+    def __len__(self) -> int:
+        return self.N
+
+    def __repr__(self) -> str:  # pragma: no cover - cosmetic
+        return f"Dataset(N={self.N}, L={self.L})"

@@ -1,0 +1,212 @@
+"""Plan layer: what each session method will run, and the cached-table
+drivers it dispatches to.
+
+Every ``EDM`` method builds a ``Plan`` first — which kernels at which
+implementation, local vs sharded placement, and which session-cached
+state it can reuse — then executes it. The expensive shared state is the
+**multi-E kNN master table**: one uncapped ``ops.all_knn_multi_e`` pass
+per series (k_master = max needed k + slack columns) from which every
+per-(E, Tp) neighbor table the session needs is derived *post hoc*,
+bit-identically:
+
+* neighbor **indices**: the master rows are globally sorted by
+  (distance, index) — exactly ``lax.top_k``'s tie order — so filtering
+  out entries past a ``max_idx`` horizon cap and keeping the first k is
+  identical to running the capped top-k directly, as long as the master
+  carries ``slack`` >= number of excluded candidates spare columns
+  (one per horizon step).
+* neighbor **distances**: two bit-exact sources, matched to what the
+  legacy path being replaced used. The optimal-E sweep reads the master
+  distances directly (same multi-E accumulator the legacy sweep ran);
+  simplex/CCM lookups recompute just the k selected distances in the
+  same accumulation order as ``ops.pairwise_distances`` — O(rows·k·E)
+  instead of O(E·Lp²) — because the per-E pipeline's floats differ from
+  the multi-E accumulator's by ~1 ULP (negated-accumulator streams fuse
+  differently) and parity with the legacy free functions is bit-exact,
+  not approximate.
+
+Memory: a master table holds 2 · N · E_max · L · k_master values (f32 +
+i32). That is the deliberate price of "compute neighbors once, reuse
+everywhere" (kEDM §2.1); sessions on panels too big for it set
+``cache=False`` or a mesh (sharded plans keep state device-resident).
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import functools
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.embedding import embed_offset, num_embedded, pred_rows
+from repro.kernels import ops
+
+
+@dataclasses.dataclass(frozen=True)
+class Plan:
+    """What a session method resolved to run (introspectable, hashable)."""
+
+    task: str              # "optimal_E" | "simplex" | "smap" | "ccm" | "xmap"
+    impl: str              # concrete kernel implementation (never "auto")
+    placement: str         # "local" | "sharded"
+    E: str                 # "fixed:<n>" | "per-series" | "sweep:1..<E_max>"
+    Tp: int
+    reuse: tuple[str, ...]  # session cache keys this plan reads
+    builds: tuple[str, ...]  # session cache keys this plan populates
+    detail: str = ""
+
+    def describe(self) -> str:
+        reuse = ", ".join(self.reuse) if self.reuse else "nothing"
+        builds = ", ".join(self.builds) if self.builds else "nothing"
+        return (f"{self.task}[{self.placement}/{self.impl}] E={self.E} "
+                f"Tp={self.Tp} reuses {reuse}; builds {builds}"
+                + (f" ({self.detail})" if self.detail else ""))
+
+
+# ---------------------------------------------------------------- master
+
+
+@functools.partial(jax.jit, static_argnames=("E_max", "tau", "k", "impl"))
+def panel_master(X, *, E_max, tau, k, impl):
+    """Uncapped multi-E kNN master tables for a whole (N, L) panel.
+
+    One ``all_knn_multi_e`` pass per series (sequential ``lax.map``
+    bounds peak memory at one series' accumulator) →
+    (dists, idx), both (N, E_max, L, k).
+    """
+
+    def one(x):
+        return ops.all_knn_multi_e(x, E_max=E_max, tau=tau, k=k,
+                                   exclude_self=True, max_idx=None, impl=impl)
+
+    return jax.lax.map(one, X)
+
+
+def _derive_idx(iE, *, k, max_idx):
+    """First k master indices surviving a ``max_idx`` cap (stable order).
+
+    iE: one series' master index level, (rows, k_master). Returns
+    ((rows, k) idx with -1 in slots lacking a valid candidate, validity
+    mask) — index-identical to a capped ``topk_select``.
+    """
+    valid = (iE >= 0) & (iE <= max_idx)
+    order = jnp.argsort(jnp.where(valid, 0, 1).astype(jnp.int32),
+                        axis=1)[:, :k]  # jnp.argsort is stable
+    ok = jnp.take_along_axis(valid, order, axis=1)
+    return jnp.where(ok, jnp.take_along_axis(iE, order, axis=1), -1), ok
+
+
+def _derive(dE, iE, *, k, max_idx):
+    """Like ``_derive_idx`` but also carrying the master distances —
+    bit-identical to a capped ``topk_select`` (see module docstring)."""
+    valid = (iE >= 0) & (iE <= max_idx)
+    order = jnp.argsort(jnp.where(valid, 0, 1).astype(jnp.int32),
+                        axis=1)[:, :k]
+    ok = jnp.take_along_axis(valid, order, axis=1)
+    d = jnp.where(ok, jnp.take_along_axis(dE, order, axis=1), jnp.inf)
+    i = jnp.where(ok, jnp.take_along_axis(iE, order, axis=1), -1)
+    return d, i, ok
+
+
+def _gathered_dists(x, idx, ok, *, E, tau):
+    """Euclidean distances of the selected neighbor pairs only.
+
+    Same accumulation order as ``ops.pairwise_distances`` (acc += d²
+    per lag k), so the values are bit-identical to the per-E pipeline's
+    at O(rows·k·E) instead of O(E·Lp²). Invalid slots → inf.
+    """
+    Lp = num_embedded(x.shape[-1], E, tau)
+    rows = idx.shape[0]
+    ii = jnp.arange(rows, dtype=jnp.int32)[:, None]
+    jj = jnp.maximum(idx, 0)
+    acc = jnp.zeros(idx.shape, jnp.float32)
+    xf = x.astype(jnp.float32)
+    for lag in range(E):
+        xk = jax.lax.dynamic_slice_in_dim(xf, lag * tau, Lp, axis=-1)
+        d = xk[ii] - xk[jj]
+        acc = acc + d * d
+    return jnp.where(ok, jnp.sqrt(jnp.maximum(acc, 0.0)), jnp.inf)
+
+
+# ---------------------------------------------------- cached-table drivers
+
+
+@functools.partial(jax.jit,
+                   static_argnames=("E_max", "tau", "Tp", "impl"))
+def rho_curves_from_master(X, dM, iM, *, E_max, tau, Tp, impl):
+    """ρ(E) for every series from the master tables → (N, E_max).
+
+    Reads the master's own distances (the legacy sweep ran the same
+    multi-E accumulator, so this is bit-identical to
+    ``core.simplex.rho_curve``) and derives each level's Tp-capped
+    table post hoc instead of re-running the engine.
+    """
+    L = X.shape[-1]
+
+    def one(args):
+        x, d, i = args
+        rhos = []
+        for E in range(1, E_max + 1):
+            rows = pred_rows(L, E, tau, Tp)
+            mx = num_embedded(L, E, tau) - 1 - Tp
+            off = embed_offset(E, tau, Tp)
+            dk, ik, _ = _derive(d[E - 1, :rows], i[E - 1, :rows],
+                                k=E + 1, max_idx=mx)
+            w = ops.make_weights(dk)
+            rhos.append(
+                ops.lookup_rho(x[None, :], ik, w, offset=off, impl=impl)[0])
+        return jnp.stack(rhos)
+
+    return jax.lax.map(one, (X, dM, iM))
+
+
+@functools.partial(jax.jit, static_argnames=("E", "tau", "Tp", "k", "impl"))
+def simplex_skill_from_master(X, iM_E, *, E, tau, Tp, k, impl):
+    """Leave-one-out simplex skill per series from cached indices → (N,).
+
+    iM_E: (N, L, k_master) master index level E. Bit-identical to
+    ``core.simplex.simplex_skill`` per series (indices derived, selected
+    distances recomputed in pairwise order).
+    """
+    L = X.shape[-1]
+    Lp = num_embedded(L, E, tau)
+    rows = pred_rows(L, E, tau, Tp)
+    off = embed_offset(E, tau, Tp)
+
+    def one(args):
+        x, iE = args
+        ik, ok = _derive_idx(iE[:Lp], k=k, max_idx=Lp - 1 - Tp)
+        d = _gathered_dists(x, ik, ok, E=E, tau=tau)
+        w = ops.make_weights(d)
+        return ops.lookup_rho(x[None, :], ik[:rows], w[:rows], offset=off,
+                              impl=impl)[0]
+
+    return jax.lax.map(one, (X, iM_E))
+
+
+@functools.partial(jax.jit, static_argnames=("E", "tau", "Tp", "k", "impl"))
+def ccm_group_from_master(X, iM_E, targets, *, E, tau, Tp, k, impl):
+    """Batched CCM block from cached neighbor indices → (N_lib, N_tgt).
+
+    The cached-session counterpart of ``core.ccm.ccm_group``: instead of
+    one O(E·Lp²) pairwise + top-k pipeline per library, each library's
+    neighbors are derived from its master index level (iM_E, (N, L,
+    k_master)) and only the k selected distances are recomputed —
+    bit-identical output (see module docstring).
+    """
+    L = X.shape[-1]
+    Lp = num_embedded(L, E, tau)
+    rows = pred_rows(L, E, tau, Tp)
+    off = embed_offset(E, tau, Tp)
+    hard_max = Lp - 1 - max(Tp, 0)
+
+    def one_library(args):
+        x, iE = args
+        ik, ok = _derive_idx(iE[:Lp], k=k, max_idx=hard_max)
+        d = _gathered_dists(x, ik, ok, E=E, tau=tau)
+        w = ops.make_weights(d)
+        return ops.lookup_rho(targets, ik[:rows], w[:rows], offset=off,
+                              impl=impl)
+
+    return jax.lax.map(one_library, (X, iM_E))

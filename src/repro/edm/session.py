@@ -1,0 +1,442 @@
+"""The ``EDM`` session — one facade over the whole EDM toolkit.
+
+kEDM's design win is a small user-facing API (``simplex``, ``smap``,
+``xmap``) over a single dispatching codebase; this session object is that
+facade for the reproduction. Bind a panel and a config once::
+
+    sess = EDM(panel, EDMConfig(E_max=8, tau=2))
+    E_opt, rho = sess.optimal_E()      # one multi-E kNN pass, cached
+    skill = sess.simplex()             # free: read from the cached sweep
+    causal = sess.xmap()               # reuses the SAME kNN master tables
+    theta_curves = sess.smap()         # batched S-Map nonlinearity test
+
+Every method builds a ``Plan`` (``sess.plan(task)`` shows it) choosing
+kernels, implementation and local-vs-sharded placement once, then
+executes it. The multi-E kNN master tables built by ``optimal_E`` are
+held in the session and reused by ``simplex``/``xmap`` instead of being
+recomputed per call site; a ``mesh=`` in the config transparently routes
+plans through the zero-collective sharded engines in
+``repro.distributed.sharded_ccm``.
+
+Implementation pinning: the session resolves ``config.impl`` once at
+bind time (``ops.resolve_impl``) and passes the concrete name into every
+kernel call — the reliable form of ``ops.use_impl``'s scoped default,
+which cannot retroactively re-key already-traced jitted programs (see
+its docstring's caveat).
+"""
+
+from __future__ import annotations
+
+import collections
+import dataclasses
+
+import jax.numpy as jnp
+import numpy as np
+
+from repro.edm.config import EDMConfig
+from repro.edm.dataset import Dataset
+from repro.edm.plan import (
+    Plan,
+    ccm_group_from_master,
+    panel_master,
+    rho_curves_from_master,
+    simplex_skill_from_master,
+)
+from repro.kernels import ops
+
+
+def _e_groups(E_opt, N: int):
+    """Per-series E table → {E: member indices}, kEDM §3.4's grouping."""
+    E_opt = np.broadcast_to(np.asarray(E_opt, np.int32), (N,)).copy()
+    return E_opt, {
+        int(E): np.nonzero(E_opt == E)[0]
+        for E in sorted(collections.Counter(E_opt.tolist()))
+    }
+
+
+@dataclasses.dataclass
+class PanelResult:
+    """Results of one queued ``submit_panel`` ticket."""
+
+    E_opt: np.ndarray | None = None
+    rho: np.ndarray | None = None          # (N, E_max) optimal-E curves
+    smap: np.ndarray | None = None         # (N, |thetas|) θ-sweep skill
+    xmap: np.ndarray | None = None         # (N, N) cross-map matrix
+
+
+class EDM:
+    """Session facade: shared kNN/embedding state + plan-based dispatch."""
+
+    def __init__(self, data, config: EDMConfig | None = None, **overrides):
+        if config is None:
+            config = EDMConfig(**overrides)
+        elif overrides:
+            config = config.replace(**overrides)
+        self.data = data if isinstance(data, Dataset) else Dataset(data)
+        self.config = config
+        config.validate_panel(self.data.N, self.data.L)
+        self._impl = ops.resolve_impl(config.impl)
+        self._cache: dict[str, object] = {}
+        self.stats: collections.Counter = collections.Counter()
+        self._queue: list[tuple[int, jnp.ndarray, tuple[str, ...]]] = []
+        self._next_ticket = 0
+
+    # ------------------------------------------------------------- plans
+
+    def plan(self, task: str, *, E=None) -> Plan:
+        """The Plan a method call would execute (introspection)."""
+        c = self.config
+        sharded = c.mesh is not None
+        placement = "sharded" if sharded else "local"
+        cached = c.cache and not sharded
+        have_master = "master" in self._cache
+        have_rho = "rho" in self._cache
+        if task == "optimal_E":
+            return Plan(
+                task=task, impl=self._impl, placement=placement,
+                E=f"sweep:1..{c.E_max}", Tp=c.Tp,
+                reuse=(("rho",) if have_rho else
+                       ("master",) if (cached and have_master) else ()),
+                builds=() if have_rho else (
+                    ("master", "rho") if cached else ("rho",)),
+                detail="sharded_optimal_E" if sharded else (
+                    "derive per-E tables from kNN master" if cached
+                    else "legacy optimal_E_batch"),
+            )
+        if task == "simplex":
+            e_desc = (f"fixed:{E or c.E}" if (E or c.E) else "per-series")
+            return Plan(
+                task=task, impl=self._impl, placement="local",
+                E=e_desc, Tp=c.Tp,
+                reuse=(("master",) if (cached and (E or c.E)) else ("rho",)),
+                builds=(),
+                detail=("skill read off the cached ρ(E) sweep"
+                        if not (E or c.E) else
+                        "indices from kNN master, k distances recomputed"
+                        if cached else "legacy per-series simplex_skill"),
+            )
+        if task == "smap":
+            e_desc = f"fixed:{E or c.E}" if (E or c.E) else "per-series"
+            return Plan(
+                task=task, impl=self._impl, placement=placement,
+                E=e_desc, Tp=c.Tp,
+                reuse=() if (E or c.E) else ("rho",),
+                builds=(),
+                detail="sharded_smap_theta per E-group" if sharded
+                else "batched Gram engine per E-group",
+            )
+        if task == "ccm":
+            return Plan(
+                task=task, impl=self._impl, placement="local",
+                E=f"fixed:{E or c.E}" if (E or c.E) else "per-series",
+                Tp=c.Tp_cross,
+                reuse=() if (E or c.E) else ("rho",), builds=(),
+                detail="legacy cross_map convergence sweep",
+            )
+        if task == "xmap":
+            return Plan(
+                task=task, impl=self._impl, placement=placement,
+                E=f"fixed:{c.E}" if c.E else "per-series", Tp=c.Tp_cross,
+                reuse=(("master",) if cached else ()) + (
+                    () if c.E else ("rho",)),
+                builds=("master",) if (cached and not have_master) else (),
+                detail="E-grouped sharded matrix, zero collectives"
+                if sharded else (
+                    "E-grouped lookups on cached kNN master" if cached
+                    else "legacy ccm_group per E-group"),
+            )
+        raise ValueError(f"unknown task {task!r}")
+
+    # ------------------------------------------------------------ caches
+
+    def _master(self, E_levels: int):
+        """Multi-E kNN master tables covering levels 1..E_levels.
+
+        Returns (dists, idx, k_master, levels). Built lazily at the
+        highest level any method has needed so far: a fixed-E session
+        never pays for (or crashes on) a full E_max sweep it will not
+        use, and a later, deeper request rebuilds once and re-caches —
+        reusing a master below the requested level would silently gather
+        the wrong table (jnp clamps out-of-range indices).
+        """
+        c = self.config
+        hit = self._cache.get("master")
+        if hit is not None and hit[3] >= E_levels:
+            self.stats["knn_master_hits"] += 1
+            return hit
+        k_m = max(E_levels + 1, c.k or 0) + c.slack
+        dM, iM = panel_master(self.data.panel, E_max=E_levels, tau=c.tau,
+                              k=k_m, impl=self._impl)
+        self.stats["knn_master_builds"] += 1
+        hit = self._cache["master"] = (dM, iM, k_m, E_levels)
+        return hit
+
+    def _rho(self):
+        """Cached (E_opt, rho-curve) pair, computing it on first use."""
+        hit = self._cache.get("rho")
+        if hit is None:
+            hit = self._cache["rho"] = self._run_optimal_E()
+        else:
+            self.stats["rho_hits"] += 1
+        return hit
+
+    # ---------------------------------------------------------- optimal E
+
+    def _run_optimal_E(self) -> tuple[np.ndarray, np.ndarray]:
+        c = self.config
+        X = self.data.panel
+        if c.mesh is not None:
+            from repro.distributed.sharded_ccm import (
+                pad_to_multiple, sharded_optimal_E)
+            size = c.mesh_axis_size(c.lib_axes)
+            Xp = pad_to_multiple(X, size, axis=0)
+            E_opt, rho = sharded_optimal_E(
+                Xp, E_max=c.E_max, tau=c.tau, Tp=c.Tp, mesh=c.mesh,
+                axes=c.lib_axes, impl=self._impl)
+            E_opt = np.asarray(E_opt)[: self.data.N]
+            rho = np.asarray(rho)[: self.data.N]
+        elif c.cache:
+            dM, iM, _, lv = self._master(c.E_max)
+            rho = np.asarray(rho_curves_from_master(
+                X, dM[:, :c.E_max], iM[:, :c.E_max], E_max=c.E_max,
+                tau=c.tau, Tp=c.Tp, impl=self._impl))
+            E_opt = (np.argmax(rho, axis=1) + 1).astype(np.int32)
+        else:
+            from repro.core.simplex import optimal_E_batch
+            E_opt, rho = optimal_E_batch(
+                X, E_max=c.E_max, tau=c.tau, Tp=c.Tp, impl=self._impl)
+            E_opt, rho = np.asarray(E_opt), np.asarray(rho)
+        return E_opt, rho
+
+    def optimal_E(self) -> tuple[np.ndarray, np.ndarray]:
+        """Per-series optimal embedding dimension and the full ρ(E) sweep.
+
+        Returns (E_opt (N,) int32, rho (N, E_max)). Cached: later
+        ``simplex``/``smap``/``ccm``/``xmap`` calls reuse both the result
+        and (locally) the kNN master tables built here.
+        """
+        E_opt, rho = self._rho()
+        return E_opt.copy(), rho.copy()
+
+    # ------------------------------------------------------------ simplex
+
+    def simplex(self, E: int | None = None) -> np.ndarray:
+        """Leave-one-out simplex forecast skill per series → (N,) ρ.
+
+        ``E=None`` with a per-series config reads the skill straight off
+        the cached optimal-E sweep (no compute); a fixed E reuses the
+        cached kNN master (indices derived, k distances recomputed).
+        """
+        c = self.config
+        E = E if E is not None else c.E
+        if E is None:
+            E_opt, rho = self._rho()
+            return rho[np.arange(self.data.N), E_opt - 1].copy()
+        if c.cache and c.mesh is None:
+            _, iM, _, _ = self._master(E)
+            return np.asarray(simplex_skill_from_master(
+                self.data.panel, iM[:, E - 1], E=E, tau=c.tau, Tp=c.Tp,
+                k=c.k_for(E), impl=self._impl))
+        from repro.core.simplex import simplex_skill
+        return np.asarray([
+            simplex_skill(x, E=E, tau=c.tau, Tp=c.Tp, impl=self._impl)
+            for x in self.data.panel])
+
+    # -------------------------------------------------------------- smap
+
+    def smap(self, E: int | None = None, thetas=None) -> np.ndarray:
+        """S-Map θ-sweep (nonlinearity test) per series → (N, |θ|) ρ.
+
+        Per-series E (the default) groups series by their cached optimal
+        E so each group is ONE batched Gram-engine launch; a mesh routes
+        each group through ``sharded_smap_theta`` (zero collectives).
+        """
+        c = self.config
+        thetas = c.thetas if thetas is None else tuple(
+            float(t) for t in thetas)
+        E = E if E is not None else c.E
+        if E is not None:
+            groups = {int(E): np.arange(self.data.N)}
+        else:
+            E_opt, _ = self._rho()
+            _, groups = _e_groups(E_opt, self.data.N)
+        out = np.zeros((self.data.N, len(thetas)), np.float32)
+        for Eg, members in groups.items():
+            out[members] = self._smap_group_sweep(Eg, members, thetas)
+        return out
+
+    def _smap_group_sweep(self, E, members, thetas) -> np.ndarray:
+        c = self.config
+        X = self.data.panel[np.asarray(members)]
+        if c.mesh is not None:
+            from repro.distributed.sharded_ccm import (
+                pad_members, sharded_smap_theta)
+            size = c.mesh_axis_size(c.lib_axes)
+            padded = pad_members(np.arange(len(members)), size)
+            rho = sharded_smap_theta(
+                X[padded], E=E, tau=c.tau, Tp=c.Tp, thetas=thetas,
+                ridge=c.ridge, mesh=c.mesh, axes=c.lib_axes,
+                impl=self._impl)
+            return np.asarray(rho)[: len(members)]
+        from repro.core.smap_engine import smap_theta_sweep
+        return np.asarray(smap_theta_sweep(
+            X, E=E, tau=c.tau, Tp=c.Tp, thetas=thetas, ridge=c.ridge,
+            impl=self._impl))
+
+    # --------------------------------------------------------------- ccm
+
+    def ccm(self, lib, target, *, lib_sizes=None,
+            E: int | None = None) -> np.ndarray:
+        """Convergence cross-mapping between two panel series.
+
+        Embeds series ``lib``'s manifold and cross-maps ``target`` (high
+        skill = evidence "target causes lib"). ``lib_sizes`` returns the
+        convergence curve — ρ rising with library size is CCM's causality
+        criterion. E defaults to the *target's* cached optimal E (kEDM
+        §3.4's convention).
+        """
+        c = self.config
+        li = self.data.index_of(lib)
+        ti = self.data.index_of(target)
+        if E is None:
+            E = c.E
+        if E is None:
+            E_opt, _ = self._rho()
+            E = int(E_opt[ti])
+        from repro.core.ccm import cross_map
+        return np.asarray(cross_map(
+            self.data.panel[li], self.data.panel[ti], E=E, tau=c.tau,
+            Tp=c.Tp_cross, lib_sizes=lib_sizes, impl=self._impl))
+
+    # -------------------------------------------------------------- xmap
+
+    def xmap(self, method: str = "simplex", *, E_opt=None,
+             theta: float | None = None) -> np.ndarray:
+        """All-pairs cross-map skill matrix → (N, N) ρ.
+
+        Entry (l, t) = skill of cross-mapping series t from series l's
+        manifold at t's optimal E (evidence "t causes l"). The whole-
+        brain CCM workload. ``method="simplex"`` is classic CCM;
+        ``method="smap"`` swaps the lookup for the batched S-Map engine
+        at locality ``theta`` (per-target optimal-E S-Map CCM).
+
+        Local sessions reuse the cached multi-E kNN master (simplex
+        method) so no pairwise distance matrix is ever recomputed; mesh
+        configs route through the E-grouped zero-collective sharded
+        engines.
+        """
+        if method not in ("simplex", "smap"):
+            raise ValueError(f"unknown xmap method {method!r}")
+        c = self.config
+        N = self.data.N
+        if E_opt is None:
+            E_opt = np.full(N, c.E, np.int32) if c.E else self._rho()[0]
+        E_opt, groups = _e_groups(E_opt, N)
+        if c.mesh is not None:
+            return self._xmap_sharded(method, E_opt, theta)
+        return self._xmap_local(method, groups, theta)
+
+    def _xmap_local(self, method, groups, theta) -> np.ndarray:
+        c = self.config
+        X = self.data.panel
+        N = self.data.N
+        rho = np.zeros((N, N), np.float32)
+        use_master = method == "simplex" and c.cache
+        if c.k is not None and method == "simplex" and not c.cache:
+            raise ValueError("custom k for xmap requires cache=True")
+        iM = self._master(max(groups))[1] if use_master else None
+        for E, members in groups.items():
+            tgts = X[members]
+            if method == "smap":
+                from repro.core.smap_engine import smap_group
+                block = smap_group(
+                    X, tgts, E=E, tau=c.tau, Tp=c.Tp_cross,
+                    theta=float(c.theta if theta is None else theta),
+                    ridge=c.ridge, impl=self._impl)
+            elif use_master:
+                block = ccm_group_from_master(
+                    X, iM[:, E - 1], tgts, E=E, tau=c.tau, Tp=c.Tp_cross,
+                    k=c.k_for(E), impl=self._impl)
+            else:
+                from repro.core.ccm import ccm_group
+                block = ccm_group(X, tgts, E=E, tau=c.tau, Tp=c.Tp_cross,
+                                  impl=self._impl)
+            rho[:, members] = np.asarray(block)
+        return rho
+
+    def _xmap_sharded(self, method, E_opt, theta) -> np.ndarray:
+        c = self.config
+        X = self.data.panel
+        from repro.distributed.sharded_ccm import (
+            sharded_ccm_matrix, sharded_smap_matrix)
+        if method == "smap":
+            return np.asarray(sharded_smap_matrix(
+                X, X, E_opt=E_opt, tau=c.tau, Tp=c.Tp_cross,
+                theta=float(c.theta if theta is None else theta),
+                ridge=c.ridge, mesh=c.mesh, lib_axes=c.lib_axes,
+                tgt_axes=c.tgt_axes, impl=self._impl))[: self.data.N]
+        return np.asarray(sharded_ccm_matrix(
+            X, X, E_opt=E_opt, tau=c.tau, Tp=c.Tp_cross, mesh=c.mesh,
+            lib_axes=c.lib_axes, tgt_axes=c.tgt_axes,
+            impl=self._impl))[: self.data.N]
+
+    # ------------------------------------------------------ batched entry
+
+    def submit_panel(self, panel, tasks=("optimal_E",)) -> int:
+        """Queue a panel for batched execution; returns a ticket id.
+
+        The serving-style entry point: queued panels of the same length
+        are concatenated and driven through ONE jitted program per task
+        at ``flush()`` (and every flush reuses the programs this
+        session's config already compiled), instead of paying a dispatch
+        + trace per panel.
+        """
+        allowed = ("optimal_E", "smap", "xmap")
+        tasks = tuple(tasks)
+        for t in tasks:
+            if t not in allowed:
+                raise ValueError(f"unknown task {t!r}; expected {allowed}")
+        panel = jnp.asarray(panel)
+        if panel.ndim == 1:
+            panel = panel[None, :]
+        ticket = self._next_ticket
+        self._next_ticket += 1
+        self._queue.append((ticket, panel, tasks))
+        return ticket
+
+    def flush(self) -> dict[int, PanelResult]:
+        """Run every queued panel; returns {ticket: PanelResult}."""
+        queue, self._queue = self._queue, []
+        results = {t: PanelResult() for t, _, _ in queue}
+        batches: dict[tuple, list] = collections.defaultdict(list)
+        for ticket, panel, tasks in queue:
+            batches[(panel.shape[1], tasks)].append((ticket, panel))
+        for (L, tasks), items in batches.items():
+            big = jnp.concatenate([p for _, p in items], axis=0)
+            sess = EDM(big, self.config)
+            offs = np.cumsum([0] + [p.shape[0] for _, p in items])
+            if "optimal_E" in tasks:
+                E_opt, rho = sess.optimal_E()
+                for (ticket, _), a, b in zip(items, offs, offs[1:]):
+                    results[ticket].E_opt = E_opt[a:b]
+                    results[ticket].rho = rho[a:b]
+            if "smap" in tasks:
+                sweep = sess.smap()
+                for (ticket, _), a, b in zip(items, offs, offs[1:]):
+                    results[ticket].smap = sweep[a:b]
+            if "xmap" in tasks:
+                # cross terms force per-panel matrices, but the batch
+                # session's per-series state slices cleanly: hand each
+                # panel its E_opt slice and its rows of the kNN master
+                # instead of re-running the multi-E engine per panel.
+                E_all = None if self.config.E else sess._rho()[0]
+                master = sess._cache.get("master")
+                for (ticket, panel), a, b in zip(items, offs, offs[1:]):
+                    psess = EDM(panel, self.config)
+                    if master is not None:
+                        dM, iM, k_m, lv = master
+                        psess._cache["master"] = (dM[a:b], iM[a:b], k_m, lv)
+                    results[ticket].xmap = psess.xmap(
+                        E_opt=None if E_all is None else E_all[a:b])
+            self.stats["panels_flushed"] += len(items)
+        return results

@@ -10,11 +10,16 @@ implementation is chosen per platform —
   * ``ref``       — pure-jnp oracles (also what multi-pod dry-runs lower,
                     since Mosaic cannot target the CPU backend).
 
-``impl="auto"`` resolves to ``pallas`` on TPU and ``ref`` elsewhere.
+``impl="auto"`` resolves to the innermost ``use_impl`` override if one is
+active (the plan layer in ``repro.edm`` sets it per plan), else to
+``pallas`` on TPU and ``ref`` elsewhere. Unknown impl names are an error
+everywhere — they used to fall through to the kernel path and fail with
+an obscure Mosaic error much later.
 """
 
 from __future__ import annotations
 
+import contextlib
 import functools
 
 import jax
@@ -30,9 +35,14 @@ pearson_rows = _ref.pearson_rows
 num_embedded = _ref.num_embedded
 delay_embed = _ref.delay_embed
 
+#: Every implementation name the dispatch layer accepts.
+IMPLS = ("auto", "pallas", "interpret", "ref")
+
+_impl_stack: list[str] = []  # innermost use_impl override wins
+
 
 @functools.cache
-def default_impl() -> str:
+def _platform_default() -> str:
     try:
         platform = jax.devices()[0].platform
     except RuntimeError:  # pragma: no cover - no backend at all
@@ -40,8 +50,46 @@ def default_impl() -> str:
     return "pallas" if platform == "tpu" else "ref"
 
 
-def _resolve(impl: str) -> str:
+def default_impl() -> str:
+    """Current default implementation: ``use_impl`` override, else platform."""
+    if _impl_stack and _impl_stack[-1] != "auto":
+        return _impl_stack[-1]
+    return _platform_default()
+
+
+@contextlib.contextmanager
+def use_impl(name: str):
+    """Scoped module-level default: ``with ops.use_impl("interpret"): ...``.
+
+    Inside the block every ``impl="auto"`` call resolves to ``name``
+    (``"auto"`` restores the platform default). This is how the plan layer
+    (``repro.edm``) pins one backend for a whole plan instead of threading
+    ``impl=`` through every call site.
+
+    Caveat: resolution happens at *trace* time, and jitted callables key
+    their cache on the static string ``"auto"``, not on what it resolved
+    to — a program traced under one override is happily reused under
+    another. Code that flips impls mid-session (the plan layer, tests)
+    must pass the concrete name from ``resolve_impl`` into jitted
+    functions rather than rely on ``"auto"`` inside the block.
+    """
+    if name not in IMPLS:
+        raise ValueError(f"unknown impl {name!r}; expected one of {IMPLS}")
+    _impl_stack.append(name)
+    try:
+        yield
+    finally:
+        _impl_stack.pop()
+
+
+def resolve_impl(impl: str = "auto") -> str:
+    """Concrete implementation name for ``impl`` (errors on unknown names)."""
+    if impl not in IMPLS:
+        raise ValueError(f"unknown impl {impl!r}; expected one of {IMPLS}")
     return default_impl() if impl == "auto" else impl
+
+
+_resolve = resolve_impl
 
 
 def pairwise_distances(

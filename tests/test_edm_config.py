@@ -1,0 +1,133 @@
+"""EDMConfig / Dataset validation and the ops impl-dispatch satellite."""
+
+import types
+
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.edm import EDM, EDMConfig, Dataset
+from repro.kernels import ops
+
+
+# ------------------------------------------------------------ EDMConfig
+
+
+@pytest.mark.parametrize("bad", [
+    dict(E=0), dict(E=-3),
+    dict(E_max=0),
+    dict(tau=0), dict(tau=-1),
+    dict(Tp=-1), dict(Tp_cross=-2),
+    dict(theta=-0.5),
+    dict(thetas=()), dict(thetas=(0.0, -1.0, 2.0)),
+    dict(k=0),
+    dict(ridge=-1e-3),
+    dict(impl="bogus"),
+])
+def test_config_rejects_invalid(bad):
+    with pytest.raises(ValueError):
+        EDMConfig(**bad)
+
+
+def test_config_defaults_valid_and_frozen():
+    c = EDMConfig()
+    assert c.thetas[0] == 0.0 and all(t >= 0 for t in c.thetas)
+    with pytest.raises(Exception):
+        c.E = 3
+    c2 = c.replace(E=4, tau=2)
+    assert (c2.E, c2.tau) == (4, 2) and c.E is None
+
+
+def test_config_derived_fields():
+    c = EDMConfig(E=3, k=7, Tp=2, Tp_cross=0)
+    assert c.k_for(3) == 7
+    assert EDMConfig().k_for(3) == 4  # simplex default E + 1
+    assert c.slack == 2
+    assert EDMConfig().slack == 1
+    # E > E_max widens the sweep bound instead of failing
+    assert EDMConfig(E=25, E_max=20).E_max == 25
+
+
+def _stub_mesh(**shape):
+    return types.SimpleNamespace(shape=dict(shape),
+                                 axis_names=tuple(shape))
+
+
+def test_config_mesh_axis_names_checked():
+    with pytest.raises(ValueError, match="missing"):
+        EDMConfig(mesh=_stub_mesh(data=2), tgt_axes=("model",))
+    EDMConfig(mesh=_stub_mesh(data=2, model=2))  # ok
+
+
+def test_panel_validation_k_exceeds_pred_rows():
+    x = np.random.default_rng(0).standard_normal((2, 40)).astype(np.float32)
+    rows = 40 - (3 - 1) * 1 - 1  # pred_rows(L=40, E=3, tau=1, Tp=1)
+    EDM(x, EDMConfig(E=3, k=rows))  # boundary ok
+    with pytest.raises(ValueError, match="prediction rows"):
+        EDM(x, EDMConfig(E=3, k=rows + 1))
+
+
+def test_panel_validation_series_too_short():
+    x = np.zeros((2, 10), np.float32)
+    with pytest.raises(ValueError, match="too short"):
+        EDM(x, EDMConfig(E_max=15))
+
+
+def test_panel_validation_mesh_divisibility():
+    x = np.zeros((6, 64), np.float32)
+    mesh = _stub_mesh(data=4, model=2)
+    with pytest.raises(ValueError, match="do not divide"):
+        EDM(x, EDMConfig(E=2, mesh=mesh, pad=False))
+    EDM(x, EDMConfig(E=2, mesh=mesh, pad=True))  # auto-pad accepts
+    EDM(np.zeros((8, 64), np.float32),
+        EDMConfig(E=2, mesh=mesh, pad=False))  # divisible accepts
+
+
+# -------------------------------------------------------------- Dataset
+
+
+def test_dataset_promotes_and_validates():
+    d = Dataset(np.zeros(32, np.float32))
+    assert (d.N, d.L) == (1, 32)
+    with pytest.raises(ValueError):
+        Dataset(np.zeros((2, 3, 4), np.float32))
+    with pytest.raises(ValueError):
+        Dataset(np.zeros((2, 32), np.float32), names=["only-one"])
+
+
+def test_dataset_names_and_embedding_cache():
+    d = Dataset(np.random.default_rng(1).standard_normal((3, 40)),
+                names=["a", "b", "c"])
+    assert d.index_of("b") == 1
+    assert d.series("c").shape == (40,)
+    Z = d.embedding(E=3, tau=2)
+    assert Z.shape == (3, 40 - 2 * 2, 3)
+    assert d.embedding(E=3, tau=2) is Z  # cached object, not recomputed
+    np.testing.assert_allclose(np.asarray(Z[0, :, 1]),
+                               np.asarray(d.panel[0, 2:38]))
+
+
+# ------------------------------------------------- ops impl dispatch
+
+
+def test_resolve_impl_errors_on_unknown():
+    with pytest.raises(ValueError, match="unknown impl"):
+        ops.resolve_impl("cuda")
+    with pytest.raises(ValueError, match="unknown impl"):
+        ops.pairwise_distances(jnp.zeros(16), E=2, impl="bogus")
+
+
+def test_use_impl_scoped_override():
+    base = ops.resolve_impl("auto")
+    with ops.use_impl("interpret"):
+        assert ops.resolve_impl("auto") == "interpret"
+        with ops.use_impl("ref"):
+            assert ops.resolve_impl("auto") == "ref"
+        assert ops.resolve_impl("auto") == "interpret"
+        # explicit names still win over the override
+        assert ops.resolve_impl("ref") == "ref"
+    assert ops.resolve_impl("auto") == base
+    with pytest.raises(ValueError):
+        with ops.use_impl("nope"):
+            pass  # pragma: no cover
+    assert ops.resolve_impl("auto") == base  # stack not corrupted

@@ -1,0 +1,384 @@
+"""EDM session facade: parity with the legacy free functions, cached-kNN
+reuse (kernel-invocation counting), plan introspection, sharded routing,
+and the batched submit_panel entry point."""
+
+import os
+import subprocess
+import sys
+import textwrap
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro import core
+from repro.data import timeseries as ts
+from repro.edm import EDM, EDMConfig
+from repro.kernels import ops
+
+
+def _panel(n=6, steps=240, seed=5):
+    panel, _ = ts.forced_network_panel(n, steps, seed=seed)
+    return jnp.asarray(panel)
+
+
+# ------------------------------------------------------ facade parity
+
+
+def test_optimal_e_bit_identical_to_legacy():
+    X = _panel()
+    sess = EDM(X, EDMConfig(E_max=5))
+    E_opt, rho = sess.optimal_E()
+    E_l, rho_l = core.optimal_E_batch(X, E_max=5)
+    np.testing.assert_array_equal(E_opt, np.asarray(E_l))
+    np.testing.assert_array_equal(rho, np.asarray(rho_l))
+
+
+def test_xmap_bit_identical_to_legacy_group_composition():
+    X = _panel()
+    sess = EDM(X, EDMConfig(E_max=5))
+    E_opt, _ = sess.optimal_E()
+    got = sess.xmap()
+    want = np.zeros((X.shape[0],) * 2, np.float32)
+    for E in sorted(set(E_opt.tolist())):
+        m = np.nonzero(E_opt == E)[0]
+        want[:, m] = np.asarray(
+            core.ccm_group(X, X[m], E=int(E), tau=1, Tp=0))
+    np.testing.assert_array_equal(got, want)
+
+
+def test_xmap_smap_bit_identical_to_legacy():
+    X = _panel(4, 220)
+    sess = EDM(X, EDMConfig(E=2, theta=1.5))
+    got = sess.xmap(method="smap")
+    want = np.zeros((4, 4), np.float32)
+    members = np.arange(4)
+    want[:, members] = np.asarray(
+        core.smap_group(X, X, E=2, tau=1, Tp=0, theta=1.5, impl="ref"))
+    np.testing.assert_array_equal(got, want)
+
+
+def test_simplex_fixed_e_bit_identical():
+    X = _panel(4)
+    sess = EDM(X, EDMConfig(E_max=5))
+    got = sess.simplex(E=3)
+    want = np.asarray([core.simplex_skill(x, E=3) for x in X])
+    np.testing.assert_array_equal(got, want)
+
+
+def test_simplex_per_series_reads_cached_sweep():
+    X = _panel(4)
+    sess = EDM(X, EDMConfig(E_max=5))
+    E_opt, rho = sess.optimal_E()
+    skill = sess.simplex()
+    np.testing.assert_array_equal(
+        skill, rho[np.arange(4), E_opt - 1])
+
+
+def test_smap_sweep_bit_identical_and_grouped():
+    X = _panel(5)
+    thetas = (0.0, 0.5, 2.0)
+    sess = EDM(X, EDMConfig(E_max=4, thetas=thetas))
+    # fixed E: one engine launch
+    np.testing.assert_array_equal(
+        sess.smap(E=2),
+        np.asarray(core.smap_theta_sweep(X, E=2, thetas=thetas, impl="ref")))
+    # per-series E: grouped by the cached optimal E
+    E_opt, _ = sess.optimal_E()
+    got = sess.smap()
+    want = np.zeros((5, len(thetas)), np.float32)
+    for E in sorted(set(E_opt.tolist())):
+        m = np.nonzero(E_opt == E)[0]
+        want[m] = np.asarray(core.smap_theta_sweep(
+            X[m], E=int(E), thetas=thetas, impl="ref"))
+    np.testing.assert_array_equal(got, want)
+
+
+def test_ccm_convergence_matches_cross_map():
+    X = _panel(3)
+    sess = EDM(X, EDMConfig(E=2))
+    sizes = (60, 120, 230)
+    got = sess.ccm(0, 1, lib_sizes=sizes)
+    want = np.asarray(core.cross_map(X[0], X[1], E=2, Tp=0,
+                                     lib_sizes=sizes))
+    np.testing.assert_array_equal(got, want)
+    # E defaults to the *target's* optimal E when not fixed
+    sess2 = EDM(X, EDMConfig(E_max=4))
+    E_opt, _ = sess2.optimal_E()
+    np.testing.assert_array_equal(
+        sess2.ccm(0, 2),
+        np.asarray(core.cross_map(X[0], X[2], E=int(E_opt[2]), Tp=0)))
+
+
+def test_facade_parity_on_random_panels():
+    """Property-style: facade == legacy bit-for-bit on random panels."""
+    rng = np.random.default_rng(42)
+    for trial in range(4):
+        n = int(rng.integers(3, 7))
+        L = int(rng.integers(150, 300))
+        tau = int(rng.integers(1, 3))
+        E_max = int(rng.integers(3, 7))
+        X = jnp.asarray(rng.standard_normal((n, L)).astype(np.float32))
+        sess = EDM(X, EDMConfig(E_max=E_max, tau=tau))
+        E_opt, rho = sess.optimal_E()
+        E_l, rho_l = core.optimal_E_batch(X, E_max=E_max, tau=tau)
+        np.testing.assert_array_equal(E_opt, np.asarray(E_l))
+        np.testing.assert_array_equal(rho, np.asarray(rho_l))
+        got = sess.xmap()
+        want = np.zeros((n, n), np.float32)
+        for E in sorted(set(E_opt.tolist())):
+            m = np.nonzero(E_opt == E)[0]
+            want[:, m] = np.asarray(
+                core.ccm_group(X, X[m], E=int(E), tau=tau, Tp=0))
+        np.testing.assert_array_equal(got, want)
+
+
+def test_legacy_matrix_wrappers_delegate():
+    X = _panel(5)
+    E_opt, _ = core.optimal_E_batch(X, E_max=4)
+    E_opt = np.asarray(E_opt)
+    sess = EDM(X, EDMConfig(E_max=4))
+    np.testing.assert_array_equal(core.ccm_matrix(X, E_opt),
+                                  sess.xmap(E_opt=E_opt))
+    # E_opt=None now auto-computes through the session cache
+    auto = core.ccm_matrix(X)
+    want = EDM(X, EDMConfig()).xmap()
+    np.testing.assert_array_equal(auto, want)
+    np.testing.assert_array_equal(
+        core.smap_matrix(X, 2, theta=1.0, impl="ref"),
+        EDM(X, EDMConfig(E=2, theta=1.0, impl="ref")).xmap(method="smap"))
+
+
+# ------------------------------------------------- cached-kNN reuse
+
+
+def test_knn_engine_runs_exactly_once_per_panel(monkeypatch):
+    """Regression for the facade's core promise: optimal_E → simplex →
+    xmap on one panel trace the multi-E kNN engine exactly once, and the
+    per-E pairwise pipeline never runs at all."""
+    X = _panel()
+    counts = {"multi_e": 0, "pairwise": 0}
+    real_multi, real_pair = ops.all_knn_multi_e, ops.pairwise_distances
+
+    def count_multi(*a, **k):
+        counts["multi_e"] += 1
+        return real_multi(*a, **k)
+
+    def count_pair(*a, **k):
+        counts["pairwise"] += 1
+        return real_pair(*a, **k)
+
+    monkeypatch.setattr(ops, "all_knn_multi_e", count_multi)
+    monkeypatch.setattr(ops, "pairwise_distances", count_pair)
+    jax.clear_caches()  # shim counts trace-time calls; drop stale traces
+
+    sess = EDM(X, EDMConfig(E_max=5))
+    sess.optimal_E()
+    sess.simplex(E=2)
+    sess.simplex()
+    sess.xmap()
+    sess.optimal_E()
+    assert counts["multi_e"] == 1, counts
+    assert counts["pairwise"] == 0, counts
+    assert sess.stats["knn_master_builds"] == 1
+    assert sess.stats["knn_master_hits"] >= 2
+    assert sess.stats["rho_hits"] >= 2
+
+
+def test_cache_disabled_falls_back_to_legacy_paths(monkeypatch):
+    X = _panel(4)
+    counts = {"pairwise": 0}
+    real_pair = ops.pairwise_distances
+
+    def count_pair(*a, **k):
+        counts["pairwise"] += 1
+        return real_pair(*a, **k)
+
+    monkeypatch.setattr(ops, "pairwise_distances", count_pair)
+    jax.clear_caches()
+    sess = EDM(X, EDMConfig(E_max=4, cache=False))
+    E_opt, rho = sess.optimal_E()
+    got = sess.xmap()
+    assert counts["pairwise"] >= 1  # legacy ccm_group recomputes distances
+    E_l, rho_l = core.optimal_E_batch(X, E_max=4)
+    np.testing.assert_array_equal(E_opt, np.asarray(E_l))
+    np.testing.assert_array_equal(got, EDM(X, EDMConfig(E_max=4)).xmap())
+
+
+def test_requests_above_e_max_rebuild_master_not_clamp():
+    """Regression: jnp gathers clamp out-of-range indices, so reading a
+    level-7 table from a level-4 master would silently return level-4
+    results. The session must rebuild the master at the deeper level."""
+    X = _panel(3)
+    sess = EDM(X, EDMConfig(E_max=4))
+    sess.optimal_E()
+    got = sess.simplex(E=7)
+    want = np.asarray([core.simplex_skill(x, E=7) for x in X])
+    np.testing.assert_array_equal(got, want)
+    assert sess.stats["knn_master_builds"] == 2  # level 4, then level 7
+    E_hi = np.array([6, 2, 6], np.int32)
+    got_m = sess.xmap(E_opt=E_hi)
+    want_m = np.zeros((3, 3), np.float32)
+    for E in (2, 6):
+        m = np.nonzero(E_hi == E)[0]
+        want_m[:, m] = np.asarray(core.ccm_group(X, X[m], E=E, Tp=0))
+    np.testing.assert_array_equal(got_m, want_m)
+
+
+def test_fixed_e_session_on_short_panel():
+    """Regression: a fixed-E session must size its kNN master to the E it
+    uses, not the default E_max=20 sweep (which would crash on panels
+    this short and waste ~E_max/E work on longer ones)."""
+    rng = np.random.default_rng(8)
+    X = jnp.asarray(rng.standard_normal((2, 21)).astype(np.float32))
+    sess = EDM(X, EDMConfig(E=2))
+    got = sess.simplex()
+    want = np.asarray([core.simplex_skill(x, E=2) for x in X])
+    np.testing.assert_array_equal(got, want)
+    assert sess._cache["master"][3] == 2  # built at level E, not E_max
+
+
+def test_flush_xmap_reuses_batch_session_state(monkeypatch):
+    """Regression: flush()'s xmap branch slices the batch session's
+    E_opt and kNN master into the per-panel sessions instead of
+    re-running the multi-E engine per queued panel."""
+    X = _panel(6)
+    counts = {"multi_e": 0}
+    real_multi = ops.all_knn_multi_e
+
+    def count_multi(*a, **k):
+        counts["multi_e"] += 1
+        return real_multi(*a, **k)
+
+    monkeypatch.setattr(ops, "all_knn_multi_e", count_multi)
+    jax.clear_caches()
+    sess = EDM(X, EDMConfig(E_max=4))
+    t1 = sess.submit_panel(X[:3], tasks=("optimal_E", "xmap"))
+    t2 = sess.submit_panel(X[3:], tasks=("optimal_E", "xmap"))
+    res = sess.flush()
+    assert counts["multi_e"] == 1  # one batch master, panels get slices
+    for ticket, sl in ((t1, slice(0, 3)), (t2, slice(3, 6))):
+        np.testing.assert_array_equal(
+            res[ticket].xmap, EDM(X[sl], EDMConfig(E_max=4)).xmap())
+
+
+# ------------------------------------------------------------- plans
+
+
+def test_plan_introspection():
+    X = _panel(4)
+    sess = EDM(X, EDMConfig(E_max=4))
+    p = sess.plan("optimal_E")
+    assert (p.placement, p.impl) == ("local", ops.resolve_impl("auto"))
+    assert "master" in p.builds and "rho" in p.builds
+    sess.optimal_E()
+    p2 = sess.plan("xmap")
+    assert p2.reuse == ("master", "rho") and p2.builds == ()
+    assert "cached" in p2.detail
+    with pytest.raises(ValueError, match="unknown task"):
+        sess.plan("teleport")
+    with pytest.raises(ValueError, match="unknown xmap method"):
+        sess.xmap(method="granger")
+
+
+def test_plan_sharded_placement():
+    import types
+    mesh = types.SimpleNamespace(shape={"data": 2, "model": 2},
+                                 axis_names=("data", "model"))
+    sess = EDM(_panel(4), EDMConfig(E_max=4, mesh=mesh))
+    assert sess.plan("optimal_E").placement == "sharded"
+    assert sess.plan("xmap").placement == "sharded"
+    assert "zero collectives" in sess.plan("xmap").detail
+
+
+# ------------------------------------------------------ submit_panel
+
+
+def test_submit_panel_batches_and_matches_per_panel():
+    X = _panel(6)
+    sess = EDM(X, EDMConfig(E_max=4))
+    t1 = sess.submit_panel(X[:2], tasks=("optimal_E", "smap"))
+    t2 = sess.submit_panel(X[2:], tasks=("optimal_E", "smap"))
+    t3 = sess.submit_panel(X[0], tasks=("optimal_E",))  # 1-D promoted
+    res = sess.flush()
+    assert sess.stats["panels_flushed"] == 3 and sess._queue == []
+    for ticket, sl in ((t1, slice(0, 2)), (t2, slice(2, 6))):
+        E_l, rho_l = core.optimal_E_batch(X[sl], E_max=4)
+        np.testing.assert_array_equal(res[ticket].E_opt, np.asarray(E_l))
+        np.testing.assert_array_equal(res[ticket].rho, np.asarray(rho_l))
+        assert res[ticket].smap.shape == (sl.stop - sl.start,
+                                          len(sess.config.thetas))
+    assert res[t3].E_opt.shape == (1,)
+    with pytest.raises(ValueError, match="unknown task"):
+        sess.submit_panel(X, tasks=("fly",))
+    assert sess.flush() == {}  # queue drained
+
+
+# ---------------------------------------------------- sharded routing
+
+
+def test_sharded_session_multidevice_subprocess():
+    """mesh= config routes optimal_E/xmap/smap through the zero-collective
+    sharded engines on 8 emulated devices; results match local sessions
+    (per-shard pairwise route vs cached-master route → allclose)."""
+    prog = textwrap.dedent("""
+        import os
+        os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=8"
+        import numpy as np, jax.numpy as jnp
+        from repro.data import timeseries as ts
+        from repro.edm import EDM, EDMConfig
+        from repro.distributed import (
+            make_ccm_mesh, sharded_ccm_matrix, sharded_smap_matrix)
+        panel, _ = ts.forced_network_panel(7, 240, seed=11)  # 7: needs pad
+        X = jnp.asarray(panel)
+        mesh = make_ccm_mesh((4, 2), ("data", "model"))
+        local = EDM(X, EDMConfig(E_max=4))
+        E_opt, rho = local.optimal_E()
+        sess = EDM(X, EDMConfig(E_max=4, mesh=mesh))
+        E_s, rho_s = sess.optimal_E()
+        np.testing.assert_array_equal(E_s, E_opt)
+        np.testing.assert_allclose(rho_s, rho, rtol=1e-4, atol=1e-4)
+        np.testing.assert_allclose(sess.xmap(), local.xmap(),
+                                   rtol=1e-3, atol=1e-3)
+        np.testing.assert_allclose(sess.xmap(method="smap"),
+                                   local.xmap(method="smap"),
+                                   rtol=1e-3, atol=1e-3)
+        np.testing.assert_allclose(sess.smap(), local.smap(),
+                                   rtol=1e-3, atol=1e-3)
+        # direct E_opt-mode engines agree with the session routing
+        np.testing.assert_allclose(
+            sharded_ccm_matrix(X, X, E_opt=E_opt, mesh=mesh, impl="ref"),
+            sess.xmap(), rtol=1e-5, atol=1e-5)
+        np.testing.assert_allclose(
+            sharded_smap_matrix(X, X, E_opt=E_opt, mesh=mesh, impl="ref"),
+            sess.xmap(method="smap"), rtol=1e-5, atol=1e-5)
+        print("EDM_SHARDED_OK")
+    """)
+    env = dict(os.environ)
+    env["PYTHONPATH"] = os.path.abspath(
+        os.path.join(os.path.dirname(__file__), "..", "src"))
+    out = subprocess.run([sys.executable, "-c", prog], env=env,
+                         capture_output=True, text=True, timeout=600)
+    assert out.returncode == 0, out.stderr[-2000:]
+    assert "EDM_SHARDED_OK" in out.stdout
+
+
+def test_sharded_egroup_matrix_single_device():
+    """E_opt-mode sharded engines on a 1×1 mesh equal the local matrices
+    (covers the E-group layout/permutation round trip in-process)."""
+    from repro.distributed import (
+        make_ccm_mesh, sharded_ccm_matrix, sharded_smap_matrix)
+    X = _panel(5, 220)
+    E_opt = np.array([2, 3, 2, 4, 3], np.int32)
+    mesh = make_ccm_mesh((1, 1), ("data", "model"))
+    got = sharded_ccm_matrix(X, X, E_opt=E_opt, mesh=mesh, impl="ref")
+    want = core.ccm_matrix(X, E_opt)
+    np.testing.assert_allclose(got, want, rtol=1e-5, atol=1e-6)
+    got_s = sharded_smap_matrix(X, X, E_opt=E_opt, mesh=mesh, impl="ref")
+    want_s = core.smap_matrix(X, E_opt, impl="ref")
+    np.testing.assert_allclose(got_s, want_s, rtol=1e-5, atol=1e-6)
+    with pytest.raises(ValueError, match="exactly one"):
+        sharded_ccm_matrix(X, X, E=2, E_opt=E_opt, mesh=mesh)
+    with pytest.raises(ValueError, match="exactly one"):
+        sharded_smap_matrix(X, X, mesh=mesh)
