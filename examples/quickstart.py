@@ -55,6 +55,14 @@ def main():
     for s, a, b in zip(sizes, x_from_y, y_from_x):
         print(f"   {s:8d} | {a:20.4f} | {b:19.4f}")
     print("   (left column converges high: X causes Y; right stays low)")
+    # a score alone is not evidence — gate it on a surrogate ensemble
+    # (50 shuffled nulls, cross-mapped as ONE batched program)
+    sig = pair.surrogate_test("Y", "X", num_surrogates=50, seed=0)
+    rev = pair.surrogate_test("X", "Y", num_surrogates=50, seed=0)
+    print(f"   vs 50 shuffle nulls: X→Y p = {sig.pvalue:.3f}, "
+          f"Y→X p = {rev.pvalue:.3f}")
+    print("   (a shuffle null rejects 'no dependence at all'; the "
+          "direction verdict is the convergence asymmetry above)")
 
     print("=" * 64)
     print("5. One session, every method — state shared, plans visible")

@@ -16,7 +16,15 @@ sharded engines live in ``repro.distributed.sharded_ccm``; the migration
 table from pyEDM/kEDM names is in docs/API.md.
 """
 
-from repro.core.ccm import ccm_group, ccm_matrix, cross_map
+from repro.core.ccm import (
+    ccm_convergence,
+    ccm_convergence_caps,
+    ccm_group,
+    ccm_matrix,
+    cross_map,
+    cross_map_sizes_seed,
+    normalize_lib_sizes,
+)
 from repro.core.embedding import delay_embed, embed_offset, num_embedded, pred_rows
 from repro.core.knn import KnnTable, all_knn
 from repro.core.simplex import (
@@ -48,9 +56,13 @@ from repro.core.stats import CoMoments, pearson_rows
 __all__ = [
     "KnnTable",
     "all_knn",
+    "ccm_convergence",
+    "ccm_convergence_caps",
     "ccm_group",
     "ccm_matrix",
     "cross_map",
+    "cross_map_sizes_seed",
+    "normalize_lib_sizes",
     "delay_embed",
     "embed_offset",
     "num_embedded",

@@ -14,6 +14,7 @@ series sharing that E (§3.4's grouping), fused Pearson ρ.
 from __future__ import annotations
 
 import functools
+import warnings
 
 import jax
 import jax.numpy as jnp
@@ -21,6 +22,147 @@ import numpy as np
 
 from repro.core.embedding import embed_offset, num_embedded, pred_rows
 from repro.kernels import ops
+
+
+def normalize_lib_sizes(lib_sizes, *, Lp: int, Tp: int = 0):
+    """Validate a convergence-sweep size list → (caps, inverse map).
+
+    Returns ``(caps, inv)``: ``caps`` is the ascending tuple of *unique*
+    inclusive neighbor-index caps (``min(size − 1, Lp − 1 − Tp)``), and
+    ``inv`` maps each requested size back to its cap's position, so
+    callers compute each distinct cap once and scatter results to the
+    caller's order/shape. Sizes must be >= 1 (ValueError otherwise);
+    unsorted, duplicate, or oversized (> the Lp − Tp usable library
+    points) inputs are accepted for compatibility but draw a single
+    ``UserWarning`` naming what was cleaned — they used to be silently
+    recomputed per entry (duplicates) or silently clamped (oversized).
+    """
+    sizes = [int(s) for s in lib_sizes]
+    if not sizes:
+        raise ValueError("lib_sizes must not be empty")
+    bad = [s for s in sizes if s < 1]
+    if bad:
+        raise ValueError(f"lib_sizes must all be >= 1, got {bad}")
+    hard_max = Lp - 1 - max(Tp, 0)
+    issues = []
+    if any(b < a for a, b in zip(sizes, sizes[1:])):
+        issues.append("unsorted (computed on the sorted unique caps)")
+    if len(set(sizes)) != len(sizes):
+        issues.append("duplicates (each cap computed once)")
+    over = [s for s in sizes if s - 1 > hard_max]
+    if over:
+        issues.append(
+            f"sizes {over} exceed the {hard_max + 1} usable library "
+            f"points (clamped)")
+    if issues:
+        warnings.warn(
+            f"lib_sizes {tuple(sizes)}: " + "; ".join(issues),
+            UserWarning, stacklevel=3)
+    caps_all = [min(s - 1, hard_max) for s in sizes]
+    caps = tuple(sorted(set(caps_all)))
+    inv = np.asarray([caps.index(c) for c in caps_all], np.int32)
+    return caps, inv
+
+
+@functools.partial(jax.jit, static_argnames=("E", "tau", "Tp", "caps",
+                                             "exclude_self", "impl"))
+def ccm_convergence_caps(lib, targets, *, E, tau, Tp, caps, exclude_self,
+                         impl):
+    """(|caps|, N) curve grid: one distance pass, one multi-cap top-k.
+
+    The caps-level engine under ``ccm_convergence`` — callers that
+    already hold normalized ascending caps (the session's
+    ``_ccm_curves``, the sharded convergence blocks) enter here and do
+    their own size→cap bookkeeping/warnings via
+    ``normalize_lib_sizes``.
+    """
+    L = lib.shape[-1]
+    rows = pred_rows(L, E, tau, Tp)
+    off = embed_offset(E, tau, Tp)
+    D = ops.pairwise_distances(lib, E=E, tau=tau, impl=impl)
+    dS, iS = ops.topk_select_sizes(D, k=E + 1, max_idxs=caps,
+                                   exclude_self=exclude_self, impl=impl)
+    curves = []
+    for s in range(len(caps)):  # static, small: unrolled per-cap lookups
+        w = ops.make_weights(dS[s])
+        curves.append(ops.lookup_rho(targets, iS[s, :rows], w[:rows],
+                                     offset=off, impl=impl))
+    return jnp.stack(curves)
+
+
+def ccm_convergence(
+    lib: jax.Array,
+    targets: jax.Array,
+    *,
+    E: int,
+    tau: int = 1,
+    Tp: int = 0,
+    lib_sizes,
+    exclude_self: bool = True,
+    impl: str = "auto",
+) -> jax.Array:
+    """Full CCM convergence curve grid → (num_sizes, N) ρ, one program.
+
+    The batched replacement for ``cross_map``'s per-size host loop:
+    one ``pairwise_distances`` pass and ONE multi-cap streaming top-k
+    (``ops.topk_select_sizes``) produce every library-prefix neighbor
+    table, then each cap's batched fused-ρ lookup runs inside the same
+    jitted program. Bit-identical to the legacy loop (kept as
+    ``cross_map_sizes_seed``) — ρ rising with library size is CCM's
+    causality criterion, so the curve grid is the unit of work for
+    significance testing (``repro.edm.EDM.surrogate_test``).
+
+    ``lib_sizes`` follows the caller's order/shape (duplicates and
+    oversized entries are computed once / clamped, with a warning —
+    see ``normalize_lib_sizes``).
+    """
+    if targets.ndim == 1:
+        targets = targets[None, :]
+    Lp = num_embedded(lib.shape[-1], E, tau)
+    caps, inv = normalize_lib_sizes(lib_sizes, Lp=Lp, Tp=Tp)
+    curves = ccm_convergence_caps(lib, targets, E=E, tau=tau, Tp=Tp,
+                                  caps=caps, exclude_self=exclude_self,
+                                  impl=impl)
+    return curves[inv]
+
+
+def cross_map_sizes_seed(
+    lib: jax.Array,
+    targets: jax.Array,
+    *,
+    E: int,
+    tau: int = 1,
+    Tp: int = 0,
+    lib_sizes,
+    exclude_self: bool = True,
+    impl: str = "auto",
+) -> jax.Array:
+    """The seed per-size convergence loop → (num_sizes, N) ρ.
+
+    One full ``topk_select`` re-scan of the distance matrix per library
+    size, dispatched from the host. Kept verbatim as the oracle and
+    benchmark baseline for ``ccm_convergence`` (the BENCH_ccm.json
+    before/after), exactly like ``smap_predict_seed`` for the S-Map
+    engine.
+    """
+    if targets.ndim == 1:
+        targets = targets[None, :]
+    L = lib.shape[-1]
+    Lp = num_embedded(L, E, tau)
+    rows = pred_rows(L, E, tau, Tp)
+    off = embed_offset(E, tau, Tp)
+    hard_max = Lp - 1 - max(Tp, 0)
+    D = ops.pairwise_distances(lib, E=E, tau=tau, impl=impl)
+
+    def rho_for(max_idx):
+        d, i = ops.topk_select(D, k=E + 1, exclude_self=exclude_self,
+                               max_idx=max_idx, impl=impl)
+        w = ops.make_weights(d)
+        return ops.lookup_rho(targets, i[:rows], w[:rows], offset=off,
+                              impl=impl)
+
+    return jnp.stack(
+        [rho_for(jnp.minimum(int(s) - 1, hard_max)) for s in lib_sizes])
 
 
 def cross_map(
@@ -38,34 +180,30 @@ def cross_map(
 
     targets: (N, L) (a 1-D series is promoted). Returns (N,) ρ — or
     (num_sizes, N) when ``lib_sizes`` is given (the *convergence* sweep:
-    ρ rising with library size is CCM's causality criterion). Library
-    restriction is by prefix, reusing one distance matrix across sizes.
+    ρ rising with library size is CCM's causality criterion, computed by
+    ``ccm_convergence``: one distance pass + one multi-cap streaming
+    top-k instead of the seed's per-size re-scan loop). ``lib_sizes``
+    entries are validated (>= 1), deduplicated, and clamped to the
+    usable library with a warning.
     """
     squeeze = targets.ndim == 1
     if squeeze:
         targets = targets[None, :]
+    if lib_sizes is not None:
+        curves = ccm_convergence(
+            lib, targets, E=E, tau=tau, Tp=Tp, lib_sizes=lib_sizes,
+            exclude_self=exclude_self, impl=impl)
+        return curves[:, 0] if squeeze else curves
     L = lib.shape[-1]
     Lp = num_embedded(L, E, tau)
     rows = pred_rows(L, E, tau, Tp)
     off = embed_offset(E, tau, Tp)
-    k = E + 1
     D = ops.pairwise_distances(lib, E=E, tau=tau, impl=impl)
-    hard_max = Lp - 1 - max(Tp, 0)
-
-    def rho_for(max_idx) -> jax.Array:
-        d, i = ops.topk_select(D, k=k, exclude_self=exclude_self,
-                               max_idx=max_idx, impl=impl)
-        w = ops.make_weights(d)
-        return ops.lookup_rho(targets, i[:rows], w[:rows], offset=off,
-                              impl=impl)
-
-    if lib_sizes is None:
-        rho = rho_for(hard_max)
-        return rho[0] if squeeze else rho
-    curves = jnp.stack(
-        [rho_for(jnp.minimum(int(s) - 1, hard_max)) for s in lib_sizes]
-    )
-    return curves[:, 0] if squeeze else curves
+    d, i = ops.topk_select(D, k=E + 1, exclude_self=exclude_self,
+                           max_idx=Lp - 1 - max(Tp, 0), impl=impl)
+    w = ops.make_weights(d)
+    rho = ops.lookup_rho(targets, i[:rows], w[:rows], offset=off, impl=impl)
+    return rho[0] if squeeze else rho
 
 
 @functools.partial(jax.jit, static_argnames=("E", "tau", "Tp", "impl"))

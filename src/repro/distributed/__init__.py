@@ -6,11 +6,13 @@ one SPMD program instead of MPI ranks."""
 from repro.distributed.sharded_ccm import (
     make_ccm_mesh,
     pad_to_multiple,
+    sharded_ccm_convergence,
     sharded_ccm_matrix,
     sharded_optimal_E,
     sharded_smap_matrix,
     sharded_smap_theta,
 )
 
-__all__ = ["make_ccm_mesh", "sharded_ccm_matrix", "sharded_optimal_E",
-           "sharded_smap_matrix", "sharded_smap_theta", "pad_to_multiple"]
+__all__ = ["make_ccm_mesh", "sharded_ccm_convergence", "sharded_ccm_matrix",
+           "sharded_optimal_E", "sharded_smap_matrix", "sharded_smap_theta",
+           "pad_to_multiple"]

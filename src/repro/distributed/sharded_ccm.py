@@ -157,9 +157,15 @@ def sharded_ccm_matrix(
 
 
 def _egrouped_matrix(X_lib, X_tgt, block_fn, *, E_opt, mesh, lib_axes,
-                     tgt_axes) -> np.ndarray:
+                     tgt_axes, curves: bool = False) -> np.ndarray:
     """Shared E-grouped driver: per-shard static E-segments, one SPMD
-    program, no collectives; host unpermute at result delivery."""
+    program, no collectives; host unpermute at result delivery.
+
+    ``block_fn(E)`` maps (local libs, local target segment) to a
+    (nl, w) ρ tile — or, with ``curves=True``, to a (S, nl, w)
+    convergence tile whose leading size axis is replicated (the
+    ``sharded_ccm_convergence`` layout); targets stay the minor axis.
+    """
     N_lib, N_tgt = X_lib.shape[0], X_tgt.shape[0]
     E_opt = np.broadcast_to(np.asarray(E_opt, np.int32), (N_tgt,))
     S_t = mesh_axes_size(mesh, tgt_axes)
@@ -174,18 +180,94 @@ def _egrouped_matrix(X_lib, X_tgt, block_fn, *, E_opt, mesh, lib_axes,
             seg = jax.lax.slice_in_dim(tgts, o, o + w, axis=0)
             outs.append(block_fn(Eg)(libs, seg))
             o += w
-        return jnp.concatenate(outs, axis=1)
+        return jnp.concatenate(outs, axis=-1)
 
     mapped = _shard_map(
         local,
         mesh=mesh,
         in_specs=(P(lib_axes, None), P(tgt_axes, None)),
-        out_specs=P(lib_axes, tgt_axes),
+        out_specs=P(None, lib_axes, tgt_axes) if curves
+        else P(lib_axes, tgt_axes),
     )
     R = np.asarray(mapped(Xl, Xt))
-    rho = np.zeros((N_lib, N_tgt), np.float32)
-    rho[:, perm[keep]] = R[:N_lib, keep]
+    if curves:
+        rho = np.zeros((R.shape[0], N_lib, N_tgt), np.float32)
+        rho[:, :, perm[keep]] = R[:, :N_lib, keep]
+    else:
+        rho = np.zeros((N_lib, N_tgt), np.float32)
+        rho[:, perm[keep]] = R[:N_lib, keep]
     return rho
+
+
+def sharded_ccm_convergence(
+    X_lib: jax.Array,
+    X_tgt: jax.Array,
+    *,
+    lib_sizes,
+    E: int | None = None,
+    tau: int = 1,
+    Tp: int = 0,
+    mesh: jax.sharding.Mesh,
+    lib_axes=("data",),
+    tgt_axes=("model",),
+    impl: str = "ref",
+    E_opt=None,
+):
+    """All-pairs CCM *convergence* grids on a device mesh.
+
+    The sharded counterpart of ``core.ccm.ccm_convergence``: every
+    (library, target) pair's full library-size curve, shape
+    (num_sizes, N_lib, N_tgt), with the same 2-D (library × target)
+    decomposition and zero-collective inner loop as
+    ``sharded_ccm_matrix``. Each device runs ONE multi-cap streaming
+    top-k per local library (``ops.topk_select_sizes``) — never a
+    per-size re-scan — and owns its curve tile; the size axis is
+    replicated (it is |sizes| ≪ N² and shared by every pair).
+
+    Fixed-E mode (``E=``): returns (S, N_lib, N_tgt) ρ sharded as
+    P(None, lib_axes, tgt_axes). Per-target optimal-E mode (``E_opt=``
+    (N_tgt,) table): targets are laid out per ``_egroup_layout`` so
+    each shard runs identical static E-segments (zero collectives;
+    sizes re-clamped per segment E); returns a host np.ndarray in the
+    original target order. ``lib_sizes`` follows the caller's
+    order/shape (validated / deduped / clamped as in
+    ``core.ccm.normalize_lib_sizes``).
+    """
+    from repro.core.ccm import ccm_convergence_caps, normalize_lib_sizes
+
+    L = X_lib.shape[-1]
+    if X_tgt.shape[-1] != L:
+        raise ValueError("library/target series length mismatch")
+    if (E is None) == (E_opt is None):
+        raise ValueError("pass exactly one of E= or E_opt=")
+
+    def block_fn(Eb):
+        caps, inv = normalize_lib_sizes(
+            lib_sizes, Lp=num_embedded(L, Eb, tau), Tp=Tp)
+        inv_j = jnp.asarray(inv)
+
+        def block(libs, tgts):
+            def one_library(x):
+                return ccm_convergence_caps(
+                    x, tgts, E=Eb, tau=tau, Tp=Tp, caps=caps,
+                    exclude_self=True, impl=impl)  # (|caps|, nt)
+
+            cur = jax.lax.map(one_library, libs)  # (nl, |caps|, nt)
+            return jnp.take(jnp.moveaxis(cur, 1, 0), inv_j, axis=0)
+
+        return block
+
+    if E_opt is None:
+        mapped = _shard_map(
+            block_fn(E),
+            mesh=mesh,
+            in_specs=(P(lib_axes, None), P(tgt_axes, None)),
+            out_specs=P(None, lib_axes, tgt_axes),
+        )
+        return mapped(X_lib, X_tgt)
+    return _egrouped_matrix(X_lib, X_tgt, block_fn, E_opt=E_opt, mesh=mesh,
+                            lib_axes=lib_axes, tgt_axes=tgt_axes,
+                            curves=True)
 
 
 def sharded_optimal_E(

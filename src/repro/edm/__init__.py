@@ -19,7 +19,8 @@ See docs/API.md for the pyEDM/kEDM migration table.
 from repro.edm.config import DEFAULT_THETAS, EDMConfig
 from repro.edm.dataset import Dataset
 from repro.edm.plan import Plan
-from repro.edm.session import EDM, PanelResult
+from repro.edm.session import EDM, PanelResult, SurrogateResult
+from repro.edm.surrogates import make_surrogates
 
 __all__ = ["DEFAULT_THETAS", "EDM", "EDMConfig", "Dataset", "PanelResult",
-           "Plan"]
+           "Plan", "SurrogateResult", "make_surrogates"]

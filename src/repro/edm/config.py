@@ -31,6 +31,15 @@ class EDMConfig:
     theta:    S-Map locality for single-θ tasks (xmap method="smap").
     thetas:   θ grid for the S-Map sweep / nonlinearity test.
     k:        neighbor count; ``None`` means the simplex default E + 1.
+    extra_slack: additional kNN-master slack columns beyond the horizon
+              minimum. A convergence sweep can derive a library cap at
+              index m from the master only when ``k_master >= k +
+              (Lp − 1 − m)`` (``edm.plan.master_slack_covers``), so
+              sessions planning ``ccm(lib_sizes=...)`` /
+              ``surrogate_test`` sweeps down to caps Δ short of the full
+              library should set ``extra_slack≈Δ``; smaller caps fall
+              back to the one-pass multi-cap engine (never a per-size
+              loop).
     ridge:    relative Tikhonov strength of the S-Map normal equations.
     impl:     kernel implementation ("auto" | "pallas" | "interpret" |
               "ref"); plans resolve it once via ``ops.resolve_impl``.
@@ -52,6 +61,7 @@ class EDMConfig:
     theta: float = 1.0
     thetas: tuple[float, ...] = DEFAULT_THETAS
     k: int | None = None
+    extra_slack: int = 0
     ridge: float = 1e-6
     impl: str = "auto"
     mesh: Any = None
@@ -83,6 +93,9 @@ class EDMConfig:
         object.__setattr__(self, "thetas", thetas)
         if self.k is not None and self.k < 1:
             raise ValueError(f"k must be >= 1, got {self.k}")
+        if self.extra_slack < 0:
+            raise ValueError(
+                f"extra_slack must be >= 0, got {self.extra_slack}")
         if self.ridge < 0:
             raise ValueError(f"ridge must be >= 0, got {self.ridge}")
         if self.impl not in ops.IMPLS:
@@ -106,8 +119,9 @@ class EDMConfig:
     @property
     def slack(self) -> int:
         """Extra master-table columns so every planned ``max_idx`` cap can
-        be applied post hoc: one candidate is lost per horizon step."""
-        return max(1, self.Tp, self.Tp_cross)
+        be applied post hoc: one candidate is lost per horizon step, plus
+        ``extra_slack`` for convergence-sweep library caps."""
+        return max(1, self.Tp, self.Tp_cross) + self.extra_slack
 
     def mesh_axis_size(self, axes: tuple[str, ...]) -> int:
         from repro.distributed.sharded_ccm import mesh_axes_size

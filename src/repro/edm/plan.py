@@ -185,6 +185,51 @@ def simplex_skill_from_master(X, iM_E, *, E, tau, Tp, k, impl):
     return jax.lax.map(one, (X, iM_E))
 
 
+def master_slack_covers(caps, *, Lp: int, k: int, k_master: int) -> bool:
+    """The k_master-slack rule for post-hoc library caps (ROADMAP (c)).
+
+    Deriving a capped neighbor table from the uncapped master keeps the
+    first k master entries with index <= cap. That equals the true
+    capped top-k iff the master still *contains* k valid entries in the
+    worst case: a cap at index m excludes the ``Lp − 1 − m`` columns
+    beyond it, and all of them may outrank every valid candidate, so
+    the master must carry ``k_master >= k + (Lp − 1 − min(caps))``
+    columns. Large (near-full-library) convergence sizes satisfy this
+    with the session's default slack; small sizes fall back to the
+    one-pass multi-cap engine (``core.ccm.ccm_convergence``) — never to
+    a per-size re-scan loop.
+    """
+    return k_master >= k + (Lp - 1 - min(caps))
+
+
+@functools.partial(jax.jit, static_argnames=("E", "tau", "Tp", "caps", "k",
+                                             "impl"))
+def ccm_convergence_from_master(x, iM_E, targets, *, E, tau, Tp, caps, k,
+                                impl):
+    """Convergence curve grid from cached master indices → (|caps|, N).
+
+    The cached-session counterpart of ``core.ccm.ccm_convergence``: each
+    library-prefix cap's neighbor table is derived post hoc from ONE
+    master index level (callers must check ``master_slack_covers``
+    first), and only the k selected distances are recomputed — no
+    pairwise pass, no top-k, bit-identical ρ to the legacy per-size
+    sweep (see module docstring).
+    """
+    L = x.shape[-1]
+    Lp = num_embedded(L, E, tau)
+    rows = pred_rows(L, E, tau, Tp)
+    off = embed_offset(E, tau, Tp)
+    iE = iM_E[:Lp]
+    curves = []
+    for m in caps:  # static, small: unrolled per-cap derivations
+        ik, ok = _derive_idx(iE, k=k, max_idx=m)
+        d = _gathered_dists(x, ik, ok, E=E, tau=tau)
+        w = ops.make_weights(d)
+        curves.append(ops.lookup_rho(targets, ik[:rows], w[:rows],
+                                     offset=off, impl=impl))
+    return jnp.stack(curves)
+
+
 @functools.partial(jax.jit, static_argnames=("E", "tau", "Tp", "k", "impl"))
 def ccm_group_from_master(X, iM_E, targets, *, E, tau, Tp, k, impl):
     """Batched CCM block from cached neighbor indices → (N_lib, N_tgt).

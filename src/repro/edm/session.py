@@ -9,6 +9,8 @@ facade for the reproduction. Bind a panel and a config once::
     skill = sess.simplex()             # free: read from the cached sweep
     causal = sess.xmap()               # reuses the SAME kNN master tables
     theta_curves = sess.smap()         # batched S-Map nonlinearity test
+    curve = sess.ccm(0, 1, lib_sizes=(50, 200, 500))  # convergence sweep
+    sig = sess.surrogate_test(0, 1)    # CCM significance vs a null ensemble
 
 Every method builds a ``Plan`` (``sess.plan(task)`` shows it) choosing
 kernels, implementation and local-vs-sharded placement once, then
@@ -37,11 +39,15 @@ from repro.edm.config import EDMConfig
 from repro.edm.dataset import Dataset
 from repro.edm.plan import (
     Plan,
+    ccm_convergence_from_master,
     ccm_group_from_master,
+    master_slack_covers,
     panel_master,
     rho_curves_from_master,
     simplex_skill_from_master,
 )
+from repro.edm.surrogates import make_surrogates
+from repro.core.embedding import num_embedded
 from repro.kernels import ops
 
 
@@ -52,6 +58,22 @@ def _e_groups(E_opt, N: int):
         int(E): np.nonzero(E_opt == E)[0]
         for E in sorted(collections.Counter(E_opt.tolist()))
     }
+
+
+@dataclasses.dataclass
+class SurrogateResult:
+    """Outcome of one ``EDM.surrogate_test``: score, null ensemble, p."""
+
+    rho: float | np.ndarray            # actual skill ((S,) with lib_sizes)
+    surrogate_rho: np.ndarray          # (M,) or (S, M) null ensemble skills
+    pvalue: float | np.ndarray         # rank-based, (1 + #{null ≥ ρ})/(1 + M)
+    method: str
+    num_surrogates: int
+
+    @property
+    def significant(self) -> bool | np.ndarray:
+        """p < 0.05 (per size when a convergence sweep was run)."""
+        return self.pvalue < 0.05
 
 
 @dataclasses.dataclass
@@ -130,8 +152,11 @@ class EDM:
                 task=task, impl=self._impl, placement="local",
                 E=f"fixed:{E or c.E}" if (E or c.E) else "per-series",
                 Tp=c.Tp_cross,
-                reuse=() if (E or c.E) else ("rho",), builds=(),
-                detail="legacy cross_map convergence sweep",
+                reuse=(("master",) if (cached and have_master) else ())
+                + (() if (E or c.E) else ("rho",)), builds=(),
+                detail="sweep: capped tables from kNN master when "
+                       "k_master slack covers, else one-pass multi-cap "
+                       "convergence engine",
             )
         if task == "xmap":
             return Plan(
@@ -285,6 +310,15 @@ class EDM:
 
     # --------------------------------------------------------------- ccm
 
+    def _resolve_pair_E(self, target_index: int, E: int | None) -> int:
+        """E for a pairwise call: arg > config > target's cached optimum."""
+        if E is None:
+            E = self.config.E
+        if E is None:
+            E_opt, _ = self._rho()
+            E = int(E_opt[target_index])
+        return int(E)
+
     def ccm(self, lib, target, *, lib_sizes=None,
             E: int | None = None) -> np.ndarray:
         """Convergence cross-mapping between two panel series.
@@ -294,19 +328,96 @@ class EDM:
         convergence curve — ρ rising with library size is CCM's causality
         criterion. E defaults to the *target's* cached optimal E (kEDM
         §3.4's convention).
+
+        A sweep never re-scans per size: when the cached kNN master's
+        slack covers every cap (``master_slack_covers``) the per-size
+        tables are derived from it with zero additional kNN work,
+        otherwise ONE multi-cap convergence-engine pass handles all
+        sizes. Both are bit-identical to the legacy per-size loop.
         """
         c = self.config
         li = self.data.index_of(lib)
         ti = self.data.index_of(target)
-        if E is None:
-            E = c.E
-        if E is None:
-            E_opt, _ = self._rho()
-            E = int(E_opt[ti])
-        from repro.core.ccm import cross_map
-        return np.asarray(cross_map(
-            self.data.panel[li], self.data.panel[ti], E=E, tau=c.tau,
-            Tp=c.Tp_cross, lib_sizes=lib_sizes, impl=self._impl))
+        E = self._resolve_pair_E(ti, E)
+        if lib_sizes is None:
+            from repro.core.ccm import cross_map
+            return np.asarray(cross_map(
+                self.data.panel[li], self.data.panel[ti], E=E, tau=c.tau,
+                Tp=c.Tp_cross, impl=self._impl))
+        curves = self._ccm_curves(li, self.data.panel[ti][None, :], E=E,
+                                  lib_sizes=lib_sizes)
+        return curves[:, 0]
+
+    def _ccm_curves(self, li: int, targets, *, E: int,
+                    lib_sizes) -> np.ndarray:
+        """(num_sizes, N) convergence grid vs library ``li``'s manifold.
+
+        Master-derived when the cached master's slack rule covers every
+        requested cap; one multi-cap engine pass otherwise. k is the
+        simplex default E + 1 (what the legacy ``cross_map`` sweep used),
+        independent of ``config.k``.
+        """
+        from repro.core.ccm import ccm_convergence_caps, normalize_lib_sizes
+        c = self.config
+        x = self.data.panel[li]
+        Lp = num_embedded(self.data.L, E, c.tau)
+        caps, inv = normalize_lib_sizes(lib_sizes, Lp=Lp, Tp=c.Tp_cross)
+        k = E + 1
+        hit = self._cache.get("master")
+        if (c.cache and c.mesh is None and hit is not None
+                and hit[3] >= E
+                and master_slack_covers(caps, Lp=Lp, k=k, k_master=hit[2])):
+            self.stats["knn_master_hits"] += 1
+            curves = ccm_convergence_from_master(
+                x, hit[1][li, E - 1], targets, E=E, tau=c.tau,
+                Tp=c.Tp_cross, caps=caps, k=k, impl=self._impl)
+        else:
+            curves = ccm_convergence_caps(
+                x, targets, E=E, tau=c.tau, Tp=c.Tp_cross, caps=caps,
+                exclude_self=True, impl=self._impl)
+        return np.asarray(curves)[inv]
+
+    def surrogate_test(self, lib, target, *, num_surrogates: int = 100,
+                       method: str = "shuffle", period: int | None = None,
+                       lib_sizes=None, E: int | None = None,
+                       seed: int = 0) -> SurrogateResult:
+        """CCM significance: rank the real skill against a null ensemble.
+
+        Generates ``num_surrogates`` null versions of ``target``
+        (``method="shuffle"`` destroys all temporal structure;
+        ``"seasonal"`` permutes within phases of ``period`` so shared
+        seasonal forcing survives into the null — the classic CCM false
+        positive) and cross-maps ALL of them plus the real series as one
+        (M+1)-target batch through a single jitted curve-grid program —
+        the same batching discipline as ``submit_panel``, and the
+        library's neighbor tables (session master or one engine pass)
+        are shared by the whole ensemble. Returns a ``SurrogateResult``
+        with the one-sided rank p-value ``(1 + #{ρ_null ≥ ρ}) / (1 + M)``
+        (per size when ``lib_sizes`` is given).
+        """
+        c = self.config
+        li = self.data.index_of(lib)
+        ti = self.data.index_of(target)
+        E = self._resolve_pair_E(ti, E)
+        y = np.asarray(self.data.panel[ti])
+        surr = make_surrogates(y, num_surrogates, method=method,
+                               period=period, seed=seed)
+        targets = jnp.concatenate(
+            [jnp.asarray(y)[None, :], jnp.asarray(surr)], axis=0)
+        squeeze = lib_sizes is None
+        if squeeze:  # one cap: the full usable library
+            Lp = num_embedded(self.data.L, E, c.tau)
+            lib_sizes = (Lp - max(c.Tp_cross, 0),)
+        curves = self._ccm_curves(li, targets, E=E, lib_sizes=lib_sizes)
+        rho = curves[:, 0]
+        null = curves[:, 1:]
+        pval = ((1.0 + (null >= rho[:, None]).sum(axis=1))
+                / (1.0 + num_surrogates))
+        self.stats["surrogate_tests"] += 1
+        if squeeze:
+            return SurrogateResult(float(rho[0]), null[0], float(pval[0]),
+                                   method, num_surrogates)
+        return SurrogateResult(rho, null, pval, method, num_surrogates)
 
     # -------------------------------------------------------------- xmap
 

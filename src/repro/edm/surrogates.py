@@ -1,0 +1,71 @@
+"""Surrogate-series ensembles for CCM significance testing.
+
+A CCM score alone is not evidence: weak coupling, shared seasonality, or
+plain autocorrelation can all produce ρ > 0. The standard gate (used at
+scale by the whole-brain CCM study that drove mpEDM/kEDM — every one of
+its ~10⁸ pairwise scores is tested) is a *surrogate ensemble*: re-run the
+cross map against many null versions of the target series and report the
+rank of the real score as a p-value.
+
+Two null models:
+
+* ``"shuffle"``  — full random permutation: destroys ALL temporal
+  structure. Null hypothesis: the score is explained by the marginal
+  value distribution alone.
+* ``"seasonal"`` — permutes values only within the same phase of a
+  cycle of the given ``period`` (values at t ≡ p mod period are
+  exchanged among themselves). Preserves the mean seasonal profile, so
+  shared periodic forcing — the classic CCM false positive (Sugihara
+  et al. 2012's "mirage correlations") — survives into the null and is
+  discounted.
+
+Generation is host-side numpy (cheap, O(M·L)); the expensive part — one
+cross-map per surrogate — is batched by the session into a single
+(M+1)-target jitted curve-grid program (see ``EDM.surrogate_test``).
+"""
+
+from __future__ import annotations
+
+import numpy as np
+
+#: Surrogate null models understood by ``make_surrogates``.
+METHODS = ("shuffle", "seasonal")
+
+
+def make_surrogates(
+    y,
+    num: int,
+    *,
+    method: str = "shuffle",
+    period: int | None = None,
+    seed: int = 0,
+) -> np.ndarray:
+    """``num`` surrogate copies of a series → (num, L) float32.
+
+    ``method="seasonal"`` requires ``period`` (in samples). Deterministic
+    for a given ``seed``.
+    """
+    if method not in METHODS:
+        raise ValueError(f"unknown method {method!r}; expected {METHODS}")
+    if num < 1:
+        raise ValueError(f"num must be >= 1, got {num}")
+    y = np.asarray(y, np.float32)
+    if y.ndim != 1:
+        raise ValueError(f"y must be 1-D, got shape {y.shape}")
+    L = y.shape[0]
+    rng = np.random.default_rng(seed)
+    out = np.empty((num, L), np.float32)
+    if method == "shuffle":
+        for m in range(num):
+            out[m] = y[rng.permutation(L)]
+        return out
+    if period is None or period < 1:
+        raise ValueError(
+            f"seasonal surrogates need period >= 1, got {period}")
+    for m in range(num):
+        perm = np.arange(L)
+        for p in range(min(period, L)):
+            phase = np.arange(p, L, period)
+            perm[phase] = rng.permutation(phase)
+        out[m] = y[perm]
+    return out

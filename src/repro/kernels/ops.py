@@ -131,6 +131,35 @@ def topk_select(
     )
 
 
+def topk_select_sizes(
+    D: jax.Array,
+    *,
+    k: int,
+    max_idxs: tuple[int, ...],
+    exclude_self: bool = True,
+    impl: str = "auto",
+    block: tuple[int, int] = (8, 512),
+) -> tuple[jax.Array, jax.Array]:
+    """k nearest per row under EVERY prefix cap in one pass → (S, Lp, k).
+
+    ``max_idxs`` is an ascending tuple of inclusive candidate caps (one
+    per library size); level s equals ``topk_select(D, k=k,
+    max_idx=max_idxs[s])`` on every valid slot, with dist=inf /
+    idx=``ref.PAD_IDX`` where a cap leaves fewer than k candidates. The
+    CCM convergence-sweep primitive: one streaming pass instead of S
+    full re-scans of the distance matrix (see kernels/topk.py).
+    """
+    impl = _resolve(impl)
+    if impl == "ref":
+        return _ref.topk_select_sizes(
+            D, k=k, max_idxs=tuple(int(m) for m in max_idxs),
+            exclude_self=exclude_self)
+    return _topk_k.topk_select_sizes(
+        D, k=k, max_idxs=tuple(int(m) for m in max_idxs),
+        exclude_self=exclude_self, block=block,
+        interpret=(impl == "interpret"))
+
+
 def all_knn(
     x: jax.Array,
     *,

@@ -95,6 +95,82 @@ def topk_select(
     return jnp.sqrt(jnp.maximum(-neg_d, 0.0)), idx.astype(jnp.int32)
 
 
+def check_sizes_caps(max_idxs) -> tuple[int, ...]:
+    """Validate a multi-cap tuple (non-empty, >= 0, ascending) → ints.
+
+    The one contract both ``topk_select_sizes`` implementations (this
+    oracle and the Pallas kernel) enforce; ``ops`` dispatches to them
+    unchecked.
+    """
+    caps = tuple(int(m) for m in max_idxs)
+    if not caps:
+        raise ValueError("max_idxs must not be empty")
+    if any(m < 0 for m in caps):
+        raise ValueError(f"max_idxs must be >= 0, got {caps}")
+    if any(b < a for a, b in zip(caps, caps[1:])):
+        raise ValueError(f"max_idxs must be ascending, got {caps}")
+    return caps
+
+
+@functools.partial(jax.jit, static_argnames=("k", "max_idxs", "exclude_self"))
+def topk_select_sizes(
+    D: jax.Array,
+    *,
+    k: int,
+    max_idxs: tuple[int, ...],
+    exclude_self: bool = True,
+) -> tuple[jax.Array, jax.Array]:
+    """k smallest per row under EVERY prefix cap in one pass → (S, Lp, k).
+
+    The multi-cap primitive behind CCM convergence sweeps: ``max_idxs``
+    is an ascending tuple of inclusive column caps (one per library
+    size), and level s of the output equals ``topk_select(D, k=k,
+    max_idx=max_idxs[s])`` — same Euclidean distances, same
+    ``lax.top_k`` (value, index) tie order for every valid slot. Slots
+    with no valid candidate under a cap are dist=inf / idx=``PAD_IDX``
+    (the per-cap calls emit arbitrary masked-column indices there;
+    both carry zero simplex weight, so downstream ρ is bit-identical).
+
+    One pass instead of S: columns are consumed in ascending segments
+    between consecutive caps, each segment's k-best merged into a
+    running table. The merge concatenates the running k-best (all
+    indices below the segment) before the segment's candidates, so
+    ``lax.top_k``'s positional tie-breaking remains global
+    (value, index) order — the invariant that makes the running table
+    reusable across caps.
+    """
+    Lp = D.shape[0]
+    caps = check_sizes_caps(max_idxs)
+    neg = -D.astype(jnp.float32)
+    rows = jnp.arange(Lp, dtype=jnp.int32)[:, None]
+    run_nd = jnp.full((Lp, k), -_INF, jnp.float32)
+    run_i = jnp.full((Lp, k), PAD_IDX, jnp.int32)
+    outs_d, outs_i, prev = [], [], 0
+    for m in caps:
+        hi = min(m + 1, Lp)
+        if hi > prev:
+            w = hi - prev
+            seg = jax.lax.slice_in_dim(neg, prev, hi, axis=1)
+            seg_cols = prev + jnp.arange(w, dtype=jnp.int32)[None, :]
+            if exclude_self:
+                seg = jnp.where(seg_cols == rows, -_INF, seg)
+            if w > k:
+                snd, pos = _chunked_topk(seg, k)
+                si = pos + prev
+            else:
+                snd, si = seg, jnp.broadcast_to(seg_cols, (Lp, w))
+            cand_nd = jnp.concatenate([run_nd, snd], axis=1)
+            cand_i = jnp.concatenate([run_i, si], axis=1)
+            run_nd, pos = jax.lax.top_k(cand_nd, k)
+            run_i = jnp.take_along_axis(cand_i, pos, axis=1)
+            prev = hi
+        ok = run_nd > -_INF
+        outs_d.append(jnp.where(ok, jnp.sqrt(jnp.maximum(-run_nd, 0.0)),
+                                _INF))
+        outs_i.append(jnp.where(ok, run_i, jnp.int32(PAD_IDX)))
+    return jnp.stack(outs_d), jnp.stack(outs_i)
+
+
 def make_weights(dists: jax.Array, eps: float = 1e-30) -> jax.Array:
     """Simplex weights from sorted neighbor distances, paper step (3).
 

@@ -1,4 +1,4 @@
-"""Pallas TPU kernel: small-k partial sort of a distance matrix.
+"""Pallas TPU kernels: small-k partial sort of a distance matrix.
 
 The paper's Algorithm 2 (kEDM §3.3.2) uses per-thread priority queues in
 GPU shared memory, merged by a team leader — and reports the queues' scratch
@@ -16,6 +16,10 @@ Emits Euclidean distances (sqrt — the "normalize D_k" step of Alg. 2) and
 int32 indices, both sorted ascending. Self-exclusion (leave-one-out) and a
 dynamic ``max_idx`` candidate cap (library-size sweeps, Tp validity) are
 fused into the masking pass.
+
+``topk_select_sizes`` is the multi-cap variant behind CCM convergence
+sweeps: ONE column-tiled pass over the distance matrix emits the k-best
+table under every prefix library cap, instead of S full-matrix re-scans.
 """
 
 from __future__ import annotations
@@ -25,6 +29,9 @@ import functools
 import jax
 import jax.numpy as jnp
 from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+from repro.kernels.ref import PAD_IDX, check_sizes_caps
 
 _BIG_I = 2**30  # python int: jnp constants must not be captured by kernels
 
@@ -90,3 +97,123 @@ def topk_select(
         interpret=interpret,
     )(mx, D)
     return dk, ik
+
+
+def _merge_kbest(cand_d, cand_i, k):
+    """k passes of (min, min-global-index-on-ties, retire-by-index).
+
+    Identical discipline to ``knn_multi_e``'s streaming merge: selecting
+    the minimum *global index* among distance ties makes the streamed
+    result bit-identical to a stable full-row partial sort for any
+    column tiling, and retiring the winner by index (clearing both
+    arrays) keeps rows with < k valid candidates from re-emitting one.
+    """
+    best_d, best_i = [], []
+    for _ in range(k):
+        m = jnp.min(cand_d, axis=1, keepdims=True)
+        sel = jnp.where(cand_d == m, cand_i, _BIG_I)
+        bi = jnp.min(sel, axis=1, keepdims=True)
+        best_d.append(m)
+        best_i.append(bi)
+        removed = cand_i == bi
+        cand_d = jnp.where(removed, jnp.inf, cand_d)
+        cand_i = jnp.where(removed, _BIG_I, cand_i)
+    return jnp.concatenate(best_d, axis=1), jnp.concatenate(best_i, axis=1)
+
+
+def _sizes_kernel(d_ref, dk_ref, ik_ref, run_d, run_i, *, k, caps, br, bc,
+                  Lp, exclude_self):
+    i0 = pl.program_id(0) * br
+    j = pl.program_id(1)
+    j0 = j * bc
+
+    @pl.when(j == 0)
+    def _init():  # running k-best scratch + snapshot outputs
+        run_d[...] = jnp.full((br, k), jnp.inf, jnp.float32)
+        run_i[...] = jnp.full((br, k), _BIG_I, jnp.int32)
+        dk_ref[...] = jnp.full((len(caps), br, k), jnp.inf, jnp.float32)
+        ik_ref[...] = jnp.full((len(caps), br, k), _BIG_I, jnp.int32)
+
+    d = d_ref[...]  # (br, bc)
+    rows = i0 + jax.lax.broadcasted_iota(jnp.int32, (br, bc), 0)
+    cols = j0 + jax.lax.broadcasted_iota(jnp.int32, (br, bc), 1)
+    invalid = cols >= Lp
+    if exclude_self:
+        invalid = invalid | (cols == rows)
+    # Snapshots BEFORE the main merge: level s's table is the running
+    # k-best over columns [0, caps[s]], so it merges the pre-block state
+    # with only this block's columns ≤ caps[s]. Caps are static — each
+    # level's snapshot column block is known at trace time, so each cap
+    # costs one extra merge at exactly one column step.
+    for s, m in enumerate(caps):
+        sb = min(m, Lp - 1) // bc  # the column block holding cap s
+
+        @pl.when(j == sb)
+        def _snapshot(s=s, m=m):
+            snap = jnp.where(invalid | (cols > m), jnp.inf, d)
+            cand_d = jnp.concatenate([snap, run_d[...]], axis=1)
+            cand_i = jnp.concatenate([cols, run_i[...]], axis=1)
+            bd, bi = _merge_kbest(cand_d, cand_i, k)
+            dk_ref[s] = jnp.sqrt(jnp.maximum(bd, 0.0))
+            ik_ref[s] = bi
+    # Main stream: fold the full block (masked to the global cap) into
+    # the running k-best reused by every later snapshot.
+    cand_d = jnp.concatenate(
+        [jnp.where(invalid | (cols > caps[-1]), jnp.inf, d), run_d[...]],
+        axis=1)
+    cand_i = jnp.concatenate([cols, run_i[...]], axis=1)
+    run_d[...], run_i[...] = _merge_kbest(cand_d, cand_i, k)
+
+
+@functools.partial(
+    jax.jit,
+    static_argnames=("k", "max_idxs", "exclude_self", "block", "interpret"))
+def topk_select_sizes(
+    D: jax.Array,
+    *,
+    k: int,
+    max_idxs: tuple[int, ...],
+    exclude_self: bool = True,
+    block: tuple[int, int] = (8, 512),
+    interpret: bool = False,
+) -> tuple[jax.Array, jax.Array]:
+    """k smallest per row under every prefix cap in one pass → (S, Lp, k).
+
+    Column-tiled streaming variant of ``ref.topk_select_sizes`` (same
+    semantics: ascending inclusive caps, dist=inf / idx=PAD_IDX in slots
+    with no valid candidate). The grid is (row blocks, column blocks)
+    with the column axis minor (sequential on TPU); the running k-best
+    lives in VMEM scratch and is reused incrementally across caps — one
+    merge per column block plus one snapshot merge per cap, never a
+    re-scan of earlier columns. Columns past the largest cap are not
+    even loaded (the column grid stops at it).
+    """
+    Lp = D.shape[0]
+    caps = check_sizes_caps(max_idxs)
+    S = len(caps)
+    br = max(1, min(block[0], Lp))
+    bc = max(k, min(block[1], Lp))
+    gi = pl.cdiv(Lp, br)
+    gj = pl.cdiv(min(Lp, caps[-1] + 1), bc)
+    dk, ik = pl.pallas_call(
+        functools.partial(_sizes_kernel, k=k, caps=caps, br=br, bc=bc,
+                          Lp=Lp, exclude_self=exclude_self),
+        grid=(gi, gj),
+        in_specs=[pl.BlockSpec((br, bc), lambda i, j: (i, j))],
+        out_specs=[
+            pl.BlockSpec((S, br, k), lambda i, j: (0, i, 0)),
+            pl.BlockSpec((S, br, k), lambda i, j: (0, i, 0)),
+        ],
+        out_shape=[
+            jax.ShapeDtypeStruct((S, Lp, k), jnp.float32),
+            jax.ShapeDtypeStruct((S, Lp, k), jnp.int32),
+        ],
+        scratch_shapes=[
+            pltpu.VMEM((br, k), jnp.float32),
+            pltpu.VMEM((br, k), jnp.int32),
+        ],
+        interpret=interpret,
+    )(D)
+    ok = jnp.isfinite(dk)
+    return (jnp.where(ok, dk, jnp.inf),
+            jnp.where(ok, ik, jnp.int32(PAD_IDX)))

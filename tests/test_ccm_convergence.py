@@ -1,0 +1,267 @@
+"""Batched CCM convergence engine: the multi-cap streaming top-k oracle,
+``ccm_convergence`` vs the seed per-size loop, master-derived capped
+tables vs legacy ``topk_select`` (bit-identical incl. tie order), the
+lib_sizes validation fix, and the sharded convergence engine."""
+
+import numpy as np
+import jax.numpy as jnp
+import pytest
+
+from repro import core
+from repro.core.ccm import normalize_lib_sizes
+from repro.data import timeseries as ts
+from repro.edm.plan import _derive_idx, _gathered_dists, master_slack_covers
+from repro.kernels import ops, ref
+
+
+def _dist(rng, Lp, E=4):
+    x = jnp.asarray(rng.normal(size=Lp + E - 1).astype(np.float32))
+    return ref.pairwise_distances(x, E=E, tau=1)
+
+
+# -------------------------------------------- multi-cap top-k oracle
+
+
+@pytest.mark.parametrize("caps", [(0,), (2, 9, 40, 99), (7, 7, 120),
+                                  (50, 103, 2000)])
+@pytest.mark.parametrize("exclude_self", [True, False])
+def test_topk_select_sizes_matches_per_cap_topk(rng, caps, exclude_self):
+    """Level s ≡ topk_select(max_idx=caps[s]) on every valid slot;
+    invalid slots are inf / PAD_IDX (the per-cap calls emit arbitrary
+    masked-column indices there — both are weight-zero downstream)."""
+    D = _dist(rng, 104)
+    dS, iS = ref.topk_select_sizes(D, k=6, max_idxs=caps,
+                                   exclude_self=exclude_self)
+    for s, m in enumerate(caps):
+        wd, wi = ref.topk_select(D, k=6, exclude_self=exclude_self,
+                                 max_idx=m)
+        wd, wi = np.asarray(wd), np.asarray(wi)
+        ok = np.isfinite(wd)
+        np.testing.assert_array_equal(np.asarray(dS[s]),
+                                      np.where(ok, wd, np.inf))
+        np.testing.assert_array_equal(np.asarray(iS[s])[ok], wi[ok])
+        assert (np.asarray(iS[s])[~ok] == ref.PAD_IDX).all()
+
+
+def test_topk_select_sizes_tie_order_vs_numpy(rng):
+    """Quantized distances force mass ties: the streamed merge must keep
+    lax.top_k's (value, index) stable order at every cap."""
+    x = np.round(rng.normal(size=90), 1).astype(np.float32)  # many ties
+    D = ref.pairwise_distances(jnp.asarray(x), E=3, tau=1)
+    Lp = D.shape[0]
+    caps = (4, 30, 61, 87)
+    dS, iS = ref.topk_select_sizes(D, k=5, max_idxs=caps)
+    Dn = np.asarray(D)
+    for s, m in enumerate(caps):
+        mask = (np.arange(Lp)[None, :] > m) | np.eye(Lp, dtype=bool)
+        Dm = np.where(mask, np.inf, Dn)
+        want_i = np.argsort(Dm, axis=1, kind="stable")[:, :5]
+        ok = np.isfinite(np.take_along_axis(Dm, want_i, axis=1))
+        np.testing.assert_array_equal(np.asarray(iS[s])[ok], want_i[ok])
+
+
+def test_topk_select_sizes_validation(rng):
+    D = _dist(rng, 40)
+    with pytest.raises(ValueError, match="ascending"):
+        ref.topk_select_sizes(D, k=3, max_idxs=(10, 5))
+    with pytest.raises(ValueError, match=">= 0"):
+        ref.topk_select_sizes(D, k=3, max_idxs=(-1, 5))
+    with pytest.raises(ValueError, match="empty"):
+        ref.topk_select_sizes(D, k=3, max_idxs=())
+
+
+# --------------------------------------- convergence engine parity
+
+
+def test_ccm_convergence_bit_identical_to_seed_loop():
+    """The one-pass engine ≡ the seed per-size re-scan loop, bitwise,
+    across an (E, tau, Tp) × sizes grid."""
+    x, y = ts.coupled_logistic(400, b_xy=0.0, b_yx=0.32, seed=3)
+    lib, tgt = jnp.asarray(y), jnp.asarray(np.stack([x, y]))
+    sizes = (10, 60, 150, 399)
+    for E, tau, Tp in ((1, 1, 0), (2, 1, 0), (3, 2, 1), (4, 1, 2)):
+        got = np.asarray(core.ccm_convergence(
+            lib, tgt, E=E, tau=tau, Tp=Tp, lib_sizes=sizes))
+        want = np.asarray(core.cross_map_sizes_seed(
+            lib, tgt, E=E, tau=tau, Tp=Tp, lib_sizes=sizes))
+        np.testing.assert_array_equal(got, want, err_msg=f"E={E} tau={tau}")
+
+
+def test_cross_map_lib_sizes_delegates_bit_identically():
+    x, y = ts.coupled_logistic(500, b_xy=0.0, b_yx=0.32, seed=3)
+    sizes = (25, 60, 150, 300)
+    got = np.asarray(core.cross_map(jnp.asarray(y), jnp.asarray(x), E=2,
+                                    lib_sizes=sizes))
+    want = np.asarray(core.cross_map_sizes_seed(
+        jnp.asarray(y), jnp.asarray(x)[None, :], E=2, lib_sizes=sizes))[:, 0]
+    np.testing.assert_array_equal(got, want)
+
+
+# ------------------------------------------ lib_sizes validation fix
+
+
+def test_lib_sizes_unsorted_duplicate_oversized_warn_and_match():
+    """Regression: cross_map used to silently recompute duplicates and
+    silently clamp oversized sizes. Now it warns once and still returns
+    the legacy values in the caller's order/shape."""
+    x, y = ts.coupled_logistic(350, b_xy=0.0, b_yx=0.32, seed=3)
+    lib, tgt = jnp.asarray(y), jnp.asarray(x)
+    sizes = (200, 50, 50, 10_000)
+    with pytest.warns(UserWarning, match="unsorted"):
+        got = np.asarray(core.cross_map(lib, tgt, E=2, lib_sizes=sizes))
+    assert got.shape == (4,)
+    want = np.asarray(core.cross_map_sizes_seed(
+        lib, tgt[None, :], E=2, lib_sizes=sizes))[:, 0]
+    np.testing.assert_array_equal(got, want)
+    assert got[1] == got[2]  # duplicates share one computation
+    with pytest.warns(UserWarning, match="duplicates"):
+        core.cross_map(lib, tgt, E=2, lib_sizes=(50, 50))
+    with pytest.warns(UserWarning, match="exceed"):
+        core.cross_map(lib, tgt, E=2, lib_sizes=(50, 9_999))
+
+
+def test_lib_sizes_invalid_raise():
+    x, y = ts.coupled_logistic(200, seed=1)
+    with pytest.raises(ValueError, match=">= 1"):
+        core.cross_map(jnp.asarray(y), jnp.asarray(x), E=2,
+                       lib_sizes=(0, 50))
+    with pytest.raises(ValueError, match="empty"):
+        core.cross_map(jnp.asarray(y), jnp.asarray(x), E=2, lib_sizes=())
+
+
+def test_normalize_lib_sizes_mapping():
+    caps, inv = normalize_lib_sizes([300, 50, 50, 120], Lp=200, Tp=1)
+    assert caps == (49, 119, 198)
+    np.testing.assert_array_equal(inv, [2, 0, 0, 1])
+
+
+# ------------------------- master-derived capped tables (satellite)
+
+
+@pytest.mark.parametrize("series", ["random", "periodic"])
+def test_master_derived_capped_tables_bit_identical_to_topk(rng, series):
+    """The k_master-slack rule end to end: capped neighbor tables derived
+    from the uncapped multi-E master match the legacy per-size
+    ``topk_select`` bit-identically — indices AND distances — across an
+    (E, tau, Tp) × cap grid. The periodic series tiles one pattern so
+    distinct library points are *exactly* duplicated: every neighbor
+    list then contains exact distance ties, and the derived tables must
+    reproduce lax.top_k's first-index tie order. (Ties must be exact in
+    the accumulator — values that merely collide after rounding can
+    differ by 1 ULP between the multi-E and per-E accumulation streams,
+    the documented reuse caveat in edm/plan.py.) The derivation runs
+    under jit, exactly as the plan-layer drivers do — eager dispatch
+    fuses the distance recomputation differently and is NOT bit-exact."""
+    import functools
+    import jax
+
+    @functools.partial(jax.jit, static_argnames=("E", "tau", "k", "cap"))
+    def derive(x, iE, *, E, tau, k, cap):
+        ik, ok = _derive_idx(iE, k=k, max_idx=cap)
+        return _gathered_dists(x, ik, ok, E=E, tau=tau), ik
+
+    L = 120
+    if series == "periodic":
+        x = np.tile(rng.normal(size=10).astype(np.float32), L // 10)
+    else:
+        x = rng.normal(size=L).astype(np.float32)
+    xj = jnp.asarray(x)
+    for E, tau, Tp in ((2, 1, 0), (3, 1, 1), (2, 2, 0)):
+        Lp = core.num_embedded(L, E, tau)
+        k = E + 1
+        k_master = k + 36  # slack: caps down to Lp − 1 − 36 derivable
+        _, iM = ops.all_knn_multi_e(xj, E_max=E, tau=tau, k=k_master,
+                                    exclude_self=True, impl="ref")
+        iE = iM[E - 1, :Lp]
+        for cap in (Lp - 2 - Tp, Lp - 10, Lp - 36):
+            cap = min(cap, Lp - 1 - Tp)
+            assert master_slack_covers((cap,), Lp=Lp, k=k,
+                                       k_master=k_master)
+            d, ik = derive(xj, iE, E=E, tau=tau, k=k, cap=cap)
+            D = ref.pairwise_distances(xj, E=E, tau=tau)
+            wd, wi = ref.topk_select(D, k=k, max_idx=cap)
+            wd, wi = np.asarray(wd), np.asarray(wi)
+            fin = np.isfinite(wd)
+            np.testing.assert_array_equal(
+                np.asarray(ik)[fin], wi[fin],
+                err_msg=f"E={E} tau={tau} cap={cap}")
+            # Recomputed distances agree to 1 ULP at table level (XLA
+            # fuses this standalone subgraph slightly differently than
+            # the full driver); the driver-level ρ below is bit-exact.
+            np.testing.assert_allclose(
+                np.asarray(d), np.where(fin, wd, np.inf),
+                rtol=3e-7, atol=0,
+                err_msg=f"E={E} tau={tau} cap={cap}")
+            assert (np.asarray(ik)[~fin] == -1).all()
+
+
+def test_master_derived_rho_bit_identical_to_seed_loop(rng):
+    """End to end through the production driver
+    (``ccm_convergence_from_master``): master-derived convergence
+    curves are bit-identical to the legacy per-size ``topk_select``
+    sweep across an (E, tau, Tp) × size grid."""
+    from repro.edm.plan import ccm_convergence_from_master
+    L = 260
+    x = rng.normal(size=L).astype(np.float32)
+    Y = rng.normal(size=(3, L)).astype(np.float32)
+    xj, Yj = jnp.asarray(x), jnp.asarray(Y)
+    for E, tau, Tp in ((1, 1, 0), (2, 1, 0), (3, 1, 1), (2, 2, 0),
+                       (4, 1, 2)):
+        Lp = core.num_embedded(L, E, tau)
+        k = E + 1
+        k_master = k + 50
+        _, iM = ops.all_knn_multi_e(xj, E_max=E, tau=tau, k=k_master,
+                                    exclude_self=True, impl="ref")
+        caps = tuple(sorted({min(Lp - 1 - Tp, c)
+                             for c in (Lp - 45, Lp - 20, Lp - 2 - Tp)}))
+        assert master_slack_covers(caps, Lp=Lp, k=k, k_master=k_master)
+        got = np.asarray(ccm_convergence_from_master(
+            xj, iM[E - 1], Yj, E=E, tau=tau, Tp=Tp, caps=caps, k=k,
+            impl="ref"))
+        want = np.asarray(core.cross_map_sizes_seed(
+            xj, Yj, E=E, tau=tau, Tp=Tp,
+            lib_sizes=tuple(c + 1 for c in caps)))
+        np.testing.assert_array_equal(got, want,
+                                      err_msg=f"E={E} tau={tau} Tp={Tp}")
+
+
+def test_master_slack_rule_boundary():
+    """One column short of the rule must be rejected, exactly at it OK."""
+    Lp, k = 100, 4
+    assert master_slack_covers((90,), Lp=Lp, k=k, k_master=k + 9)
+    assert not master_slack_covers((90,), Lp=Lp, k=k, k_master=k + 8)
+    assert not master_slack_covers((10, 90), Lp=Lp, k=k, k_master=k + 9)
+
+
+# ------------------------------------------------ sharded convergence
+
+
+def test_sharded_ccm_convergence_single_device():
+    from repro.distributed import make_ccm_mesh, sharded_ccm_convergence
+    panel, _ = ts.forced_network_panel(4, 220, seed=9)
+    X = jnp.asarray(panel)
+    sizes = (40, 120, 210)
+    mesh = make_ccm_mesh((1, 1), ("data", "model"))
+    got = np.asarray(sharded_ccm_convergence(
+        X, X, E=2, lib_sizes=sizes, mesh=mesh, impl="ref"))
+    assert got.shape == (3, 4, 4)
+    for lib in range(4):
+        want = np.asarray(core.ccm_convergence(
+            X[lib], X, E=2, lib_sizes=sizes, impl="ref"))
+        np.testing.assert_allclose(got[:, lib, :], want, rtol=1e-5,
+                                   atol=1e-6)
+    E_opt = np.array([2, 3, 2, 4], np.int32)
+    got2 = sharded_ccm_convergence(X, X, E_opt=E_opt, lib_sizes=sizes,
+                                   mesh=mesh, impl="ref")
+    for t in range(4):
+        for lib in range(4):
+            want = np.asarray(core.ccm_convergence(
+                X[lib], X[t][None, :], E=int(E_opt[t]), lib_sizes=sizes,
+                impl="ref"))[:, 0]
+            np.testing.assert_allclose(got2[:, lib, t], want, rtol=1e-5,
+                                       atol=1e-6)
+    with pytest.raises(ValueError, match="exactly one"):
+        sharded_ccm_convergence(X, X, lib_sizes=sizes, mesh=mesh)
+    with pytest.raises(ValueError, match="exactly one"):
+        sharded_ccm_convergence(X, X, E=2, E_opt=E_opt, lib_sizes=sizes,
+                                mesh=mesh)

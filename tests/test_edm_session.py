@@ -263,6 +263,115 @@ def test_flush_xmap_reuses_batch_session_state(monkeypatch):
             res[ticket].xmap, EDM(X[sl], EDMConfig(E_max=4)).xmap())
 
 
+# ----------------------------------------- ccm convergence + surrogates
+
+
+def test_ccm_lib_sizes_runs_knn_engine_once_per_panel(monkeypatch):
+    """Acceptance regression for ISSUE 4: a convergence sweep never
+    re-runs kNN per size. With the master's slack covering every cap the
+    sweep derives tables from the ONE master pass (no pairwise, no
+    top-k at all); smaller caps fall back to exactly one pairwise +
+    one multi-cap streaming top-k, regardless of |sizes|."""
+    X = _panel()
+    counts = {"multi_e": 0, "pairwise": 0, "topk": 0, "topk_sizes": 0}
+    reals = (ops.all_knn_multi_e, ops.pairwise_distances, ops.topk_select,
+             ops.topk_select_sizes)
+
+    def shim(name, fn):
+        def wrapper(*a, **k):
+            counts[name] += 1
+            return fn(*a, **k)
+        return wrapper
+
+    monkeypatch.setattr(ops, "all_knn_multi_e", shim("multi_e", reals[0]))
+    monkeypatch.setattr(ops, "pairwise_distances", shim("pairwise", reals[1]))
+    monkeypatch.setattr(ops, "topk_select", shim("topk", reals[2]))
+    monkeypatch.setattr(ops, "topk_select_sizes",
+                        shim("topk_sizes", reals[3]))
+    jax.clear_caches()
+
+    sess = EDM(X, EDMConfig(E_max=4, extra_slack=60))
+    sess.optimal_E()
+    assert counts["multi_e"] == 1
+    # slack covers caps down to Lp-1-60: master-derived, zero kNN work
+    sess.ccm(0, 1, lib_sizes=(190, 210, 239))
+    assert counts == {"multi_e": 1, "pairwise": 0, "topk": 0,
+                      "topk_sizes": 0}, counts
+    # deep caps: ONE engine pass for all 8 sizes, never per-size
+    sess.ccm(0, 1, lib_sizes=(20, 40, 60, 80, 100, 140, 180, 200))
+    assert counts == {"multi_e": 1, "pairwise": 1, "topk": 0,
+                      "topk_sizes": 1}, counts
+    assert sess.stats["knn_master_builds"] == 1
+
+
+def test_ccm_lib_sizes_bit_identical_to_legacy_loop():
+    X = _panel()
+    sizes = (30, 100, 180, 235)
+    for cfg in (EDMConfig(E=3), EDMConfig(E=3, extra_slack=220)):
+        sess = EDM(X, cfg)
+        if cfg.extra_slack:
+            sess.simplex()  # builds the master the sweep derives from
+        got = sess.ccm(0, 1, lib_sizes=sizes)
+        want = np.asarray(core.cross_map_sizes_seed(
+            X[0], X[1][None, :], E=3, Tp=0, lib_sizes=sizes))[:, 0]
+        np.testing.assert_array_equal(got, want)
+
+
+def test_surrogate_test_detects_causality_and_null():
+    from repro.data import timeseries as ts2
+    x, y = ts2.coupled_logistic(500, b_xy=0.0, b_yx=0.32, seed=3)
+    rng = np.random.default_rng(0)
+    noise = rng.standard_normal(500).astype(np.float32)
+    sess = EDM(np.stack([x, y, noise]), EDMConfig(E=2))
+    # X forces Y: cross-map X from Y's manifold → significant
+    r = sess.surrogate_test(1, 0, num_surrogates=60, seed=1)
+    assert r.pvalue < 0.05 and bool(r.significant)
+    assert r.surrogate_rho.shape == (60,)
+    assert r.rho > 0.8 and float(np.max(r.surrogate_rho)) < r.rho
+    # independent noise → insignificant
+    r2 = sess.surrogate_test(0, 2, num_surrogates=60, seed=1)
+    assert r2.pvalue > 0.05
+    # the actual score is exactly the plain ccm() skill
+    np.testing.assert_array_equal(np.float32(r.rho), sess.ccm(1, 0))
+    # deterministic under a fixed seed
+    r3 = sess.surrogate_test(1, 0, num_surrogates=60, seed=1)
+    np.testing.assert_array_equal(r.surrogate_rho, r3.surrogate_rho)
+
+
+def test_surrogate_test_convergence_and_seasonal():
+    from repro.data import timeseries as ts2
+    x, y = ts2.coupled_logistic(400, b_xy=0.0, b_yx=0.32, seed=3)
+    sess = EDM(np.stack([x, y]), EDMConfig(E=2))
+    r = sess.surrogate_test(1, 0, num_surrogates=19,
+                            lib_sizes=(50, 150, 380), seed=2)
+    assert r.rho.shape == (3,) and r.surrogate_rho.shape == (3, 19)
+    assert r.pvalue.shape == (3,)
+    assert (np.diff(r.rho) > -0.05).all()  # convergence of the real curve
+    rs = sess.surrogate_test(1, 0, num_surrogates=10, method="seasonal",
+                             period=12, seed=2)
+    assert 0.0 < rs.pvalue <= 1.0
+    with pytest.raises(ValueError, match="period"):
+        sess.surrogate_test(1, 0, num_surrogates=5, method="seasonal")
+    with pytest.raises(ValueError, match="unknown method"):
+        sess.surrogate_test(1, 0, num_surrogates=5, method="bootstrap")
+
+
+def test_seasonal_surrogates_preserve_phase_profile():
+    from repro.edm import make_surrogates
+    L, period = 120, 12
+    y = np.sin(2 * np.pi * np.arange(L) / period).astype(np.float32)
+    y += 0.01 * np.arange(L, dtype=np.float32)  # distinct values per slot
+    surr = make_surrogates(y, 8, method="seasonal", period=period, seed=0)
+    for m in range(8):
+        assert not np.array_equal(surr[m], y)
+        for p in range(period):
+            np.testing.assert_array_equal(
+                np.sort(surr[m, p::period]), np.sort(y[p::period]))
+    shuf = make_surrogates(y, 4, method="shuffle", seed=0)
+    np.testing.assert_array_equal(np.sort(shuf, axis=1),
+                                  np.sort(np.tile(y, (4, 1)), axis=1))
+
+
 # ------------------------------------------------------------- plans
 
 

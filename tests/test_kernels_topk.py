@@ -109,3 +109,60 @@ def test_topk_ties_are_stable(rng):
     got_d, got_i = ops.topk_select(jnp.asarray(D), k=3, impl="interpret")
     want_d, want_i = ref.topk_select(jnp.asarray(D), k=3)
     np.testing.assert_array_equal(np.asarray(got_i), np.asarray(want_i))
+
+
+# ------------------------- multi-cap streaming variant (topk_select_sizes)
+
+
+@pytest.mark.parametrize("caps", [(0,), (3, 17, 60, 99), (50, 2000)])
+@pytest.mark.parametrize("block", [(8, 32), (4, 128), (16, 512)])
+def test_topk_sizes_kernel_matches_ref(rng, caps, block):
+    """Column-tiled streaming kernel ≡ the jnp oracle for any tiling:
+    distances, indices, and the inf/PAD_IDX invalid-slot contract."""
+    D = _dist(rng, 104)
+    want_d, want_i = ref.topk_select_sizes(D, k=6, max_idxs=caps)
+    got_d, got_i = ops.topk_select_sizes(D, k=6, max_idxs=caps,
+                                         impl="interpret", block=block)
+    np.testing.assert_array_equal(np.asarray(got_i), np.asarray(want_i))
+    np.testing.assert_allclose(np.asarray(got_d), np.asarray(want_d),
+                               rtol=1e-6, atol=1e-6)
+
+
+@pytest.mark.parametrize("exclude_self", [True, False])
+def test_topk_sizes_kernel_exclude_self(rng, exclude_self):
+    D = _dist(rng, 70)
+    caps = (10, 42, 69)
+    want_d, want_i = ref.topk_select_sizes(D, k=4, max_idxs=caps,
+                                           exclude_self=exclude_self)
+    got_d, got_i = ops.topk_select_sizes(D, k=4, max_idxs=caps,
+                                         exclude_self=exclude_self,
+                                         impl="interpret", block=(8, 32))
+    np.testing.assert_array_equal(np.asarray(got_i), np.asarray(want_i))
+    np.testing.assert_allclose(np.asarray(got_d), np.asarray(want_d),
+                               rtol=1e-6, atol=1e-6)
+
+
+def test_topk_sizes_kernel_tie_stability():
+    """Mass ties spanning column blocks AND cap boundaries: min global
+    index must win at every cap, as in the stable full-row sort."""
+    Lp = 96
+    D = jnp.ones((Lp, Lp), jnp.float32)
+    caps = (7, 40, 95)
+    want_d, want_i = ref.topk_select_sizes(D, k=5, max_idxs=caps)
+    got_d, got_i = ops.topk_select_sizes(D, k=5, max_idxs=caps,
+                                         impl="interpret", block=(8, 16))
+    np.testing.assert_array_equal(np.asarray(got_i), np.asarray(want_i))
+    np.testing.assert_array_equal(np.asarray(got_d), np.asarray(want_d))
+
+
+def test_topk_sizes_single_cap_equals_topk_select(rng):
+    """S=1 degenerates to the plain kernel's semantics on valid slots."""
+    D = _dist(rng, 64)
+    got_d, got_i = ops.topk_select_sizes(D, k=4, max_idxs=(50,),
+                                         impl="interpret", block=(8, 32))
+    wd, wi = ref.topk_select(D, k=4, max_idx=50)
+    fin = np.isfinite(np.asarray(wd))
+    np.testing.assert_array_equal(np.asarray(got_i[0])[fin],
+                                  np.asarray(wi)[fin])
+    np.testing.assert_allclose(np.asarray(got_d[0]), np.asarray(wd),
+                               rtol=1e-6, atol=1e-6)
