@@ -1,16 +1,34 @@
-"""Paper Table 1: pairwise CCM wall-time on dataset-shaped workloads,
-plus the ISSUE 4 convergence-sweep comparison (seed per-size re-scan loop
-vs the one-pass multi-cap streaming engine).
+"""Paper Table 1: pairwise CCM wall-time on dataset-shaped workloads.
+
+Three sections:
+  * the ISSUE 4 convergence-sweep comparison (seed per-size re-scan loop
+    vs the one-pass multi-cap streaming engine),
+  * the ISSUE 5 library-batched matrix engine vs the legacy per-series
+    ``lax.map`` path at (Lp, Nl) grid points, with the batch-axis
+    bit-parity contract asserted (batched ≡ the per-series B = 1 oracle
+    launch) — pass ``--sweep-batch`` for the full pairs/s-vs-B curve,
+  * the six dataset-shaped rows, whose headline metric is cross-map
+    pairs per second. A committed BENCH_ccm.json is the regression
+    guard: the run fails if any dataset's pairs/s drops more than 30%
+    below the committed row after calibrating for machine speed (the
+    fixed legacy-path grid rows, re-measured every run, anchor how fast
+    this box is relative to the committed run). CI runs this smoke on
+    every push.
 
 The six real microscopy/expression datasets are not shippable; each is
 replaced by a synthetic panel with the same *aspect* (many-short /
 few-long / balanced), CPU-scaled by the stated factor so the single-core
 container finishes in seconds. Derived column: cross-map pairs per
-second, and the scale factor back to the paper's shape.
+second, the scale factor back to the paper's shape, and the library
+batch size B the engine chose.
 """
 
 from __future__ import annotations
 
+import json
+import pathlib
+import re
+import sys
 import time
 
 import jax
@@ -29,6 +47,11 @@ DATASETS = [
     ("Subject11", (101729, 8528), (128, 2048), 3),
     ("F1", (8520, 29484), (64, 4096), 3),
 ]
+
+#: Max tolerated pairs/s regression vs the committed artifact (CI guard).
+GUARD_FRACTION = 0.7
+
+_ARTIFACT = pathlib.Path(__file__).resolve().parent.parent / "BENCH_ccm.json"
 
 
 def _run_convergence():
@@ -60,16 +83,130 @@ def _run_convergence():
         f"one_pass_multi_cap_topk_speedup{t_seed / t_new:.2f}x")
 
 
+#: (Lp, Nl) grid for the old-vs-new engine audit / --sweep-batch curves.
+GROUP_GRID = [(48, 1024, 3), (256, 256, 3)]
+
+
+def _run_group_engine(sweep_batch: bool) -> dict[str, float]:
+    """ISSUE 5 tentpole rows: legacy per-series ``lax.map`` ``ccm_group``
+    vs the library-batched engine, with the batch-axis layout contract
+    asserted — the batched run is bit-identical to the per-series
+    (B = 1) oracle launches of the same engine, ragged final batch
+    included. ``--sweep-batch`` additionally records the pairs/s-vs-B
+    curve per grid point (the lax.map × XLA-CPU-TopK audit data).
+
+    Returns this run's legacy-path pairs/s per grid row — the guard uses
+    them to calibrate the committed numbers to this machine's speed.
+    """
+    seed_pps: dict[str, float] = {}
+    for N, L, E in GROUP_GRID:
+        panel = jax.numpy.asarray(tent_map_panel(N, L, seed=7))
+        Lp = L - (E - 1)
+        B_auto = core.auto_batch_libs(Lp, N)
+
+        got = core.ccm_group_batched(panel, panel, E=E, impl="ref",
+                                     batch_libs=B_auto)
+        oracle = core.ccm_group_batched(panel, panel, E=E, impl="ref",
+                                        batch_libs=1)  # per-series path
+        np.testing.assert_array_equal(got, oracle)  # the layout contract
+        ragged = max(1, min(N - 1, B_auto + 1))  # N % B != 0 by choice
+        np.testing.assert_array_equal(
+            got, core.ccm_group_batched(panel, panel, E=E, impl="ref",
+                                        batch_libs=ragged))
+        legacy = np.asarray(core.ccm_group(panel, panel, E=E, impl="ref"))
+        np.testing.assert_allclose(got, legacy, rtol=1e-5, atol=1e-6)
+
+        t_old = time_fn(
+            lambda: core.ccm_group(panel, panel, E=E, impl="ref"),
+            iters=3, stat="min")
+        t_new = time_fn(
+            lambda: core.ccm_group_batched(panel, panel, E=E, impl="ref",
+                                           batch_libs=B_auto),
+            iters=3, stat="min")
+        tag = f"N{N}_L{L}"
+        seed_pps[f"ccm_group_seed_{tag}"] = N * N / (t_old * 1e-6)
+        row(f"ccm_group_seed_{tag}", t_old,
+            f"{N * N / (t_old * 1e-6):.0f}pairs_per_s_per_series_laxmap")
+        row(f"ccm_group_batched_{tag}", t_new,
+            f"{N * N / (t_new * 1e-6):.0f}pairs_per_s_B{B_auto}_"
+            f"speedup{t_old / t_new:.2f}x")
+
+        if not sweep_batch:
+            continue
+        Bs = sorted({1, 2, 4, 8, 16, 32, 64, B_auto, N})
+        for B in Bs:
+            if B > N:
+                continue
+            t = time_fn(
+                lambda B=B: core.ccm_group_batched(
+                    panel, panel, E=E, impl="ref", batch_libs=B),
+                iters=2, stat="min")
+            note = "auto_default" if B == B_auto else "sweep"
+            row(f"ccm_sweepB_{tag}_B{B}", t,
+                f"{N * N / (t * 1e-6):.0f}pairs_per_s_{note}")
+    return seed_pps
+
+
+def _committed_pairs_per_s() -> dict[str, float]:
+    """Dataset pairs/s rows of the committed artifact (pre-overwrite).
+
+    Only the dataset-shaped rows are guarded — the engine-comparison and
+    sweep rows exist to document curves, and double-guarding them would
+    just multiply the noise surface of a shared-CPU CI box.
+    """
+    if not _ARTIFACT.exists():
+        return {}
+    guarded = {f"ccm_{name}" for name, *_ in DATASETS}
+    guarded |= {f"ccm_group_seed_N{N}_L{L}" for N, L, _ in GROUP_GRID}
+    rows = json.loads(_ARTIFACT.read_text()).get("rows", [])
+    out = {}
+    for r in rows:
+        m = re.match(r"(\d+(?:\.\d+)?)pairs_per_s", r.get("derived", ""))
+        if m and r["name"] in guarded:
+            out[r["name"]] = float(m.group(1))
+    return out
+
+
 def run():
+    sweep_batch = "--sweep-batch" in sys.argv
+    committed = _committed_pairs_per_s()
+    measured: dict[str, float] = {}
     _run_convergence()
+    seed_pps = _run_group_engine(sweep_batch)
     for name, paper_shape, (N, L), E in DATASETS:
         panel = jax.numpy.asarray(tent_map_panel(N, L, seed=7))
         E_opt = np.full(N, E, np.int32)
+        B = core.auto_batch_libs(L - (E - 1), N)
         t0 = time.perf_counter()
         rho = core.ccm_matrix(panel, E_opt, impl="ref")
         dt = time.perf_counter() - t0
         pairs = N * N
         scale = (paper_shape[0] / N) ** 2 * max(paper_shape[1] / L, 1.0)
-        row(f"ccm_{name}", dt * 1e6,
-            f"{pairs / dt:.0f}pairs_per_s_scale{scale:.0f}x_"
+        rname = f"ccm_{name}"
+        measured[rname] = pairs / dt
+        row(rname, dt * 1e6,
+            f"{pairs / dt:.0f}pairs_per_s_scale{scale:.0f}x_B{B}_"
             f"meanrho{float(np.mean(rho)):.3f}")
+        # Sustained engine throughput (compile amortized — the serving
+        # number a session/flush pipeline sees; the row above keeps the
+        # cold one-shot protocol of the committed history).
+        tw = time_fn(lambda: core.ccm_matrix(panel, E_opt, impl="ref"),
+                     warmup=0, iters=2, stat="min")
+        row(f"{rname}_warm", tw,
+            f"{pairs / (tw * 1e-6):.0f}pairs_per_s_sustained_B{B}")
+    # Machine calibration: committed numbers come from a different box,
+    # so scale them by how this machine runs the same fixed legacy-path
+    # workloads (the ccm_group_seed grid rows) vs the committed run —
+    # the guard then tracks the *code's* throughput, not runner luck.
+    ratios = [seed_pps[n] / committed[n]
+              for n in seed_pps if committed.get(n)]
+    calib = float(np.median(ratios)) if ratios else 1.0
+    regressions = [
+        f"{name}: {measured[name]:.0f} < {GUARD_FRACTION:.0%} of committed "
+        f"{old:.0f} pairs/s (×{calib:.2f} machine calibration)"
+        for name, old in committed.items()
+        if name in measured and measured[name] < GUARD_FRACTION * old * calib
+    ]
+    if regressions:
+        raise SystemExit("pairs/s regression guard failed:\n  "
+                         + "\n  ".join(regressions))

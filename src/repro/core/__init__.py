@@ -17,9 +17,11 @@ table from pyEDM/kEDM names is in docs/API.md.
 """
 
 from repro.core.ccm import (
+    auto_batch_libs,
     ccm_convergence,
     ccm_convergence_caps,
     ccm_group,
+    ccm_group_batched,
     ccm_matrix,
     cross_map,
     cross_map_sizes_seed,
@@ -56,9 +58,11 @@ from repro.core.stats import CoMoments, pearson_rows
 __all__ = [
     "KnnTable",
     "all_knn",
+    "auto_batch_libs",
     "ccm_convergence",
     "ccm_convergence_caps",
     "ccm_group",
+    "ccm_group_batched",
     "ccm_matrix",
     "cross_map",
     "cross_map_sizes_seed",

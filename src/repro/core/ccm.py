@@ -206,6 +206,185 @@ def cross_map(
     return rho[0] if squeeze else rho
 
 
+#: Default memory budgets (MB) for the library-batched engine's in-flight
+#: (B, Lp, Lp) f32 distance stack. The budget counts the primary stack;
+#: transient copies (mask apply, top-k candidates) put the true peak at a
+#: small multiple of it. Backend-dependent on purpose: an HBM-backed
+#: accelerator wants launches big enough to amortize dispatch, while on
+#: XLA CPU the stack competes with the last-level cache — the
+#: ``bench_ccm --sweep-batch`` curves show pairs/s *falling* once
+#: B·Lp²·4 outgrows ~tens of MB (B=48 at Lp=1022 is slower than B=8).
+DEFAULT_BATCH_BUDGET_MB = 256
+DEFAULT_BATCH_BUDGET_MB_CPU = 32
+
+
+def _default_budget_mb() -> int:
+    try:
+        platform = jax.devices()[0].platform
+    except RuntimeError:  # pragma: no cover - no backend at all
+        platform = "cpu"
+    return (DEFAULT_BATCH_BUDGET_MB_CPU if platform == "cpu"
+            else DEFAULT_BATCH_BUDGET_MB)
+
+
+def auto_batch_libs(Lp: int, Nl: int, budget_mb: float | None = None, *,
+                    per_series_bytes: int | None = None) -> int:
+    """Library batch size B with B·Lp² f32 under the memory budget.
+
+    The ISSUE 5 sizing rule: one batched engine launch holds a
+    (B, Lp, Lp) squared-distance stack in flight, so B is capped at the
+    largest count that keeps it under ``budget_mb`` (default: backend-
+    dependent, see ``DEFAULT_BATCH_BUDGET_MB*``), clamped to [1, Nl].
+    Under that cap the launches are *equalized* — B = ceil(Nl / nb) for
+    the smallest launch count nb the cap allows — because the ragged
+    final launch is padded to a full B: a cap of 949 against Nl = 1024
+    would otherwise run one full launch plus one padded 75→949 launch,
+    wasting almost half the compute (measured: 545k vs 955k pairs/s).
+    Short-series panels (tiny Lp) batch large swaths of the library axis
+    per launch; long series fall back toward per-series steps.
+
+    Engines whose in-flight footprint is NOT a distance stack (the
+    cached-master derivation holds O(Lp·k_master) per series) pass their
+    real ``per_series_bytes`` instead of inheriting the 4·Lp² default.
+    """
+    budget = _default_budget_mb() if budget_mb is None else budget_mb
+    per = 4 * Lp * Lp if per_series_bytes is None else max(
+        1, int(per_series_bytes))
+    Nl = max(Nl, 1)
+    cap = max(1, min(Nl, int(budget * 2**20) // per))
+    nb = -(-Nl // cap)
+    return -(-Nl // nb)
+
+
+def post_lookup_rho(targets, d, i, *, rows, off, impl):
+    """Per-series weights + fused-ρ stage of every batched matrix engine.
+
+    (d, i) are (B, Lp, k) neighbor tables; returns (B, Nt) ρ via a
+    ``lax.map`` whose body runs on per-series shapes. This stage is THE
+    load-bearing half of the batch-axis bit-parity contract — every
+    rounding-sensitive op here must see shapes independent of B — so the
+    direct engine (``_group_step``), the cached-master engine
+    (``edm.plan._master_group_step``), and the per-shard engine
+    (``distributed.sharded_ccm._local_block``) all share this one
+    implementation instead of keeping three copies in sync.
+    """
+
+    def post(args):
+        dB, iB = args
+        w = ops.make_weights(dB)
+        return ops.lookup_rho(targets, iB[:rows], w[:rows], offset=off,
+                              impl=impl)
+
+    return jax.lax.map(post, (d, i))
+
+
+@functools.partial(jax.jit, static_argnames=("E", "tau", "Tp", "k", "impl"))
+def _group_step(libs, targets, *, E, tau, Tp, k, impl):
+    """One engine launch: fused distance→top-k→weights→ρ for B libraries.
+
+    The kNN axis is batched through ``ops.all_knn_batch`` (the whole
+    point — it hoists the top-k out of any ``lax.map`` body); the
+    weights + fused-ρ lookup stay per-series ``lax.map`` sub-steps
+    (``post_lookup_rho``) so every rounding-sensitive stage runs on
+    per-series shapes, making the result bit-invariant in B (see
+    kernels/ref.py).
+    """
+    L = libs.shape[-1]
+    rows = pred_rows(L, E, tau, Tp)
+    off = embed_offset(E, tau, Tp)
+    hard_max = num_embedded(L, E, tau) - 1 - max(Tp, 0)
+    d, i = ops.all_knn_batch(libs, E=E, tau=tau, k=k, exclude_self=True,
+                             max_idx=hard_max, impl=impl)
+    return post_lookup_rho(targets, d, i, rows=rows, off=off, impl=impl)
+
+
+def pad_batch(chunk: jax.Array, B: int) -> jax.Array:
+    """Pad a ragged final batch to B rows by repeating the last series.
+
+    Real data, so the engine needs no masking; the driver discards the
+    padded rows at assembly. Keeping every launch at the same (B, L)
+    shape means ONE compiled program serves the whole library axis.
+    """
+    n = chunk.shape[0]
+    if n == B:
+        return chunk
+    return jnp.concatenate([chunk, jnp.repeat(chunk[-1:], B - n, axis=0)])
+
+
+def drive_batched(Nl: int, B: int, launch) -> np.ndarray:
+    """Double-buffered host loop over ceil(Nl/B) engine launches.
+
+    ``launch(a, b)`` dispatches rows [a, b) (padded to B) and returns the
+    not-yet-materialized device result. JAX dispatch is async, so while
+    the host converts/assembles batch i's block the device is already
+    computing batch i+1 — the ROADMAP session-item-(b) overlap. At most
+    two batch results are in flight.
+    """
+    out = pending = None
+    for a in range(0, Nl, B):
+        cur = launch(a, min(a + B, Nl))
+        if pending is not None:
+            (pa, pb), arr = pending
+            block = np.asarray(arr)
+            if out is None:
+                out = np.empty((Nl,) + block.shape[1:], block.dtype)
+            out[pa:pb] = block[: pb - pa]
+        pending = ((a, min(a + B, Nl)), cur)
+    (pa, pb), arr = pending
+    block = np.asarray(arr)
+    if out is None:
+        out = np.empty((Nl,) + block.shape[1:], block.dtype)
+    out[pa:pb] = block[: pb - pa]
+    return out
+
+
+def ccm_group_batched(
+    libs: jax.Array,
+    targets: jax.Array,
+    *,
+    E: int,
+    tau: int = 1,
+    Tp: int = 0,
+    k: int | None = None,
+    impl: str = "auto",
+    batch_libs: int | None = None,
+    budget_mb: float | None = None,
+) -> np.ndarray:
+    """Library-batched CCM block → (Nl, Nt) ρ (host ndarray).
+
+    The production all-pairs engine (ISSUE 5): the library axis is cut
+    into ceil(Nl/B) batches of B series (``batch_libs``, or
+    ``auto_batch_libs``'s memory-budget rule), each batch is ONE jitted
+    launch of fused distance→top-k→weights→``lookup_rho`` over
+    ``ops.all_knn_batch``, and launches are double-buffered against host
+    assembly (``drive_batched``). Results are bit-invariant in B —
+    ragged final batches are padded with real data and discarded — with
+    the per-series oracle being the B = 1 run; the legacy ``lax.map``
+    path (``ccm_group``) agrees exactly on neighbor indices/tie order
+    and to ~1 ULP on ρ (bit-equal at most shapes; see kernels/ref.py for
+    the XLA-CPU map-body caveat).
+    """
+    libs = jnp.asarray(libs)
+    targets = jnp.asarray(targets)
+    if targets.ndim == 1:
+        targets = targets[None, :]
+    Nl = libs.shape[0]
+    Lp = num_embedded(libs.shape[-1], E, tau)
+    if Nl == 0:  # empty library axis: empty matrix, like ccm_group
+        return np.zeros((0, targets.shape[0]), np.float32)
+    B = batch_libs if batch_libs is not None else auto_batch_libs(
+        Lp, Nl, budget_mb)
+    B = max(1, min(int(B), Nl))
+    kk = E + 1 if k is None else int(k)
+    impl_r = ops.resolve_impl(impl)
+
+    def launch(a, b):
+        return _group_step(pad_batch(libs[a:b], B), targets, E=E, tau=tau,
+                           Tp=Tp, k=kk, impl=impl_r)
+
+    return drive_batched(Nl, B, launch)
+
+
 @functools.partial(jax.jit, static_argnames=("E", "tau", "Tp", "impl"))
 def ccm_group(
     libs: jax.Array,
@@ -216,12 +395,20 @@ def ccm_group(
     Tp: int = 0,
     impl: str = "auto",
 ) -> jax.Array:
-    """Batched CCM block: every library × every target at one E → (Nl, Nt) ρ.
+    """Per-series CCM block: every library × every target at one E → (Nl, Nt).
 
     One jitted program drives the whole library axis with a sequential
     ``lax.map`` (one (Lp, Lp) distance matrix in flight — kEDM's
-    per-library loop, minus the host round trip per library), replacing
-    N_lib separate ``cross_map`` dispatches.
+    per-library loop, minus the host round trip per library).
+
+    .. deprecated:: kept as the legacy per-series reference; production
+       callers (the session's ``xmap``, ``ccm_matrix``) use
+       ``ccm_group_batched``, which batches the kNN axis B series per
+       launch. Audit note (ROADMAP lax.map × XLA-CPU-TopK): beyond the
+       TopK slowdown, XLA CPU also contracts the distance accumulation
+       differently inside this ``lax.map`` body at some shapes (~1 ULP
+       vs the identical standalone pipeline, e.g. Lp = 94), so this
+       path is index-exact but not universally bit-equal to the engine.
     """
     L = libs.shape[-1]
     Lp = num_embedded(L, E, tau)

@@ -3,11 +3,14 @@
 2-D decomposition of the (library × target) skill matrix over the mesh:
 library series are sharded across ``lib_axes`` (default "data", plus "pod"
 on multi-pod meshes) and target series across ``tgt_axes`` (default
-"model"). Each device loops over its local library block — one fused
-all-kNN + one batched fused-ρ lookup per library — and owns the matching
-ρ-matrix tile. No collective is needed in the inner loop at all: the only
-data movement is the initial placement of the two (replicated-axis) input
-views, matching mpEDM's embarrassingly-parallel MPI layout.
+"model"). Each device drives its local library block through the
+library-batched inner engine — local libraries go B at a time through
+``ops.all_knn_batch`` (one fused distance + streaming top-k launch per
+batch, B from ``core.ccm.auto_batch_libs``' memory budget) plus batched
+fused-ρ lookups — and owns the matching ρ-matrix tile. No collective is
+needed in the inner loop at all: the only data movement is the initial
+placement of the two (replicated-axis) input views, matching mpEDM's
+embarrassingly-parallel MPI layout.
 
 Two embedding-dimension modes: a fixed E (the paper's synthetic
 benchmarks), or a per-target ``E_opt`` table — targets are then laid out
@@ -63,7 +66,7 @@ def pad_members(members: np.ndarray, multiple: int) -> np.ndarray:
 
 
 def _egroup_layout(E_opt, S: int):
-    """Host-side target layout giving every shard identical E-groups.
+    """Device-side target layout giving every shard identical E-groups.
 
     Sharding a contiguously E-sorted target axis would hand each device
     an arbitrary mix of groups (data-dependent, untraceable). Instead
@@ -74,36 +77,74 @@ def _egroup_layout(E_opt, S: int):
     ``segs = ((E, width), ...)``, so the SPMD inner loop switches E per
     segment with no collective and no data-dependent shapes.
 
-    Returns (perm, keep, segs): permuted-target order (take ``X[perm]``),
-    the per-slot "not a pad" mask, and the per-shard segments.
+    The (N,)-int ``E_opt`` table never round-trips to host (the old
+    PR-3 layout pulled it back to form the permutation): the group
+    order comes from a stable device-side argsort (ascending E, then
+    index — identical to the old per-E ``nonzero`` concatenation), and
+    only a per-level histogram (E_max + 1 ints, unavoidable — the
+    segment structure must be static for tracing) crosses the boundary
+    before compute. The padded gather pattern is pure host arithmetic
+    on those static counts.
+
+    Returns (perm, keep, segs): permuted-target order as a DEVICE array
+    (``jnp.take(X, perm)`` stays on device; materialize it at result
+    delivery for the host unpermute), the per-slot "not a pad" mask
+    (static np bool), and the per-shard segments.
     """
-    seg_perm, seg_keep, segs = [], [], []
-    for E in sorted(set(np.asarray(E_opt, np.int32).tolist())):
-        members = np.nonzero(np.asarray(E_opt, np.int32) == E)[0]
-        padded = pad_members(members, S)
-        keep = np.arange(len(padded)) < len(members)
-        w = len(padded) // S
+    E_opt = jnp.asarray(E_opt, jnp.int32)
+    hist = np.asarray(jnp.bincount(E_opt, length=int(E_opt.max()) + 1))
+    order = jnp.argsort(E_opt)  # stable: groups ascending E, index tie order
+    seg_gather, seg_keep, segs = [], [], []
+    o = 0
+    for E, cnt in enumerate(hist.tolist()):
+        if cnt == 0:
+            continue
+        padded = cnt + (-cnt) % S
+        gi = o + np.minimum(np.arange(padded), cnt - 1)  # repeat last member
+        keep = np.arange(padded) < cnt
+        w = padded // S
         segs.append((int(E), w))
-        seg_perm.append(padded.reshape(S, w))
+        seg_gather.append(gi.reshape(S, w))
         seg_keep.append(keep.reshape(S, w))
-    perm = np.concatenate(seg_perm, axis=1).reshape(-1)
+        o += cnt
+    gather = np.concatenate(seg_gather, axis=1).reshape(-1)
     keep = np.concatenate(seg_keep, axis=1).reshape(-1)
+    perm = jnp.take(order, jnp.asarray(gather))
     return perm, keep, tuple(segs)
 
 
-def _local_block(libs, tgts, *, E, tau, Tp, rows, off, hard_max, impl):
-    """ρ tile for (local libraries × local targets): (nl, nt)."""
+def _local_block(libs, tgts, *, E, tau, Tp, rows, off, hard_max, impl,
+                 batch_libs=None, budget_mb=None):
+    """ρ tile for (local libraries × local targets): (nl, nt).
 
-    def one_library(x):
-        D = ops.pairwise_distances(x, E=E, tau=tau, impl=impl)
-        d, ix = ops.topk_select(D, k=E + 1, exclude_self=True,
-                                max_idx=hard_max, impl=impl)
-        w = ops.make_weights(d)
-        return ops.lookup_rho(tgts, ix[:rows], w[:rows], offset=off, impl=impl)
+    The per-shard inner engine is library-batched (ISSUE 5): local
+    libraries are processed B at a time through ``ops.all_knn_batch``
+    (one fused distance + streaming top-k launch per batch — the top-k
+    never sits inside a per-series ``lax.map`` body), with B from the
+    same memory-budget rule as the local engine
+    (``core.ccm.auto_batch_libs``). Peak memory per device is one
+    (B, Lp, Lp) distance stack; everything stays shard-local, so the
+    zero-collective property is untouched.
+    """
+    from repro.core.ccm import auto_batch_libs, pad_batch, post_lookup_rho
 
-    # Sequential over local libraries: bounds peak memory at one (Lp, Lp)
-    # distance matrix per device, exactly like kEDM's per-library loop.
-    return jax.lax.map(one_library, libs)
+    nl, L = libs.shape
+    Lp = num_embedded(L, E, tau)
+    B = batch_libs if batch_libs is not None else auto_batch_libs(
+        Lp, nl, budget_mb)
+    B = max(1, min(int(B), nl))
+    nb = -(-nl // B)
+    # ragged final batch: repeat real series, drop their rows below
+    libs = pad_batch(libs, nb * B)
+
+    def one_batch(lb):
+        d, ix = ops.all_knn_batch(lb, E=E, tau=tau, k=E + 1,
+                                  exclude_self=True, max_idx=hard_max,
+                                  impl=impl)
+        return post_lookup_rho(tgts, d, ix, rows=rows, off=off, impl=impl)
+
+    out = jax.lax.map(one_batch, libs.reshape(nb, B, L))
+    return out.reshape(nb * B, -1)[:nl]
 
 
 def sharded_ccm_matrix(
@@ -118,6 +159,8 @@ def sharded_ccm_matrix(
     tgt_axes=("model",),
     impl: str = "ref",
     E_opt=None,
+    batch_libs: int | None = None,
+    batch_budget_mb: float | None = None,
 ):
     """All-pairs CCM skill matrix on a device mesh.
 
@@ -130,7 +173,8 @@ def sharded_ccm_matrix(
     laid out per ``_egroup_layout`` so each shard runs identical static
     E-segments (zero collectives; libraries are auto-padded over
     ``lib_axes``); returns a host (N_lib, N_tgt) np.ndarray in the
-    original target order.
+    original target order. ``batch_libs`` / ``batch_budget_mb`` size the
+    per-shard library-batched inner engine (see ``_local_block``).
     """
     L = X_lib.shape[-1]
     if X_tgt.shape[-1] != L:
@@ -142,7 +186,8 @@ def sharded_ccm_matrix(
         return functools.partial(
             _local_block, E=Eb, tau=tau, Tp=Tp,
             rows=pred_rows(L, Eb, tau, Tp), off=embed_offset(Eb, tau, Tp),
-            hard_max=num_embedded(L, Eb, tau) - 1 - max(Tp, 0), impl=impl)
+            hard_max=num_embedded(L, Eb, tau) - 1 - max(Tp, 0), impl=impl,
+            batch_libs=batch_libs, budget_mb=batch_budget_mb)
 
     if E_opt is None:
         mapped = _shard_map(
@@ -165,14 +210,18 @@ def _egrouped_matrix(X_lib, X_tgt, block_fn, *, E_opt, mesh, lib_axes,
     (nl, w) ρ tile — or, with ``curves=True``, to a (S, nl, w)
     convergence tile whose leading size axis is replicated (the
     ``sharded_ccm_convergence`` layout); targets stay the minor axis.
+
+    ``E_opt`` (and the permutation derived from it) stays on device
+    until result delivery — the host sees only the static layout
+    metadata before compute (see ``_egroup_layout``).
     """
     N_lib, N_tgt = X_lib.shape[0], X_tgt.shape[0]
-    E_opt = np.broadcast_to(np.asarray(E_opt, np.int32), (N_tgt,))
+    E_opt = jnp.broadcast_to(jnp.asarray(E_opt, jnp.int32), (N_tgt,))
     S_t = mesh_axes_size(mesh, tgt_axes)
     S_l = mesh_axes_size(mesh, lib_axes)
-    perm, keep, segs = _egroup_layout(E_opt, S_t)
+    perm_d, keep, segs = _egroup_layout(E_opt, S_t)
     Xl = pad_to_multiple(X_lib, S_l, axis=0)
-    Xt = jnp.take(X_tgt, jnp.asarray(perm), axis=0)
+    Xt = jnp.take(jnp.asarray(X_tgt), perm_d, axis=0)
 
     def local(libs, tgts):
         outs, o = [], 0
@@ -190,6 +239,7 @@ def _egrouped_matrix(X_lib, X_tgt, block_fn, *, E_opt, mesh, lib_axes,
         else P(lib_axes, tgt_axes),
     )
     R = np.asarray(mapped(Xl, Xt))
+    perm = np.asarray(perm_d)  # delivered WITH the results, not before
     if curves:
         rho = np.zeros((R.shape[0], N_lib, N_tgt), np.float32)
         rho[:, :, perm[keep]] = R[:, :N_lib, keep]

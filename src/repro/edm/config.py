@@ -40,6 +40,17 @@ class EDMConfig:
               library should set ``extra_slack≈Δ``; smaller caps fall
               back to the one-pass multi-cap engine (never a per-size
               loop).
+    batch_libs: library batch size B of the all-pairs matrix engine —
+              each ``xmap`` E-group runs as ceil(N/B) batched
+              distance→top-k→lookup launches (``core.ccm._group_step``)
+              instead of N sequential ``lax.map`` steps. ``None`` (the
+              default) sizes B automatically so the in-flight B·Lp²
+              f32 distance stack stays under ``batch_budget_mb``
+              (``core.ccm.auto_batch_libs``). Results are bit-invariant
+              in B, so this is purely a memory/throughput knob.
+    batch_budget_mb: memory budget (MB) for that auto rule; ``None``
+              picks the backend default (32 on XLA CPU, where the stack
+              competes with the last-level cache; 256 on accelerators).
     ridge:    relative Tikhonov strength of the S-Map normal equations.
     impl:     kernel implementation ("auto" | "pallas" | "interpret" |
               "ref"); plans resolve it once via ``ops.resolve_impl``.
@@ -62,6 +73,8 @@ class EDMConfig:
     thetas: tuple[float, ...] = DEFAULT_THETAS
     k: int | None = None
     extra_slack: int = 0
+    batch_libs: int | None = None
+    batch_budget_mb: float | None = None
     ridge: float = 1e-6
     impl: str = "auto"
     mesh: Any = None
@@ -96,6 +109,12 @@ class EDMConfig:
         if self.extra_slack < 0:
             raise ValueError(
                 f"extra_slack must be >= 0, got {self.extra_slack}")
+        if self.batch_libs is not None and self.batch_libs < 1:
+            raise ValueError(
+                f"batch_libs must be >= 1, got {self.batch_libs}")
+        if self.batch_budget_mb is not None and self.batch_budget_mb <= 0:
+            raise ValueError(
+                f"batch_budget_mb must be > 0, got {self.batch_budget_mb}")
         if self.ridge < 0:
             raise ValueError(f"ridge must be >= 0, got {self.ridge}")
         if self.impl not in ops.IMPLS:

@@ -86,15 +86,18 @@ def panel_master(X, *, E_max, tau, k, impl):
 def _derive_idx(iE, *, k, max_idx):
     """First k master indices surviving a ``max_idx`` cap (stable order).
 
-    iE: one series' master index level, (rows, k_master). Returns
-    ((rows, k) idx with -1 in slots lacking a valid candidate, validity
-    mask) — index-identical to a capped ``topk_select``.
+    iE: master index level rows, (…, rows, k_master) — one series or a
+    (B, rows, k_master) batch; all ops are row-independent along the
+    last axis, so the batched call equals the per-series calls
+    bit-for-bit. Returns ((…, rows, k) idx with -1 in slots lacking a
+    valid candidate, validity mask) — index-identical to a capped
+    ``topk_select``.
     """
     valid = (iE >= 0) & (iE <= max_idx)
     order = jnp.argsort(jnp.where(valid, 0, 1).astype(jnp.int32),
-                        axis=1)[:, :k]  # jnp.argsort is stable
-    ok = jnp.take_along_axis(valid, order, axis=1)
-    return jnp.where(ok, jnp.take_along_axis(iE, order, axis=1), -1), ok
+                        axis=-1)[..., :k]  # jnp.argsort is stable
+    ok = jnp.take_along_axis(valid, order, axis=-1)
+    return jnp.where(ok, jnp.take_along_axis(iE, order, axis=-1), -1), ok
 
 
 def _derive(dE, iE, *, k, max_idx):
@@ -230,15 +233,102 @@ def ccm_convergence_from_master(x, iM_E, targets, *, E, tau, Tp, caps, k,
     return jnp.stack(curves)
 
 
+def _gathered_dists_batch(X, idx, ok, *, E, tau):
+    """Batched ``_gathered_dists``: selected-pair distances for B series.
+
+    Same per-lag accumulation order on the gathered values; gathers are
+    exact, so only the (B, rows, k)-shaped f32 chain is rounding-
+    sensitive (bit-invariant in B in practice — the k axis, not the
+    batch axis, is minor).
+    """
+    Lp = num_embedded(X.shape[-1], E, tau)
+    B, rows, k = idx.shape
+    jj = jnp.maximum(idx, 0).reshape(B, rows * k)
+    acc = jnp.zeros(idx.shape, jnp.float32)
+    xf = X.astype(jnp.float32)
+    for lag in range(E):
+        xk = jax.lax.dynamic_slice_in_dim(xf, lag * tau, Lp, axis=-1)
+        d = (xk[:, :rows, None]
+             - jnp.take_along_axis(xk, jj, axis=-1).reshape(B, rows, k))
+        acc = acc + d * d
+    return jnp.where(ok, jnp.sqrt(jnp.maximum(acc, 0.0)), jnp.inf)
+
+
+@functools.partial(jax.jit, static_argnames=("E", "tau", "Tp", "k", "impl"))
+def _master_group_step(Xb, iMb, targets, *, E, tau, Tp, k, impl):
+    """One master-derived engine launch: (B, Nt) ρ for B libraries.
+
+    The cached-session twin of ``core.ccm._group_step``: neighbor
+    indices come from the batched stable filter over the master levels
+    (zero kNN work), the k selected distances are recomputed in pairwise
+    accumulation order, and weights + fused-ρ lookups run as per-series
+    ``lax.map`` sub-steps (per-series shapes ⇒ bit-invariant in B).
+    """
+    from repro.core.ccm import post_lookup_rho
+
+    L = Xb.shape[-1]
+    Lp = num_embedded(L, E, tau)
+    rows = pred_rows(L, E, tau, Tp)
+    off = embed_offset(E, tau, Tp)
+    hard_max = Lp - 1 - max(Tp, 0)
+    ik, ok = _derive_idx(iMb[:, :Lp], k=k, max_idx=hard_max)
+    d = _gathered_dists_batch(Xb, ik, ok, E=E, tau=tau)
+    return post_lookup_rho(targets, d, ik, rows=rows, off=off, impl=impl)
+
+
+def ccm_group_from_master_batched(X, iM_E, targets, *, E, tau, Tp, k, impl,
+                                  batch_libs=None,
+                                  budget_mb=None) -> "np.ndarray":
+    """Library-batched CCM block from cached master indices → (N, Nt) ρ.
+
+    The cached-session counterpart of ``core.ccm.ccm_group_batched``:
+    ceil(N/B) double-buffered ``_master_group_step`` launches instead of
+    N sequential ``lax.map`` steps. B is sized against this engine's
+    *actual* in-flight footprint — O(B·Lp·k_master) for the batched
+    stable-filter sort plus gathered-distance stage, NOT the direct
+    engine's (B, Lp, Lp) distance stack (which derivation never holds):
+    sizing by the distance-stack rule would collapse B to 1 on long
+    series exactly where batching the derivation is cheapest.
+    """
+    from repro.core.ccm import (auto_batch_libs, drive_batched, pad_batch)
+
+    import numpy as np
+
+    X = jnp.asarray(X)
+    iM_E = jnp.asarray(iM_E)
+    Nl = X.shape[0]
+    Lp = num_embedded(X.shape[-1], E, tau)
+    if Nl == 0:  # empty library axis: empty matrix, like the legacy path
+        return np.zeros((0, targets.shape[0]), np.float32)
+    if batch_libs is not None:
+        B = batch_libs
+    else:
+        # ~4 live (B, Lp, k_master)-sized buffers per launch (validity,
+        # sort keys/order, gathered dists).
+        B = auto_batch_libs(Lp, Nl, budget_mb,
+                            per_series_bytes=16 * Lp * int(iM_E.shape[-1]))
+    B = max(1, min(int(B), max(Nl, 1)))
+    impl_r = ops.resolve_impl(impl)
+
+    def launch(a, b):
+        return _master_group_step(
+            pad_batch(X[a:b], B), pad_batch(iM_E[a:b], B), targets, E=E,
+            tau=tau, Tp=Tp, k=k, impl=impl_r)
+
+    return drive_batched(Nl, B, launch)
+
+
 @functools.partial(jax.jit, static_argnames=("E", "tau", "Tp", "k", "impl"))
 def ccm_group_from_master(X, iM_E, targets, *, E, tau, Tp, k, impl):
-    """Batched CCM block from cached neighbor indices → (N_lib, N_tgt).
+    """Per-series CCM block from cached neighbor indices → (N_lib, N_tgt).
 
     The cached-session counterpart of ``core.ccm.ccm_group``: instead of
     one O(E·Lp²) pairwise + top-k pipeline per library, each library's
     neighbors are derived from its master index level (iM_E, (N, L,
     k_master)) and only the k selected distances are recomputed —
-    bit-identical output (see module docstring).
+    bit-identical output (see module docstring). Kept as the legacy
+    per-series reference; the session dispatches
+    ``ccm_group_from_master_batched``.
     """
     L = X.shape[-1]
     Lp = num_embedded(L, E, tau)

@@ -40,7 +40,7 @@ from repro.edm.dataset import Dataset
 from repro.edm.plan import (
     Plan,
     ccm_convergence_from_master,
-    ccm_group_from_master,
+    ccm_group_from_master_batched,
     master_slack_covers,
     panel_master,
     rho_curves_from_master,
@@ -159,16 +159,32 @@ class EDM:
                        "convergence engine",
             )
         if task == "xmap":
+            # Coverage for the DEFAULT call (E_opt=None): fixed E, else
+            # the cached optimal-E table (which _rho would build —
+            # together with the master — before the matrix runs anyway).
+            # An explicit deeper `E_opt=` argument can still fall back
+            # to the direct engine at execution time.
+            hit = self._cache.get("master")
+            levels = (c.E if c.E else
+                      int(self._cache["rho"][0].max()) if have_rho
+                      else c.E_max)
+            covered = hit is not None and hit[3] >= levels
+            master_next = cached and (
+                covered or self.stats["xmap_direct_runs"] > 0
+                or not (c.E or have_rho))
             return Plan(
                 task=task, impl=self._impl, placement=placement,
                 E=f"fixed:{c.E}" if c.E else "per-series", Tp=c.Tp_cross,
-                reuse=(("master",) if cached else ()) + (
+                reuse=(("master",) if (cached and covered) else ()) + (
                     () if c.E else ("rho",)),
-                builds=("master",) if (cached and not have_master) else (),
+                builds=(("master",) if (master_next and not covered)
+                        else ()) + (() if (c.E or have_rho) else ("rho",)),
                 detail="E-grouped sharded matrix, zero collectives"
                 if sharded else (
-                    "E-grouped lookups on cached kNN master" if cached
-                    else "legacy ccm_group per E-group"),
+                    "library-batched lookups on cached kNN master"
+                    if master_next
+                    else "library-batched direct engine, ceil(N/B) "
+                         "launches per E-group"),
             )
         raise ValueError(f"unknown task {task!r}")
 
@@ -340,10 +356,16 @@ class EDM:
         ti = self.data.index_of(target)
         E = self._resolve_pair_E(ti, E)
         if lib_sizes is None:
-            from repro.core.ccm import cross_map
-            return np.asarray(cross_map(
-                self.data.panel[li], self.data.panel[ti], E=E, tau=c.tau,
-                Tp=c.Tp_cross, impl=self._impl))
+            # Single full-library cap through the same curves path a
+            # sweep uses: a covering cached master supplies the
+            # neighbors with zero kNN work (exactly what plan("ccm")
+            # advertises); without one it is one engine pass, same as
+            # the legacy cross_map — and bit-identical either way.
+            Lp = num_embedded(self.data.L, E, c.tau)
+            curves = self._ccm_curves(
+                li, self.data.panel[ti][None, :], E=E,
+                lib_sizes=(Lp - max(c.Tp_cross, 0),))
+            return curves[0, 0]
         curves = self._ccm_curves(li, self.data.panel[ti][None, :], E=E,
                                   lib_sizes=lib_sizes)
         return curves[:, 0]
@@ -431,10 +453,15 @@ class EDM:
         ``method="smap"`` swaps the lookup for the batched S-Map engine
         at locality ``theta`` (per-target optimal-E S-Map CCM).
 
-        Local sessions reuse the cached multi-E kNN master (simplex
-        method) so no pairwise distance matrix is ever recomputed; mesh
+        Each E-group is driven by the library-batched matrix engine —
+        ceil(N/B) fused distance→top-k→lookup launches (``batch_libs`` /
+        the memory-budget auto rule) with device compute double-buffered
+        against host assembly, instead of N sequential per-series steps.
+        Local sessions holding a cached multi-E kNN master (simplex
+        method) derive neighbor indices from it with zero kNN work; mesh
         configs route through the E-grouped zero-collective sharded
-        engines.
+        engines, whose per-shard inner loop uses the same batched
+        engine.
         """
         if method not in ("simplex", "smap"):
             raise ValueError(f"unknown xmap method {method!r}")
@@ -448,31 +475,57 @@ class EDM:
         return self._xmap_local(method, groups, theta)
 
     def _xmap_local(self, method, groups, theta) -> np.ndarray:
+        """Local all-pairs matrix: library-batched engine per E-group.
+
+        Each E-group runs as ceil(N/B) batched engine launches
+        (``batch_libs`` / the auto memory-budget rule) with device
+        compute double-buffered against host block assembly. A cached
+        kNN master that covers the needed levels supplies the neighbor
+        indices (zero kNN work); otherwise the direct
+        ``ops.all_knn_batch`` engine runs — a one-shot matrix no longer
+        pays for building a master it would use once.
+        """
         c = self.config
         X = self.data.panel
         N = self.data.N
         rho = np.zeros((N, N), np.float32)
-        use_master = method == "simplex" and c.cache
-        if c.k is not None and method == "simplex" and not c.cache:
-            raise ValueError("custom k for xmap requires cache=True")
-        iM = self._master(max(groups))[1] if use_master else None
+        hit = self._cache.get("master")
+        use_master = method == "simplex" and c.cache and hit is not None \
+            and hit[3] >= max(groups)
+        if (method == "simplex" and c.cache and not use_master
+                and self.stats["xmap_direct_runs"] > 0):
+            # Second no-master xmap on a caching session: the workload is
+            # repeating, so pay for the master NOW and derive this and
+            # every later call from it — a one-shot matrix stays on the
+            # direct engine, a repeated one keeps the amortization the
+            # session API promises.
+            use_master = True
+        if use_master:
+            iM = self._master(max(groups))[1]
+        else:
+            iM = None
+            if method == "simplex" and c.cache:
+                self.stats["xmap_direct_runs"] += 1
         for E, members in groups.items():
             tgts = X[members]
             if method == "smap":
                 from repro.core.smap_engine import smap_group
-                block = smap_group(
+                block = np.asarray(smap_group(
                     X, tgts, E=E, tau=c.tau, Tp=c.Tp_cross,
                     theta=float(c.theta if theta is None else theta),
-                    ridge=c.ridge, impl=self._impl)
+                    ridge=c.ridge, impl=self._impl))
             elif use_master:
-                block = ccm_group_from_master(
+                block = ccm_group_from_master_batched(
                     X, iM[:, E - 1], tgts, E=E, tau=c.tau, Tp=c.Tp_cross,
-                    k=c.k_for(E), impl=self._impl)
+                    k=c.k_for(E), impl=self._impl, batch_libs=c.batch_libs,
+                    budget_mb=c.batch_budget_mb)
             else:
-                from repro.core.ccm import ccm_group
-                block = ccm_group(X, tgts, E=E, tau=c.tau, Tp=c.Tp_cross,
-                                  impl=self._impl)
-            rho[:, members] = np.asarray(block)
+                from repro.core.ccm import ccm_group_batched
+                block = ccm_group_batched(
+                    X, tgts, E=E, tau=c.tau, Tp=c.Tp_cross, k=c.k_for(E),
+                    impl=self._impl, batch_libs=c.batch_libs,
+                    budget_mb=c.batch_budget_mb)
+            rho[:, members] = block
         return rho
 
     def _xmap_sharded(self, method, E_opt, theta) -> np.ndarray:
@@ -488,8 +541,9 @@ class EDM:
                 tgt_axes=c.tgt_axes, impl=self._impl))[: self.data.N]
         return np.asarray(sharded_ccm_matrix(
             X, X, E_opt=E_opt, tau=c.tau, Tp=c.Tp_cross, mesh=c.mesh,
-            lib_axes=c.lib_axes, tgt_axes=c.tgt_axes,
-            impl=self._impl))[: self.data.N]
+            lib_axes=c.lib_axes, tgt_axes=c.tgt_axes, impl=self._impl,
+            batch_libs=c.batch_libs,
+            batch_budget_mb=c.batch_budget_mb))[: self.data.N]
 
     # ------------------------------------------------------ batched entry
 
@@ -516,7 +570,13 @@ class EDM:
         return ticket
 
     def flush(self) -> dict[int, PanelResult]:
-        """Run every queued panel; returns {ticket: PanelResult}."""
+        """Run every queued panel; returns {ticket: PanelResult}.
+
+        Matrix tasks inherit the engine's double-buffered dispatch
+        (ROADMAP session item (b)): each panel's xmap runs as batched
+        launches with the device computing batch i+1 while the host
+        assembles batch i's block (``core.ccm.drive_batched``).
+        """
         queue, self._queue = self._queue, []
         results = {t: PanelResult() for t, _, _ in queue}
         batches: dict[tuple, list] = collections.defaultdict(list)

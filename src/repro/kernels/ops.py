@@ -191,6 +191,36 @@ def all_knn(
                        impl=impl)
 
 
+def all_knn_batch(
+    X: jax.Array,
+    *,
+    E: int,
+    tau: int = 1,
+    k: int | None = None,
+    exclude_self: bool = True,
+    max_idx=None,
+    impl: str = "auto",
+    block: tuple[int, int] = (128, 1024),
+) -> tuple[jax.Array, jax.Array]:
+    """All-kNN tables for B library series in ONE launch → (B, Lp, k).
+
+    The CCM matrix engine primitive: batches the kNN axis so an E-group
+    of the all-pairs matrix costs ceil(N/B) launches instead of N
+    sequential ``lax.map`` steps. Slice b equals the fused per-series
+    pipeline on ``X[b]`` with ``lax.top_k``'s tie order, and results are
+    bit-invariant in B (the per-series oracle is the B = 1 launch); see
+    kernels/knn_batch.py and ``ref.all_knn_batch``.
+    """
+    impl = _resolve(impl)
+    if impl == "ref":
+        return _ref.all_knn_batch(
+            X, E=E, tau=tau, k=k, exclude_self=exclude_self, max_idx=max_idx)
+    from repro.kernels.knn_batch import all_knn_batch as _batch_k
+    return _batch_k(
+        X, E=E, tau=tau, k=k, exclude_self=exclude_self, max_idx=max_idx,
+        block=block, interpret=(impl == "interpret"))
+
+
 def all_knn_multi_e(
     x: jax.Array,
     *,

@@ -222,6 +222,78 @@ def lookup_rho(
 
 
 # --------------------------------------------------------------------------
+# Library-batched all-kNN (the CCM matrix engine primitive).
+#
+# One launch computes the neighbor tables of B library series at one E —
+# the batch axis is embarrassingly independent, so this is a *layout*
+# contract, not a numerics change: every per-series stage either runs on
+# per-series shapes or is a rounding-free selection (top-k, gathers), and
+# the result is bit-invariant in B (the per-series oracle is the B = 1
+# launch of the same program). NOTE the legacy per-series route — the
+# same pipeline inside a ``lax.map`` body (``core.ccm.ccm_group``) — is
+# NOT always bit-equal to this: XLA CPU contracts the distance
+# accumulation differently inside map bodies at some shapes (~1 ULP,
+# e.g. Lp = 94; measured while building this engine), one more entry in
+# the lax.map pathology file alongside the TopK slowdown in ROADMAP.
+# --------------------------------------------------------------------------
+
+
+@functools.partial(jax.jit, static_argnames=("E", "tau", "k", "exclude_self",
+                                             "max_idx"))
+def _all_knn_batch(X, *, E, tau, k, exclude_self, max_idx):
+    B, L = X.shape
+    Lp = num_embedded(L, E, tau)
+    Xf = X.astype(jnp.float32)
+    acc = jnp.zeros((B, Lp, Lp), jnp.float32)
+    for lag in range(E):  # same accumulation order as pairwise_distances
+        xk = jax.lax.dynamic_slice_in_dim(Xf, lag * tau, Lp, axis=-1)
+        d = xk[:, :, None] - xk[:, None, :]
+        acc = acc + d * d
+    cols = jnp.arange(Lp, dtype=jnp.int32)
+    mask = jnp.zeros((Lp, Lp), bool)
+    if exclude_self:
+        mask = mask | jnp.eye(Lp, dtype=bool)
+    if max_idx is not None:
+        mask = mask | (cols[None, :] > max_idx)
+    # One batched top-k over the whole (B, Lp, Lp) stack: selection is
+    # row-independent and rounding-free, so batching it is exact — and it
+    # hoists the TopK out of any lax.map body (where XLA CPU degenerates).
+    # No (B·Lp, Lp) reshape: it would cut the mask/negate fusion into the
+    # chunk-max prefilter and re-materialize the stack (2× at Lp=4094).
+    neg_d, idx = _chunked_topk(-jnp.where(mask[None], _INF, acc), k)
+    return (jnp.sqrt(jnp.maximum(-neg_d, 0.0)),
+            idx.astype(jnp.int32))
+
+
+def all_knn_batch(
+    X: jax.Array,
+    *,
+    E: int,
+    tau: int = 1,
+    k: int | None = None,
+    exclude_self: bool = True,
+    max_idx=None,
+) -> tuple[jax.Array, jax.Array]:
+    """All-kNN tables for B library series in ONE launch → (B, Lp, k).
+
+    ``X`` is a (B, L) stack of series; slice b of the output equals the
+    fused per-series pipeline (``pairwise_distances`` + ``topk_select``
+    traced as one program) on ``X[b]``, with ``lax.top_k``'s
+    (value, index) tie order. Results are bit-invariant in B — the
+    per-series oracle is the B = 1 launch (see the section comment for
+    why the *lax.map* legacy route is the one that wobbles).
+    """
+    X = jnp.asarray(X)
+    if X.ndim != 2:
+        raise ValueError(f"X must be (B, L), got shape {X.shape}")
+    num_embedded(X.shape[-1], E, tau)  # raises on too-short series
+    k = E + 1 if k is None else int(k)
+    max_idx = None if max_idx is None else int(max_idx)
+    return _all_knn_batch(X, E=E, tau=tau, k=k, exclude_self=exclude_self,
+                          max_idx=max_idx)
+
+
+# --------------------------------------------------------------------------
 # Incremental multi-E all-kNN (the one-pass optimal-E sweep engine).
 #
 # D_E = D_{E-1} + the rank-1 lag term (x[i+(E-1)τ] − x[j+(E-1)τ])², so the
@@ -257,32 +329,40 @@ def _chunked_topk(neg: jax.Array, k: int) -> tuple[jax.Array, jax.Array]:
     semantics as padding the row, without the full-matrix pad copy that
     used to dominate the cost on materialized inputs — ~70ms of the
     ~200ms total at Lp=4096).
+
+    ``neg`` may carry leading batch dims ((…, Lc)); every stage is
+    row-independent, so the result per row is identical to the 2-D call
+    — the batched kNN engine passes its (B, Lp, Lp) stack directly
+    instead of reshaping to (B·Lp, Lp), which would cut the fusion of
+    the mask/negate producers into stage 1 and re-materialize the whole
+    stack (measured 2× end-to-end at Lp=4094).
     """
-    Lr, Lc = neg.shape
+    Lc = neg.shape[-1]
+    lead = neg.shape[:-1]
     C = -(-Lc // _CHUNK_W)
     if k >= C or Lc <= 4 * _CHUNK_W:  # prefilter can't shrink the scan
         nd, ik = jax.lax.top_k(neg, k)
         return nd, ik.astype(jnp.int32)
     C0 = Lc // _CHUNK_W
-    body = neg[:, :C0 * _CHUNK_W].reshape(Lr, C0, _CHUNK_W)
+    body = neg[..., :C0 * _CHUNK_W].reshape(*lead, C0, _CHUNK_W)
     m, w = body, _CHUNK_W
-    while w > 1:  # vectorized pairwise max tree → (Lr, C0) chunk maxima
+    while w > 1:  # vectorized pairwise max tree → (…, C0) chunk maxima
         m = jnp.maximum(m[..., :w // 2], m[..., w // 2:w])
         w //= 2
     m = m[..., 0]
-    if C0 != C:  # ragged last chunk: tiny (Lr, Lc−C0·W) reduce
+    if C0 != C:  # ragged last chunk: tiny (…, Lc−C0·W) reduce
         m = jnp.concatenate(
-            [m, jnp.max(neg[:, C0 * _CHUNK_W:], axis=1, keepdims=True)],
-            axis=1)
+            [m, jnp.max(neg[..., C0 * _CHUNK_W:], axis=-1, keepdims=True)],
+            axis=-1)
     _, cid = jax.lax.top_k(m, k)
-    cid = jnp.sort(cid, axis=1)  # global column order → stable ties
-    gidx = (cid[:, :, None] * _CHUNK_W
-            + jnp.arange(_CHUNK_W, dtype=cid.dtype)[None, None, :]
-            ).reshape(Lr, k * _CHUNK_W)
-    cand = jnp.take_along_axis(neg, jnp.minimum(gidx, Lc - 1), axis=1)
+    cid = jnp.sort(cid, axis=-1)  # global column order → stable ties
+    gidx = (cid[..., :, None] * _CHUNK_W
+            + jnp.arange(_CHUNK_W, dtype=cid.dtype)
+            ).reshape(*lead, k * _CHUNK_W)
+    cand = jnp.take_along_axis(neg, jnp.minimum(gidx, Lc - 1), axis=-1)
     cand = jnp.where(gidx < Lc, cand, -_INF)
     nd, pos = jax.lax.top_k(cand, k)
-    ik = jnp.take_along_axis(gidx, pos, axis=1)
+    ik = jnp.take_along_axis(gidx, pos, axis=-1)
     return nd, ik.astype(jnp.int32)
 
 

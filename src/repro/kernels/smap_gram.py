@@ -22,7 +22,9 @@ The S-Map weight w_ij = exp(−θ d_ij / d̄_j) needs the full-row mean d̄_j
 provide. The middle grid axis is a two-phase sweep over the same column
 tiles: phase 0 recomputes each (br, bc) distance block and accumulates the
 row sums (→ d̄, an output block revisited across tiles), phase 1 recomputes
-the block again (O(E·br·bc), cheaper than round-tripping it through HBM)
+the block again (O(E·br·bc), cheaper than round-tripping it through HBM;
+measured against a VMEM d-row cache and kept — see the ``cache_phase1``
+note on ``smap_gram``)
 and accumulates, per θ, the E+1 rank-(E+1) MXU matmuls (w ⊙ aᵖ) @ A_tile
 into the Gram/moment outputs. Degenerate rows (d̄ ≈ 0, constant series)
 take ratio 0 ⇒ weight 1 — see ``ref.smap_ratio``.
@@ -39,18 +41,20 @@ import functools
 import jax
 import jax.numpy as jnp
 from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
 
 from repro.kernels.ref import _DBAR_TINY, num_embedded
 
 
-def _kernel(xc_ref, xr_ref, y_ref, ds_ref, g_ref, m_ref, *, E, tau, off,
-            rows, thetas, br, bc, exclude_self):
+def _kernel(xc_ref, xr_ref, y_ref, ds_ref, g_ref, m_ref, *scratch, E, tau,
+            off, rows, thetas, br, bc, exclude_self):
     i0 = pl.program_id(0) * br
     p = pl.program_id(1)  # 0: accumulate row sums (d̄) · 1: accumulate G, M
     j = pl.program_id(2)
     j0 = j * bc
     E1 = E + 1
     N = y_ref.shape[0]
+    dc_ref = scratch[0] if scratch else None  # cache_phase1 distance rows
 
     T = len(thetas)
 
@@ -62,22 +66,22 @@ def _kernel(xc_ref, xr_ref, y_ref, ds_ref, g_ref, m_ref, *, E, tau, off,
 
     rows_i = i0 + jax.lax.broadcasted_iota(jnp.int32, (br, bc), 0)
     cols_i = j0 + jax.lax.broadcasted_iota(jnp.int32, (br, bc), 1)
-    acc = jnp.zeros((br, bc), jnp.float32)
-    for e in range(E):  # E ≤ ~20: unrolled, as in pairwise_dist.py
-        xi = xc_ref[pl.dslice(i0 + e * tau, br), :]  # (br, 1) sublanes
-        xj = xr_ref[:, pl.dslice(j0 + e * tau, bc)]  # (1, bc) lanes
-        d = xi - xj
-        acc = acc + d * d
-    d = jnp.sqrt(jnp.maximum(acc, 0.0))
     valid = cols_i < rows  # library = embedded points with Tp-ahead truth
 
-    @pl.when(p == 0)
-    def _rowsum():  # d̄ numerator; self's zero distance is included
+    def compute_d():  # fused-embedding distance block, O(E·br·bc) VPU work
+        acc = jnp.zeros((br, bc), jnp.float32)
+        for e in range(E):  # E ≤ ~20: unrolled, as in pairwise_dist.py
+            xi = xc_ref[pl.dslice(i0 + e * tau, br), :]  # (br, 1) sublanes
+            xj = xr_ref[:, pl.dslice(j0 + e * tau, bc)]  # (1, bc) lanes
+            d = xi - xj
+            acc = acc + d * d
+        return jnp.sqrt(jnp.maximum(acc, 0.0))
+
+    def rowsum(d):  # d̄ numerator; self's zero distance is included
         ds_ref[...] += jnp.sum(jnp.where(valid, d, 0.0), axis=1,
                                keepdims=True)
 
-    @pl.when(p == 1)
-    def _gram():
+    def _gram_accumulate(d):
         dbar = ds_ref[...] * (1.0 / rows)  # (br, 1)
         ratio = d / jnp.where(dbar > _DBAR_TINY, dbar, 1.0)
         invalid = ~valid
@@ -104,12 +108,34 @@ def _kernel(xc_ref, xr_ref, y_ref, ds_ref, g_ref, m_ref, *, E, tau, off,
                     w * yn, at, (((1,), (0,)), ((), ())),
                     preferred_element_type=jnp.float32)
 
+    if dc_ref is None:  # default: recompute the block in phase 1
+
+        @pl.when(p == 0)
+        def _rowsum():
+            rowsum(compute_d())
+
+        @pl.when(p == 1)
+        def _gram():
+            _gram_accumulate(compute_d())
+    else:  # cache_phase1: phase 0 spills the d rows to VMEM scratch
+
+        @pl.when(p == 0)
+        def _rowsum_cache():
+            d = compute_d()
+            rowsum(d)
+            dc_ref[:, pl.dslice(j0, bc)] = d
+
+        @pl.when(p == 1)
+        def _gram_cache():
+            _gram_accumulate(dc_ref[:, pl.dslice(j0, bc)])
+
 
 @functools.partial(
     jax.jit,
     static_argnames=("E", "tau", "Tp", "thetas", "exclude_self", "block",
-                     "interpret"))
-def _call(x, Y, *, E, tau, Tp, thetas, exclude_self, block, interpret):
+                     "interpret", "cache_phase1"))
+def _call(x, Y, *, E, tau, Tp, thetas, exclude_self, block, interpret,
+          cache_phase1=False):
     L = x.shape[-1]
     rows = num_embedded(L, E, tau) - max(Tp, 0)
     off = (E - 1) * tau + Tp
@@ -128,6 +154,9 @@ def _call(x, Y, *, E, tau, Tp, thetas, exclude_self, block, interpret):
         functools.partial(_kernel, E=E, tau=tau, off=off, rows=rows,
                           thetas=thetas, br=br, bc=bc,
                           exclude_self=exclude_self),
+        scratch_shapes=(
+            [pltpu.VMEM((br, gj * bc), jnp.float32)] if cache_phase1
+            else []),
         grid=(gi, 2, gj),
         in_specs=[
             pl.BlockSpec((need, 1), lambda i, p, j: (0, 0)),  # column copy
@@ -164,11 +193,26 @@ def smap_gram(
     exclude_self: bool = True,
     block: tuple[int, int] = (128, 1024),
     interpret: bool = False,
+    cache_phase1: bool = False,
 ) -> tuple[jax.Array, jax.Array]:
     """Streaming weighted Gram/moments → (G (rows,T,E+1,E+1), M (rows,T,N,E+1)).
 
     Semantics identical to ``ref.smap_gram`` (see its docstring); Y is the
     (N, L) target panel (Y = x[None] for self-prediction).
+
+    ``cache_phase1`` resolves the ROADMAP S-Map follow-on (a): instead of
+    recomputing each O(E·br·bc) distance block in the phase-1 sweep,
+    phase 0 spills its √acc rows to a (br, rows) f32 VMEM scratch that
+    phase 1 reads back (bit-equal outputs — same arithmetic either way).
+    Measured (Pallas interpreter at L=512, E=6, |θ|=4, N=2,
+    block=(64, 256); the container has no TPU, so this measures executed
+    ops, not MXU/VPU overlap): recompute 9.8 ms, cache 11.8 ms — the
+    cache LOSES even before hardware effects, and on a real TPU the
+    recompute is VPU work that overlaps the phase-1 MXU matmuls while
+    the scratch costs 4·br·rows bytes of VMEM, capping the library near
+    rows ≈ 16k at br=128 before the scratch alone eats half of VMEM.
+    Default therefore stays ``False`` (recompute); the knob exists for
+    TPU profiling to revisit.
     """
     L = x.shape[-1]
     num_embedded(L, E, tau)  # raises on too-short series
@@ -176,4 +220,5 @@ def smap_gram(
         raise ValueError("library/target series length mismatch")
     return _call(x, Y, E=E, tau=tau, Tp=Tp,
                  thetas=tuple(float(t) for t in thetas),
-                 exclude_self=exclude_self, block=block, interpret=interpret)
+                 exclude_self=exclude_self, block=block, interpret=interpret,
+                 cache_phase1=cache_phase1)

@@ -187,20 +187,27 @@ def test_knn_engine_runs_exactly_once_per_panel(monkeypatch):
 
 
 def test_cache_disabled_falls_back_to_legacy_paths(monkeypatch):
+    """cache=False must recompute neighbors (direct batched engine), not
+    read a master — and still agree with the cached session."""
     X = _panel(4)
-    counts = {"pairwise": 0}
-    real_pair = ops.pairwise_distances
+    counts = {"batch": 0, "multi_e": 0}
+    real_batch, real_multi = ops.all_knn_batch, ops.all_knn_multi_e
 
-    def count_pair(*a, **k):
-        counts["pairwise"] += 1
-        return real_pair(*a, **k)
+    def count_batch(*a, **k):
+        counts["batch"] += 1
+        return real_batch(*a, **k)
 
-    monkeypatch.setattr(ops, "pairwise_distances", count_pair)
+    def count_multi(*a, **k):
+        counts["multi_e"] += 1
+        return real_multi(*a, **k)
+
+    monkeypatch.setattr(ops, "all_knn_batch", count_batch)
+    monkeypatch.setattr(ops, "all_knn_multi_e", count_multi)
     jax.clear_caches()
     sess = EDM(X, EDMConfig(E_max=4, cache=False))
     E_opt, rho = sess.optimal_E()
     got = sess.xmap()
-    assert counts["pairwise"] >= 1  # legacy ccm_group recomputes distances
+    assert counts["batch"] >= 1  # direct engine recomputes distances
     E_l, rho_l = core.optimal_E_batch(X, E_max=4)
     np.testing.assert_array_equal(E_opt, np.asarray(E_l))
     np.testing.assert_array_equal(got, EDM(X, EDMConfig(E_max=4)).xmap())

@@ -1,0 +1,131 @@
+"""Library-batched all-kNN ≡ the per-series pipeline, for every B/tiling."""
+
+import numpy as np
+import jax
+import jax.numpy as jnp
+import pytest
+
+from repro.kernels import ops, ref
+
+
+def _per_series_oracle(x, *, E, tau, k, exclude_self, max_idx):
+    """The fused standalone per-series pipeline (one jitted program)."""
+
+    @jax.jit
+    def one(x):
+        D = ref.pairwise_distances(x, E=E, tau=tau)
+        return ref.topk_select(D, k=k, exclude_self=exclude_self,
+                               max_idx=max_idx)
+
+    return one(x)
+
+
+@pytest.mark.parametrize("L,B,E,tau,k", [
+    (137, 5, 3, 2, None),
+    (96, 9, 3, 1, None),     # short series (the shape where lax.map wobbles)
+    (200, 3, 1, 1, None),
+    (150, 4, 4, 1, 6),       # custom-k override
+])
+def test_ref_batch_matches_per_series_pipeline(rng, L, B, E, tau, k):
+    X = jnp.asarray(rng.normal(size=(B, L)).astype(np.float32))
+    Lp = L - (E - 1) * tau
+    kk = E + 1 if k is None else k
+    d, i = ref.all_knn_batch(X, E=E, tau=tau, k=k)
+    assert d.shape == i.shape == (B, Lp, kk)
+    for b in range(B):
+        want_d, want_i = _per_series_oracle(
+            X[b], E=E, tau=tau, k=kk, exclude_self=True, max_idx=Lp - 1)
+        np.testing.assert_array_equal(np.asarray(i[b]), np.asarray(want_i),
+                                      err_msg=f"series {b}")
+        np.testing.assert_array_equal(np.asarray(d[b]), np.asarray(want_d),
+                                      err_msg=f"series {b}")
+
+
+def test_ref_batch_is_bit_invariant_in_B(rng):
+    """The layout contract: any batch decomposition gives identical
+    tables — the per-series oracle is the B = 1 launch."""
+    X = jnp.asarray(rng.normal(size=(11, 233)).astype(np.float32))
+    d_all, i_all = ref.all_knn_batch(X, E=4, tau=1)
+    for sl in (slice(0, 1), slice(3, 10), slice(10, 11)):
+        d_s, i_s = ref.all_knn_batch(X[sl], E=4, tau=1)
+        np.testing.assert_array_equal(np.asarray(d_all[sl]), np.asarray(d_s))
+        np.testing.assert_array_equal(np.asarray(i_all[sl]), np.asarray(i_s))
+
+
+def test_ref_batch_max_idx_and_no_self(rng):
+    X = jnp.asarray(rng.normal(size=(4, 150)).astype(np.float32))
+    for excl in (True, False):
+        for cap in (0, 40):
+            d, i = ref.all_knn_batch(X, E=3, tau=1, max_idx=cap,
+                                     exclude_self=excl)
+            if cap >= 4:  # slots below k valid candidates carry arbitrary
+                assert int(np.asarray(i).max()) <= cap  # zero-weight idx
+            for b in range(4):
+                want_d, want_i = _per_series_oracle(
+                    X[b], E=3, tau=1, k=4, exclude_self=excl, max_idx=cap)
+                np.testing.assert_array_equal(np.asarray(i[b]),
+                                              np.asarray(want_i))
+                np.testing.assert_array_equal(np.asarray(d[b]),
+                                              np.asarray(want_d))
+
+
+def test_ref_batch_duplicate_series_tie_order(rng):
+    """Exact-duplicate manifolds must produce identical tables (ties
+    broken by global index, independent of batch position)."""
+    X = jnp.asarray(rng.normal(size=(3, 180)).astype(np.float32))
+    Xd = jnp.concatenate([X, X[:1]], axis=0)
+    d, i = ref.all_knn_batch(Xd, E=3, tau=1)
+    np.testing.assert_array_equal(np.asarray(d[0]), np.asarray(d[3]))
+    np.testing.assert_array_equal(np.asarray(i[0]), np.asarray(i[3]))
+
+
+@pytest.mark.parametrize("L,B,E,tau,k,block", [
+    (137, 4, 3, 2, None, (16, 128)),   # gj > 1: streaming merge across tiles
+    (200, 3, 1, 1, None, (32, 128)),
+    (96, 5, 3, 1, 4, (8, 128)),
+    (300, 2, 4, 1, None, (64, 128)),   # 3 column tiles, partial last tile
+])
+def test_interpret_kernel_matches_ref(rng, L, B, E, tau, k, block):
+    X = jnp.asarray(rng.normal(size=(B, L)).astype(np.float32))
+    want_d, want_i = ref.all_knn_batch(X, E=E, tau=tau, k=k)
+    got_d, got_i = ops.all_knn_batch(X, E=E, tau=tau, k=k,
+                                     impl="interpret", block=block)
+    np.testing.assert_array_equal(np.asarray(got_i), np.asarray(want_i))
+    np.testing.assert_allclose(np.asarray(got_d), np.asarray(want_d),
+                               rtol=1e-6, atol=1e-6)
+
+
+def test_interpret_kernel_b_invariance(rng):
+    """Kernel-path layout contract: the per-series tiling is independent
+    of B, so a batch launch equals its own B = 1 launches bit-for-bit."""
+    X = jnp.asarray(rng.normal(size=(5, 120)).astype(np.float32))
+    d_all, i_all = ops.all_knn_batch(X, E=3, tau=1, impl="interpret",
+                                     block=(16, 128))
+    for b in range(5):
+        d1, i1 = ops.all_knn_batch(X[b:b + 1], E=3, tau=1,
+                                   impl="interpret", block=(16, 128))
+        np.testing.assert_array_equal(np.asarray(d_all[b]),
+                                      np.asarray(d1[0]))
+        np.testing.assert_array_equal(np.asarray(i_all[b]),
+                                      np.asarray(i1[0]))
+
+
+def test_interpret_kernel_caps_and_fewer_valid_than_k(rng):
+    """Rows with < k valid candidates emit distinct lowest-index fill
+    entries (retire-by-index in the streaming merge), matching the ref."""
+    X = jnp.asarray(rng.normal(size=(3, 100)).astype(np.float32))
+    for cap in (0, 1, 30):
+        want_d, want_i = ref.all_knn_batch(X, E=3, tau=1, max_idx=cap)
+        got_d, got_i = ops.all_knn_batch(X, E=3, tau=1, max_idx=cap,
+                                         impl="interpret", block=(16, 128))
+        np.testing.assert_array_equal(np.asarray(got_i), np.asarray(want_i))
+        np.testing.assert_allclose(np.asarray(got_d), np.asarray(want_d),
+                                   rtol=1e-6, atol=1e-6)
+
+
+def test_batch_rejects_bad_rank():
+    with pytest.raises(ValueError, match=r"\(B, L\)"):
+        ref.all_knn_batch(jnp.zeros(32), E=2)
+    with pytest.raises(ValueError, match=r"\(B, L\)"):
+        from repro.kernels.knn_batch import all_knn_batch
+        all_knn_batch(jnp.zeros(32), E=2)
