@@ -94,17 +94,47 @@ class CheckpointManager:
             raise FileNotFoundError(f"no checkpoints in {self.dir}")
         d = self._step_dir(step)
         leaves, treedef = _flatten(like)
-        with open(os.path.join(d, "manifest.json")) as f:
-            manifest = json.load(f)
+        try:
+            with open(os.path.join(d, "manifest.json")) as f:
+                manifest = json.load(f)
+        except (OSError, json.JSONDecodeError) as e:
+            raise ValueError(
+                f"checkpoint step {step} has an unreadable manifest "
+                f"({os.path.join(d, 'manifest.json')}): {e}") from e
         if manifest["n_leaves"] != len(leaves):
             raise ValueError(
                 f"checkpoint has {manifest['n_leaves']} leaves, "
                 f"target structure has {len(leaves)}")
+        if len(manifest.get("leaves", ())) != manifest["n_leaves"]:
+            raise ValueError(
+                f"checkpoint step {step} manifest is corrupt: "
+                f"{len(manifest.get('leaves', ()))} leaf records for "
+                f"{manifest['n_leaves']} leaves")
         shard_leaves = (treedef.flatten_up_to(shardings)
                         if shardings is not None else [None] * len(leaves))
         out = []
         for i, (ref, shd) in enumerate(zip(leaves, shard_leaves)):
-            arr = np.load(os.path.join(d, f"leaf_{i:05d}.npy"))
+            path = os.path.join(d, f"leaf_{i:05d}.npy")
+            try:
+                arr = np.load(path)
+            except Exception as e:
+                raise ValueError(
+                    f"checkpoint step {step} leaf {i} is unreadable "
+                    f"({path}): {e} — the checkpoint is corrupt; delete "
+                    f"the step directory and resume from an earlier one"
+                ) from e
+            # The manifest recorded each leaf's shape/dtype at save time;
+            # a leaf that no longer matches it was truncated or swapped
+            # after the atomic publish — fail HERE with the leaf named,
+            # not deep inside the consumer as a cryptic numpy error.
+            meta = manifest["leaves"][i]
+            if (list(arr.shape) != list(meta["shape"])
+                    or str(arr.dtype) != meta["dtype"]):
+                raise ValueError(
+                    f"checkpoint step {step} leaf {i} ({path}) does not "
+                    f"match its manifest: loaded {arr.dtype}{arr.shape}, "
+                    f"manifest says {meta['dtype']}{tuple(meta['shape'])} "
+                    f"— the checkpoint is corrupt")
             if tuple(arr.shape) != tuple(ref.shape):
                 raise ValueError(
                     f"leaf {i}: checkpoint shape {arr.shape} != {ref.shape}")

@@ -311,31 +311,81 @@ def pad_batch(chunk: jax.Array, B: int) -> jax.Array:
     return jnp.concatenate([chunk, jnp.repeat(chunk[-1:], B - n, axis=0)])
 
 
-def drive_batched(Nl: int, B: int, launch) -> np.ndarray:
-    """Double-buffered host loop over ceil(Nl/B) engine launches.
+def drive_batched(Nl: int, B: int, launch, *, start: int = 0,
+                  on_block=None, monitor=None) -> np.ndarray:
+    """Double-buffered host loop over ceil((Nl − start)/B) engine launches.
 
-    ``launch(a, b)`` dispatches rows [a, b) (padded to B) and returns the
-    not-yet-materialized device result. JAX dispatch is async, so while
-    the host converts/assembles batch i's block the device is already
-    computing batch i+1 — the ROADMAP session-item-(b) overlap. At most
-    two batch results are in flight.
+    ``launch(a, b, B)`` dispatches rows [a, b) (padded to B) and returns
+    the not-yet-materialized device result. JAX dispatch is async, so
+    while the host converts/assembles batch i's block the device is
+    already computing batch i+1 — the ROADMAP session-item-(b) overlap.
+    At most two batch results are in flight.
+
+    Fault-tolerance hooks (``repro.edm.runner``, all optional and free
+    when unused):
+
+    * ``start`` — resume offset: rows [0, start) are assumed already
+      assembled elsewhere (a journaled run's committed tiles) and are
+      neither dispatched nor written; the returned array's rows below
+      ``start`` are uninitialized.
+    * ``on_block(a, b, block)`` — called after each block's rows [a, b)
+      have materialized on host (``block`` is the (b − a, …) slice), the
+      tile-journal commit point. A raise here (preemption checkpoint-
+      and-exit) leaves no partially-written tile behind.
+    * ``monitor`` — a ``distributed.fault.StragglerMonitor`` timed over
+      each loop iteration (dispatch of tile i + landing of tile i−1),
+      stamped with the landed tile's row offset. One iteration is ~one
+      tile of work whether the engine is async (the land is the device
+      wait) or synchronous like the sharded chunk path (the dispatch is
+      the compute), so a flagged entry means that tile ran slow relative
+      to the run's rolling median — the per-host straggler statistic.
     """
+    if start >= Nl:  # resumed run with no tiles left: nothing to drive
+        return None
     out = pending = None
-    for a in range(0, Nl, B):
-        cur = launch(a, min(a + B, Nl))
+
+    def land(pending):
+        nonlocal out
+        (pa, pb), arr = pending
+        block = np.asarray(arr)
+        if out is None:
+            out = np.empty((Nl,) + block.shape[1:], block.dtype)
+        out[pa:pb] = block[: pb - pa]
+        if on_block is not None:
+            on_block(pa, pb, block[: pb - pa])
+
+    for a in range(start, Nl, B):
+        if monitor is not None:
+            monitor.start()
+        cur = launch(a, min(a + B, Nl), B)
         if pending is not None:
-            (pa, pb), arr = pending
-            block = np.asarray(arr)
-            if out is None:
-                out = np.empty((Nl,) + block.shape[1:], block.dtype)
-            out[pa:pb] = block[: pb - pa]
+            land(pending)
+            if monitor is not None:
+                monitor.stop(pending[0][0])
         pending = ((a, min(a + B, Nl)), cur)
-    (pa, pb), arr = pending
-    block = np.asarray(arr)
-    if out is None:
-        out = np.empty((Nl,) + block.shape[1:], block.dtype)
-    out[pa:pb] = block[: pb - pa]
+    if monitor is not None:
+        monitor.start()
+    land(pending)
+    if monitor is not None:
+        monitor.stop(pending[0][0])
     return out
+
+
+def make_group_launch(libs, targets, *, E, tau, Tp, k, impl):
+    """Launch closure of the direct batched engine: ``launch(a, b, B)``.
+
+    Factored out of ``ccm_group_batched`` so the fault-tolerant driver
+    (``repro.edm.runner``) can re-drive the SAME engine at a smaller B
+    after an OOM backoff — results are bit-invariant in B, so the launch
+    closure is the resumable unit, not the whole group call.
+    """
+    impl_r = ops.resolve_impl(impl)
+
+    def launch(a, b, B):
+        return _group_step(pad_batch(libs[a:b], B), targets, E=E, tau=tau,
+                           Tp=Tp, k=k, impl=impl_r)
+
+    return launch
 
 
 def ccm_group_batched(
@@ -376,12 +426,8 @@ def ccm_group_batched(
         Lp, Nl, budget_mb)
     B = max(1, min(int(B), Nl))
     kk = E + 1 if k is None else int(k)
-    impl_r = ops.resolve_impl(impl)
-
-    def launch(a, b):
-        return _group_step(pad_batch(libs[a:b], B), targets, E=E, tau=tau,
-                           Tp=Tp, k=kk, impl=impl_r)
-
+    launch = make_group_launch(libs, targets, E=E, tau=tau, Tp=Tp, k=kk,
+                               impl=impl)
     return drive_batched(Nl, B, launch)
 
 

@@ -23,6 +23,15 @@ import time
 
 
 class PreemptionGuard:
+    """Converts SIGTERM/SIGINT into a polled "checkpoint and exit" flag.
+
+    Usable as a context manager: handlers are installed on ``__enter__``
+    (or construction) and the previous handlers restored on ``__exit__``
+    — the ``repro.edm.runner`` drivers poll ``requested`` between tile
+    launches and turn a preemption into "commit the journal, exit 17"
+    instead of lost work.
+    """
+
     def __init__(self, signals=(signal.SIGTERM,)):
         self.requested = False
         self._prev = {}
@@ -35,6 +44,14 @@ class PreemptionGuard:
     def restore(self):
         for sig, prev in self._prev.items():
             signal.signal(sig, prev)
+        self._prev = {}
+
+    def __enter__(self):
+        return self
+
+    def __exit__(self, *exc):
+        self.restore()
+        return False
 
 
 class StragglerMonitor:
@@ -58,6 +75,20 @@ class StragglerMonitor:
                 self.flagged.append((step, dt, med))
                 return True
         return False
+
+    def report(self) -> dict:
+        """JSON-ready summary for a run report: per-step stats + flags."""
+        return {
+            "steps": len(self.times),
+            "median_s": (statistics.median(self.times)
+                         if self.times else None),
+            "max_s": max(self.times) if self.times else None,
+            "threshold": self.threshold,
+            "flagged": [
+                {"step": s, "seconds": dt, "rolling_median_s": med}
+                for s, dt, med in self.flagged
+            ],
+        }
 
 
 class Heartbeat:

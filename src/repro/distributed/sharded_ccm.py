@@ -161,6 +161,7 @@ def sharded_ccm_matrix(
     E_opt=None,
     batch_libs: int | None = None,
     batch_budget_mb: float | None = None,
+    layout=None,
 ):
     """All-pairs CCM skill matrix on a device mesh.
 
@@ -198,11 +199,13 @@ def sharded_ccm_matrix(
         )
         return mapped(X_lib, X_tgt)
     return _egrouped_matrix(X_lib, X_tgt, block_fn, E_opt=E_opt, mesh=mesh,
-                            lib_axes=lib_axes, tgt_axes=tgt_axes)
+                            lib_axes=lib_axes, tgt_axes=tgt_axes,
+                            layout=layout)
 
 
 def _egrouped_matrix(X_lib, X_tgt, block_fn, *, E_opt, mesh, lib_axes,
-                     tgt_axes, curves: bool = False) -> np.ndarray:
+                     tgt_axes, curves: bool = False,
+                     layout=None) -> np.ndarray:
     """Shared E-grouped driver: per-shard static E-segments, one SPMD
     program, no collectives; host unpermute at result delivery.
 
@@ -213,13 +216,18 @@ def _egrouped_matrix(X_lib, X_tgt, block_fn, *, E_opt, mesh, lib_axes,
 
     ``E_opt`` (and the permutation derived from it) stays on device
     until result delivery — the host sees only the static layout
-    metadata before compute (see ``_egroup_layout``).
+    metadata before compute (see ``_egroup_layout``). ``layout`` is an
+    optional precomputed ``_egroup_layout(E_opt, S_t)`` triple: callers
+    slicing the library axis into many calls over the SAME targets (the
+    journaled chunked runs of ``edm.runner``) derive it once instead of
+    re-sorting E_opt per chunk.
     """
     N_lib, N_tgt = X_lib.shape[0], X_tgt.shape[0]
     E_opt = jnp.broadcast_to(jnp.asarray(E_opt, jnp.int32), (N_tgt,))
     S_t = mesh_axes_size(mesh, tgt_axes)
     S_l = mesh_axes_size(mesh, lib_axes)
-    perm_d, keep, segs = _egroup_layout(E_opt, S_t)
+    perm_d, keep, segs = (_egroup_layout(E_opt, S_t)
+                          if layout is None else layout)
     Xl = pad_to_multiple(X_lib, S_l, axis=0)
     Xt = jnp.take(jnp.asarray(X_tgt), perm_d, axis=0)
 
@@ -407,6 +415,7 @@ def sharded_smap_matrix(
     tgt_axes=("model",),
     impl: str = "ref",
     E_opt=None,
+    layout=None,
 ):
     """All-pairs S-Map cross-map skill matrix on a device mesh.
 
@@ -445,7 +454,8 @@ def sharded_smap_matrix(
         )
         return mapped(X_lib, X_tgt)
     return _egrouped_matrix(X_lib, X_tgt, block_fn, E_opt=E_opt, mesh=mesh,
-                            lib_axes=lib_axes, tgt_axes=tgt_axes)
+                            lib_axes=lib_axes, tgt_axes=tgt_axes,
+                            layout=layout)
 
 
 def ccm_step(X: jax.Array, *, E: int, tau: int, mesh: jax.sharding.Mesh,

@@ -12,15 +12,23 @@ that facade for the reproduction, subsuming the free-function zoo in
   ``ccm`` / ``xmap`` / ``submit_panel``, each dispatched through a
   ``Plan`` that picks kernels + placement and reuses the session's
   cached multi-E kNN master tables.
+* ``MatrixRunner`` — the fault-tolerance layer under
+  ``EDM.xmap(run_dir=...)``: journaled tiles, preemption →
+  checkpoint-and-exit ``PREEMPTED_EXIT``, OOM → halve-B backoff,
+  bit-identical resume.
 
-See docs/API.md for the pyEDM/kEDM migration table.
+See docs/API.md for the pyEDM/kEDM migration table and
+docs/ARCHITECTURE.md for the fault-tolerance design.
 """
 
 from repro.edm.config import DEFAULT_THETAS, EDMConfig
-from repro.edm.dataset import Dataset
+from repro.edm.dataset import INVALID_POLICIES, Dataset, screen_panel
 from repro.edm.plan import Plan
+from repro.edm.runner import PREEMPTED_EXIT, MatrixRunner, RunState, run_key
 from repro.edm.session import EDM, PanelResult, SurrogateResult
 from repro.edm.surrogates import make_surrogates
 
-__all__ = ["DEFAULT_THETAS", "EDM", "EDMConfig", "Dataset", "PanelResult",
-           "Plan", "SurrogateResult", "make_surrogates"]
+__all__ = ["DEFAULT_THETAS", "EDM", "EDMConfig", "Dataset",
+           "INVALID_POLICIES", "MatrixRunner", "PREEMPTED_EXIT",
+           "PanelResult", "Plan", "RunState", "SurrogateResult",
+           "make_surrogates", "run_key", "screen_panel"]

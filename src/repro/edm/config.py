@@ -62,6 +62,30 @@ class EDMConfig:
               panels the mesh does not divide evenly).
     cache:    hold multi-E kNN master tables / E_opt in the session and
               reuse them across methods (the facade's raison d'être).
+    on_invalid: panel-ingestion policy for NaN/Inf/constant series
+              ("raise" | "mask" | "drop", see ``edm.dataset.Dataset``);
+              applied when the session wraps a raw array in a Dataset
+              (an explicit ``Dataset`` keeps its own policy).
+    checkpoint_keep: journaled matrix runs (``xmap(run_dir=...)``) keep
+              the last K run-state snapshots on disk
+              (``checkpoint.CheckpointManager`` retention).
+    checkpoint_every: commit a run-state snapshot every Nth completed
+              tile. ``None`` (default) auto-sizes the cadence to ~8
+              snapshots per tile group, bounding journal overhead on
+              many-tile runs (measured <5% of engine throughput, the
+              ``bench_ccm --resume-overhead`` guard); 1 = every tile.
+              A *preemption* always snapshots immediately regardless of
+              cadence — only a hard crash (SIGKILL) can redo up to
+              cadence − 1 tiles.
+    oom_retries: max RESOURCE_EXHAUSTED → halve-B backoff retries per
+              tile group before the error propagates (the degradation
+              ladder bottoms out at B = 1).
+    run_tile_rows: journal tile height (library rows) of a *sharded*
+              ``xmap(run_dir=...)`` run — the mesh path runs one SPMD
+              program per lib-row chunk so completed chunks persist;
+              ``None`` auto-sizes ~8 tiles rounded to the lib-shard
+              count. Local runs tile at the engine's launch batch B and
+              ignore this.
     """
 
     E: int | None = None
@@ -82,6 +106,11 @@ class EDMConfig:
     tgt_axes: tuple[str, ...] = ("model",)
     pad: bool = True
     cache: bool = True
+    on_invalid: str = "raise"
+    checkpoint_keep: int = 3
+    checkpoint_every: int | None = None
+    oom_retries: int = 4
+    run_tile_rows: int | None = None
 
     def __post_init__(self):
         if self.E is not None and self.E < 1:
@@ -120,6 +149,23 @@ class EDMConfig:
         if self.impl not in ops.IMPLS:
             raise ValueError(
                 f"unknown impl {self.impl!r}; expected one of {ops.IMPLS}")
+        from repro.edm.dataset import INVALID_POLICIES
+        if self.on_invalid not in INVALID_POLICIES:
+            raise ValueError(
+                f"unknown on_invalid policy {self.on_invalid!r}; expected "
+                f"one of {INVALID_POLICIES}")
+        if self.checkpoint_keep < 1:
+            raise ValueError(
+                f"checkpoint_keep must be >= 1, got {self.checkpoint_keep}")
+        if self.checkpoint_every is not None and self.checkpoint_every < 1:
+            raise ValueError(
+                f"checkpoint_every must be >= 1, got {self.checkpoint_every}")
+        if self.oom_retries < 0:
+            raise ValueError(
+                f"oom_retries must be >= 0, got {self.oom_retries}")
+        if self.run_tile_rows is not None and self.run_tile_rows < 1:
+            raise ValueError(
+                f"run_tile_rows must be >= 1, got {self.run_tile_rows}")
         object.__setattr__(self, "lib_axes", tuple(self.lib_axes))
         object.__setattr__(self, "tgt_axes", tuple(self.tgt_axes))
         if self.mesh is not None:

@@ -1,11 +1,56 @@
-"""``Dataset`` — a panel of time series plus cached delay embeddings."""
+"""``Dataset`` — a panel of time series plus cached delay embeddings.
+
+Ingestion is hardened (ISSUE 6): every panel is screened for non-finite
+values and constant series at construction, under an explicit
+``on_invalid`` policy, instead of letting one corrupt electrode trace
+NaN-poison an entire all-pairs matrix silently:
+
+* ``"raise"`` (default) — refuse the panel with the offending series
+  named. The safe default for pipelines that expect clean data.
+* ``"mask"``  — keep the panel shape; non-finite entries are zeroed for
+  compute (so sorts/top-k never see NaN) and the per-series validity
+  mask propagates through the session: every output touching an invalid
+  series is NaN, and the run report names the series.
+* ``"drop"``  — remove invalid series before binding; indices/names of
+  the surviving panel are compacted, the report records what was
+  dropped (by original index and name).
+
+``dataset.valid`` is the (N,) validity mask (all-True for clean
+panels), ``dataset.invalid_report`` the JSON-ready list of
+``{index, name, reason}`` records the fault-tolerant runner copies into
+its run report.
+"""
 
 from __future__ import annotations
 
 import jax
 import jax.numpy as jnp
+import numpy as np
 
 from repro.kernels import ops
+
+#: Accepted ``on_invalid`` policies, in documentation order.
+INVALID_POLICIES = ("raise", "mask", "drop")
+
+
+def screen_panel(panel: np.ndarray) -> list[dict]:
+    """Invalid-series records of an (N, L) panel (empty = clean).
+
+    A series is invalid when it contains non-finite values (NaN/Inf —
+    dead channel, transmission glitch) or is constant (zero variance —
+    a flatlined electrode: every delay vector coincides, distances
+    degenerate to ties and Pearson ρ divides by zero).
+    """
+    out = []
+    for i, x in enumerate(np.asarray(panel, np.float64)):
+        bad = ~np.isfinite(x)
+        if bad.any():
+            out.append({"index": i, "name": None,
+                        "reason": f"{int(bad.sum())} non-finite values"})
+        elif x.size and np.ptp(x) == 0.0:
+            out.append({"index": i, "name": None,
+                        "reason": "constant series"})
+    return out
 
 
 class Dataset:
@@ -14,22 +59,56 @@ class Dataset:
     The facade's unit of state: every ``EDM`` session method operates on
     one Dataset, and materialized delay embeddings (used by S-Map design
     matrices and user inspection — the distance kernels fuse theirs) are
-    computed once per (E, tau) and held here.
+    computed once per (E, tau) and held here. ``on_invalid`` sets the
+    NaN/Inf/constant-series policy (module docstring).
     """
 
-    def __init__(self, panel, *, names=None):
+    def __init__(self, panel, *, names=None, on_invalid: str = "raise"):
+        if on_invalid not in INVALID_POLICIES:
+            raise ValueError(
+                f"unknown on_invalid policy {on_invalid!r}; expected one "
+                f"of {INVALID_POLICIES}")
         panel = jnp.asarray(panel)
         if panel.ndim == 1:
             panel = panel[None, :]
         if panel.ndim != 2:
             raise ValueError(f"panel must be (N, L) or (L,), got {panel.shape}")
-        self.panel = panel
         if names is not None:
             names = list(names)
             if len(names) != panel.shape[0]:
                 raise ValueError(
                     f"{len(names)} names for {panel.shape[0]} series")
+        self.on_invalid = on_invalid
+        report = screen_panel(np.asarray(panel))
+        for r in report:
+            r["name"] = names[r["index"]] if names is not None else None
+        self.invalid_report = report
+        valid = np.ones(panel.shape[0], bool)
+        for r in report:
+            valid[r["index"]] = False
+        if report and on_invalid == "raise":
+            what = "; ".join(
+                f"series {r['name'] if r['name'] is not None else r['index']}"
+                f": {r['reason']}" for r in report)
+            raise ValueError(
+                f"panel contains invalid series ({what}); pass "
+                f"on_invalid='mask' to NaN-flag them in outputs or "
+                f"on_invalid='drop' to remove them")
+        if report and on_invalid == "drop":
+            panel = panel[np.nonzero(valid)[0]]
+            if names is not None:
+                names = [n for n, ok in zip(names, valid) if ok]
+            if panel.shape[0] == 0:
+                raise ValueError(
+                    "every series in the panel is invalid; nothing left "
+                    "after on_invalid='drop'")
+            valid = np.ones(panel.shape[0], bool)
+        elif report:  # mask: zero non-finite entries so kernels/top-k
+            panel = jnp.nan_to_num(  # never see NaN; outputs touching
+                panel, nan=0.0, posinf=0.0, neginf=0.0)  # them are NaN'd
+        self.panel = panel
         self.names = names
+        self.valid = valid
         self._embeddings: dict[tuple[int, int], jax.Array] = {}
 
     @property
@@ -39,6 +118,14 @@ class Dataset:
     @property
     def L(self) -> int:
         return self.panel.shape[1]
+
+    @property
+    def num_invalid(self) -> int:
+        """Invalid series still in the panel (0 under raise/drop)."""
+        return int((~self.valid).sum())
+
+    def is_valid(self, i: int) -> bool:
+        return bool(self.valid[i])
 
     def index_of(self, key) -> int:
         """Series index for an int position or a name."""
@@ -63,4 +150,5 @@ class Dataset:
         return self.N
 
     def __repr__(self) -> str:  # pragma: no cover - cosmetic
-        return f"Dataset(N={self.N}, L={self.L})"
+        bad = f", invalid={self.num_invalid}" if self.num_invalid else ""
+        return f"Dataset(N={self.N}, L={self.L}{bad})"

@@ -276,6 +276,37 @@ def _master_group_step(Xb, iMb, targets, *, E, tau, Tp, k, impl):
     return post_lookup_rho(targets, d, ik, rows=rows, off=off, impl=impl)
 
 
+def make_master_group_launch(X, iM_E, targets, *, E, tau, Tp, k, impl):
+    """Launch closure of the master-derived engine: ``launch(a, b, B)``.
+
+    The cached-master twin of ``core.ccm.make_group_launch``, factored
+    out for the fault-tolerant driver (``repro.edm.runner``) — bit-
+    invariance in B makes the closure re-drivable at any batch size
+    after an OOM backoff or a resume.
+    """
+    from repro.core.ccm import pad_batch
+
+    impl_r = ops.resolve_impl(impl)
+
+    def launch(a, b, B):
+        return _master_group_step(
+            pad_batch(X[a:b], B), pad_batch(iM_E[a:b], B), targets, E=E,
+            tau=tau, Tp=Tp, k=k, impl=impl_r)
+
+    return launch
+
+
+def master_group_batch_bytes(Lp: int, k_master: int) -> int:
+    """Per-series in-flight bytes of one master-derived launch.
+
+    ~4 live (B, Lp, k_master)-sized buffers per launch (validity, sort
+    keys/order, gathered dists) — the footprint ``auto_batch_libs``
+    should size against for this engine (NOT the direct engine's
+    (B, Lp, Lp) distance stack, which derivation never holds).
+    """
+    return 16 * Lp * int(k_master)
+
+
 def ccm_group_from_master_batched(X, iM_E, targets, *, E, tau, Tp, k, impl,
                                   batch_libs=None,
                                   budget_mb=None) -> "np.ndarray":
@@ -290,7 +321,7 @@ def ccm_group_from_master_batched(X, iM_E, targets, *, E, tau, Tp, k, impl,
     sizing by the distance-stack rule would collapse B to 1 on long
     series exactly where batching the derivation is cheapest.
     """
-    from repro.core.ccm import (auto_batch_libs, drive_batched, pad_batch)
+    from repro.core.ccm import auto_batch_libs, drive_batched
 
     import numpy as np
 
@@ -303,18 +334,12 @@ def ccm_group_from_master_batched(X, iM_E, targets, *, E, tau, Tp, k, impl,
     if batch_libs is not None:
         B = batch_libs
     else:
-        # ~4 live (B, Lp, k_master)-sized buffers per launch (validity,
-        # sort keys/order, gathered dists).
-        B = auto_batch_libs(Lp, Nl, budget_mb,
-                            per_series_bytes=16 * Lp * int(iM_E.shape[-1]))
+        B = auto_batch_libs(
+            Lp, Nl, budget_mb,
+            per_series_bytes=master_group_batch_bytes(Lp, iM_E.shape[-1]))
     B = max(1, min(int(B), max(Nl, 1)))
-    impl_r = ops.resolve_impl(impl)
-
-    def launch(a, b):
-        return _master_group_step(
-            pad_batch(X[a:b], B), pad_batch(iM_E[a:b], B), targets, E=E,
-            tau=tau, Tp=Tp, k=k, impl=impl_r)
-
+    launch = make_master_group_launch(X, iM_E, targets, E=E, tau=tau, Tp=Tp,
+                                      k=k, impl=impl)
     return drive_batched(Nl, B, launch)
 
 

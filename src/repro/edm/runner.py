@@ -1,0 +1,386 @@
+"""Fault-tolerant matrix runs: tile journal, preemption, OOM backoff.
+
+The workloads the batched matrix engine targets are exactly the ones
+that get preempted — whole-brain CCM at 10⁵ series is 10¹⁰ pairs of
+tiled launches, hours to days of wall time — so ``EDM.xmap(...,
+run_dir=...)`` journals every (lib-batch × tgt-group) tile through a
+``MatrixRunner`` and a preempted job restarts at the last committed
+tile instead of from zero.
+
+Journal format (everything lives under ``run_dir``):
+
+* ``run.json`` — the run manifest: a **content hash** of the panel
+  bytes + the numeric-semantics fields of the ``EDMConfig`` + the task
+  signature (method, θ, the E-group structure), the matrix shape, and
+  the group layout. A resume whose recomputed key differs is REFUSED
+  with a clear error — a stale journal (edited panel, changed config)
+  can never silently leak rows into a fresh run.
+* ``state/step_*`` — run-state snapshots via
+  ``checkpoint.CheckpointManager`` (atomic tmp+rename publish, last-K
+  retention, manifest-validated restore): the partial ρ matrix plus a
+  per-(group, lib-row) done mask. Committed every
+  ``checkpoint_every``-th tile; a crash between snapshots redoes at
+  most that many tiles.
+* ``heartbeat`` — one appended line per committed tile
+  (``distributed.fault.Heartbeat``) so an external watchdog can detect
+  a hang (no heartbeat progress) as opposed to a crash (process gone).
+* ``report.json`` — the run report: progress counters, straggler
+  flags (``StragglerMonitor`` over the engine launch timings), the OOM
+  backoff decision trail, and the dataset's invalid-series records.
+
+Correctness contract: tiles are committed only after their rows have
+materialized on host, done-ness is tracked per *library row* (so the
+tile shape may change across resumes — the engines are bit-invariant
+in batch size B), and a resumed run is **bit-identical** to an
+uninterrupted one because every committed row is replayed from the
+journal verbatim and every recomputed row runs the same engine on the
+same inputs.
+
+Graceful degradation:
+
+* **Preemption** — a ``PreemptionGuard`` turns SIGTERM/SIGINT into a
+  flag polled at each tile commit; the runner snapshots the state,
+  writes the report, and exits with code ``PREEMPTED_EXIT`` (17) — the
+  restart loop's "resume me" signal — instead of dying mid-launch.
+* **OOM backoff** — a RESOURCE_EXHAUSTED (or any out-of-memory) error
+  around a launch halves the library batch B (re-equalized over the
+  remaining rows, the ``auto_batch_libs`` discipline) and retries, at
+  most ``oom_retries`` times, logging each decision; a budget
+  misestimate degrades to smaller launches instead of killing the job.
+"""
+
+from __future__ import annotations
+
+import hashlib
+import json
+import os
+import signal
+import time
+
+import numpy as np
+
+from repro.checkpoint import CheckpointManager
+from repro.core.ccm import drive_batched
+from repro.distributed.fault import (Heartbeat, PreemptionGuard,
+                                     StragglerMonitor)
+
+#: Exit code of a preempted run that checkpointed cleanly (restart loops
+#: treat it as "resume from run_dir", distinct from crash codes).
+PREEMPTED_EXIT = 17
+
+#: EDMConfig fields hashed into the run key — everything that changes
+#: numeric results or the task decomposition. Deliberately excluded:
+#: perf-only knobs (batch_libs, batch_budget_mb, checkpoint_*,
+#: oom_retries, run_tile_rows, pad) — results are invariant in them, so
+#: resuming with a different batch size or snapshot cadence is legal —
+#: and the mesh object itself (its axis layout is keyed separately).
+KEYED_CONFIG_FIELDS = ("E", "E_max", "tau", "Tp", "Tp_cross", "theta",
+                       "thetas", "k", "extra_slack", "ridge", "impl",
+                       "cache", "on_invalid")
+
+
+def config_fingerprint(config) -> str:
+    """Deterministic string of the result-relevant config fields."""
+    parts = [f"{f}={getattr(config, f)!r}" for f in KEYED_CONFIG_FIELDS]
+    if config.mesh is not None:
+        parts.append(f"mesh={tuple(config.mesh.shape.items())!r}"
+                     f"/lib={config.lib_axes!r}/tgt={config.tgt_axes!r}")
+    return ";".join(parts)
+
+
+def run_key(panel, config, task_sig) -> str:
+    """Content hash identifying one (panel, config, task) matrix run.
+
+    The staleness rule: a journal written under a different key — the
+    panel's bytes changed, a numeric config knob changed, the task or
+    its E-group structure changed — must be refused, never resumed.
+    """
+    arr = np.ascontiguousarray(np.asarray(panel))
+    h = hashlib.sha256()
+    h.update(f"{arr.dtype}{arr.shape}".encode())
+    h.update(arr.tobytes())
+    h.update(config_fingerprint(config).encode())
+    h.update(repr(task_sig).encode())
+    return h.hexdigest()[:32]
+
+
+def is_oom_error(e: BaseException) -> bool:
+    """Does this look like a device/host allocation failure?
+
+    XLA surfaces device OOM as ``XlaRuntimeError`` with a
+    ``RESOURCE_EXHAUSTED:`` status prefix (at dispatch or at the async
+    result's materialization); host-side failures come as
+    ``MemoryError`` or allocator messages. Matching on the status text
+    keeps this backend-agnostic — the error class moved modules across
+    jaxlib versions.
+    """
+    if isinstance(e, MemoryError):
+        return True
+    msg = str(e)
+    return ("RESOURCE_EXHAUSTED" in msg or "Out of memory" in msg
+            or "out of memory" in msg)
+
+
+def halved_batch(B: int, remaining: int) -> int:
+    """The OOM ladder's next rung: halve B, re-equalize the launches.
+
+    Same discipline as ``auto_batch_libs``: under the new cap
+    ``max(1, B // 2)``, pick B = ceil(remaining / nb) for the smallest
+    launch count nb the cap allows, so the ragged final launch never
+    wastes a near-full padded batch.
+    """
+    cap = max(1, B // 2)
+    remaining = max(1, remaining)
+    cap = min(cap, remaining)
+    nb = -(-remaining // cap)
+    return -(-remaining // nb)
+
+
+class RunState:
+    """The journaled state of one matrix run (a checkpointable pytree).
+
+    rho:  (N_lib, N_tgt) f32 — committed tiles' values, verbatim.
+    done: (n_groups, N_lib) bool — which library rows of which tile
+          group have been committed. Row-level (not tile-level) so a
+          resume may re-tile with a different B (bit-invariance in B
+          makes that legal).
+    """
+
+    def __init__(self, shape: tuple[int, int], n_groups: int):
+        self.rho = np.zeros(shape, np.float32)
+        self.done = np.zeros((n_groups, shape[0]), bool)
+
+    def tree(self) -> dict:
+        return {"rho": self.rho, "done": self.done}
+
+    def load(self, tree: dict) -> None:
+        # np.array, not asarray: restore() hands back device arrays whose
+        # host view is read-only, and committed tiles write into these.
+        self.rho = np.array(tree["rho"], np.float32)
+        self.done = np.array(tree["done"], bool)
+
+    @property
+    def rows_done(self) -> int:
+        return int(self.done.sum())
+
+    @property
+    def complete(self) -> bool:
+        return bool(self.done.all())
+
+
+class MatrixRunner:
+    """Journaled driver for one all-pairs matrix run under ``run_dir``.
+
+    Built by ``EDM.xmap(run_dir=...)`` (not usually directly): the
+    session resolves the task into tile groups — per-E-group for the
+    local engines, one lib-chunked group for the sharded path — and
+    calls ``drive_group`` per group between ``start()``/``finalize()``.
+    See the module docstring for the journal format and the guarantees.
+    """
+
+    def __init__(self, run_dir: str, *, key: str,
+                 shape: tuple[int, int], groups_sig,
+                 keep: int = 3, checkpoint_every: int | None = None,
+                 oom_retries: int = 4, invalid_series=()):
+        self.dir = os.path.abspath(run_dir)
+        os.makedirs(self.dir, exist_ok=True)
+        self.key = key
+        self.shape = tuple(int(s) for s in shape)
+        self.groups_sig = [[int(E), int(n)] for E, n in groups_sig]
+        self.checkpoint_every = (None if checkpoint_every is None
+                                 else int(checkpoint_every))
+        self.oom_retries = int(oom_retries)
+        self.ckpt = CheckpointManager(os.path.join(self.dir, "state"),
+                                      keep=keep)
+        self.heartbeat = Heartbeat(os.path.join(self.dir, "heartbeat"))
+        self.monitor = StragglerMonitor()
+        self.oom_trail: list[dict] = []
+        self.invalid_series = list(invalid_series)
+        self.state = RunState(self.shape, len(self.groups_sig))
+        self._tiles = 0            # committed this process
+        self._since_snapshot = 0
+        self._t0 = time.monotonic()
+        self._guard: PreemptionGuard | None = None
+        self.resumed_rows = 0
+        self._load_manifest()
+
+    # ---------------------------------------------------- manifest/journal
+
+    @property
+    def _manifest_path(self) -> str:
+        return os.path.join(self.dir, "run.json")
+
+    def _load_manifest(self) -> None:
+        path = self._manifest_path
+        if not os.path.exists(path):
+            self._status = "running"
+            self._write_manifest()
+            return
+        with open(path) as f:
+            manifest = json.load(f)
+        if manifest.get("key") != self.key:
+            raise ValueError(
+                f"run_dir {self.dir} holds a journal for a DIFFERENT run "
+                f"(key {manifest.get('key')!r}, this run {self.key!r}): "
+                f"the panel, config, or task changed since it was "
+                f"written. Refusing to resume from a stale journal — "
+                f"point run_dir at a fresh directory or delete this one.")
+        if (manifest.get("shape") != list(self.shape)
+                or manifest.get("groups") != self.groups_sig):
+            raise ValueError(
+                f"run_dir {self.dir} journal layout does not match this "
+                f"run (shape {manifest.get('shape')} vs "
+                f"{list(self.shape)}) despite an identical key — the "
+                f"journal is corrupt; delete it and rerun")
+        self._status = manifest.get("status", "running")
+        step = self.ckpt.latest_step()
+        if step is not None:
+            self.state.load(self.ckpt.restore(self.state.tree(), step=step))
+            self._since_snapshot = 0
+            self.resumed_rows = self.state.rows_done
+
+    def _write_manifest(self) -> None:
+        tmp = self._manifest_path + ".tmp"
+        with open(tmp, "w") as f:
+            json.dump({"key": self.key, "shape": list(self.shape),
+                       "groups": self.groups_sig,
+                       "status": self._status}, f)
+        os.replace(tmp, self._manifest_path)
+
+    def _snapshot(self) -> None:
+        self.ckpt.save(self.state.rows_done, self.state.tree())
+        self._since_snapshot = 0
+
+    @property
+    def complete(self) -> bool:
+        return self._status == "complete" and self.state.complete
+
+    def result(self) -> np.ndarray:
+        return self.state.rho
+
+    # ------------------------------------------------------------ running
+
+    def start(self) -> "MatrixRunner":
+        """Install the preemption guard (SIGTERM/SIGINT → checkpoint)."""
+        if self._guard is None:
+            self._guard = PreemptionGuard(
+                signals=(signal.SIGTERM, signal.SIGINT))
+        return self
+
+    def close(self) -> None:
+        if self._guard is not None:
+            self._guard.restore()
+            self._guard = None
+
+    def __enter__(self) -> "MatrixRunner":
+        return self.start()
+
+    def __exit__(self, *exc) -> bool:
+        self.close()
+        return False
+
+    def drive_group(self, g: int, launch, B: int, members) -> None:
+        """Drive tile group ``g`` to completion, journaled and guarded.
+
+        ``launch(a, b, B)`` must return matrix rows [a, b) of the group's
+        column block (the engines' launch closures); ``members`` are the
+        target columns the block lands in. Already-done rows (a resumed
+        journal) are skipped; each landed tile commits rows + done-mask,
+        beats the heartbeat, snapshots on cadence, and polls the
+        preemption guard. RESOURCE_EXHAUSTED triggers the halve-B
+        ladder (``oom_retries`` rungs, logged in the run report) before
+        propagating.
+        """
+        cols = np.asarray(members)
+        done = self.state.done[g]
+        Nl = self.shape[0]
+        B = max(1, min(int(B), Nl))
+        attempts = 0
+        cadence = self.checkpoint_every
+
+        def commit(a, b, block):
+            self.state.rho[a:b, cols] = block
+            done[a:b] = True
+            self._tiles += 1
+            self._since_snapshot += 1
+            self.heartbeat.beat(self.state.rows_done)
+            # auto cadence: ~8 snapshots per group — bounds journal I/O
+            # to a few % of engine time on many-tile runs while a
+            # preemption still snapshots immediately (below); only a
+            # hard crash redoes up to cadence − 1 tiles.
+            every = cadence or max(1, -(-(-(-Nl // B)) // 8))
+            if self._since_snapshot >= every:
+                self._snapshot()
+            if self._guard is not None and self._guard.requested:
+                self._preempt()
+
+        while True:
+            todo = np.nonzero(~done)[0]
+            if len(todo) == 0:
+                return
+            start = int(todo[0])  # commits are in order: ~done is a suffix
+            try:
+                drive_batched(Nl, B, launch, start=start, on_block=commit,
+                              monitor=self.monitor)
+                return
+            except Exception as e:  # noqa: BLE001 — filtered to OOM below
+                if not is_oom_error(e):
+                    raise
+                if attempts >= self.oom_retries or B <= 1:
+                    self.oom_trail.append(
+                        {"group": g, "B": B, "action": "give_up",
+                         "attempt": attempts, "error": str(e)[:200]})
+                    self.write_report()
+                    raise
+                remaining = Nl - int(np.nonzero(~done)[0][0])
+                newB = halved_batch(B, remaining)
+                self.oom_trail.append(
+                    {"group": g, "B": B, "to_B": newB, "action": "halve",
+                     "attempt": attempts, "rows_remaining": remaining,
+                     "error": str(e)[:200]})
+                attempts += 1
+                B = newB
+
+    def _preempt(self):
+        """Commit the journal and exit PREEMPTED_EXIT (restart-loop ABI)."""
+        self._snapshot()
+        self._status = "preempted"
+        self._write_manifest()
+        self.write_report()
+        self.close()
+        raise SystemExit(PREEMPTED_EXIT)
+
+    def finalize(self) -> np.ndarray:
+        """Final snapshot + report; marks the manifest complete."""
+        if not self.state.complete:
+            raise RuntimeError(
+                f"finalize() with {int((~self.state.done).sum())} rows "
+                f"not driven — a tile group was skipped")
+        self._snapshot()
+        self._status = "complete"
+        self._write_manifest()
+        self.write_report()
+        self.close()
+        return self.state.rho
+
+    # ------------------------------------------------------------- report
+
+    def write_report(self) -> dict:
+        rows_total = int(self.state.done.size)
+        report = {
+            "key": self.key,
+            "status": self._status,
+            "rows_done": self.state.rows_done,
+            "rows_total": rows_total,
+            "rows_resumed": self.resumed_rows,
+            "tiles_committed": self._tiles,
+            "elapsed_s": round(time.monotonic() - self._t0, 3),
+            "stragglers": self.monitor.report(),
+            "oom_backoff": self.oom_trail,
+            "invalid_series": self.invalid_series,
+        }
+        tmp = os.path.join(self.dir, "report.json.tmp")
+        with open(tmp, "w") as f:
+            json.dump(report, f, indent=1)
+        os.replace(tmp, os.path.join(self.dir, "report.json"))
+        return report

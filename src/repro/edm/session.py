@@ -40,7 +40,6 @@ from repro.edm.dataset import Dataset
 from repro.edm.plan import (
     Plan,
     ccm_convergence_from_master,
-    ccm_group_from_master_batched,
     master_slack_covers,
     panel_master,
     rho_curves_from_master,
@@ -94,7 +93,8 @@ class EDM:
             config = EDMConfig(**overrides)
         elif overrides:
             config = config.replace(**overrides)
-        self.data = data if isinstance(data, Dataset) else Dataset(data)
+        self.data = data if isinstance(data, Dataset) else Dataset(
+            data, on_invalid=config.on_invalid)
         self.config = config
         config.validate_panel(self.data.N, self.data.L)
         self._impl = ops.resolve_impl(config.impl)
@@ -102,6 +102,43 @@ class EDM:
         self.stats: collections.Counter = collections.Counter()
         self._queue: list[tuple[int, jnp.ndarray, tuple[str, ...]]] = []
         self._next_ticket = 0
+
+    # ---------------------------------------------------- validity masking
+    #
+    # A Dataset bound with on_invalid="mask" keeps invalid series in the
+    # panel (zeroed so kernels never see NaN) and the session NaN-flags
+    # every output that touches one: per-series rows, matrix rows AND
+    # columns, pairwise results. Clean panels (valid all-True) pay
+    # nothing — every helper is a no-op returning its input unchanged.
+
+    @property
+    def _invalid(self):
+        """Indices of masked-invalid series, or None for clean panels."""
+        if self.data.num_invalid == 0:
+            return None
+        return np.nonzero(~self.data.valid)[0]
+
+    def _mask_rows(self, out: np.ndarray) -> np.ndarray:
+        """NaN the rows of a per-series output at invalid series."""
+        bad = self._invalid
+        if bad is not None:
+            out = np.array(out, np.float32)
+            out[bad] = np.nan
+        return out
+
+    def _mask_matrix(self, rho: np.ndarray) -> np.ndarray:
+        """NaN the rows and columns of an (N, N) matrix at invalid series
+        (applied at delivery — a journaled run's checkpoints hold the
+        raw computed tiles, the mask is a view-level policy)."""
+        bad = self._invalid
+        if bad is not None:
+            rho = np.array(rho, np.float32)
+            rho[bad, :] = np.nan
+            rho[:, bad] = np.nan
+        return rho
+
+    def _pair_invalid(self, *indices) -> bool:
+        return any(not self.data.is_valid(i) for i in indices)
 
     # ------------------------------------------------------------- plans
 
@@ -247,6 +284,15 @@ class EDM:
             E_opt, rho = optimal_E_batch(
                 X, E_max=c.E_max, tau=c.tau, Tp=c.Tp, impl=self._impl)
             E_opt, rho = np.asarray(E_opt), np.asarray(rho)
+        bad = self._invalid
+        if bad is not None:
+            # Masked-invalid series: pin E to 1 (a deterministic group —
+            # the zeroed data's argmax is meaningless) and NaN the ρ(E)
+            # curve so everything read off the cache inherits the flag.
+            E_opt = E_opt.copy()
+            E_opt[bad] = 1
+            rho = np.array(rho, np.float32)
+            rho[bad] = np.nan
         return E_opt, rho
 
     def optimal_E(self) -> tuple[np.ndarray, np.ndarray]:
@@ -275,13 +321,13 @@ class EDM:
             return rho[np.arange(self.data.N), E_opt - 1].copy()
         if c.cache and c.mesh is None:
             _, iM, _, _ = self._master(E)
-            return np.asarray(simplex_skill_from_master(
+            return self._mask_rows(np.asarray(simplex_skill_from_master(
                 self.data.panel, iM[:, E - 1], E=E, tau=c.tau, Tp=c.Tp,
-                k=c.k_for(E), impl=self._impl))
+                k=c.k_for(E), impl=self._impl)))
         from repro.core.simplex import simplex_skill
-        return np.asarray([
+        return self._mask_rows(np.asarray([
             simplex_skill(x, E=E, tau=c.tau, Tp=c.Tp, impl=self._impl)
-            for x in self.data.panel])
+            for x in self.data.panel]))
 
     # -------------------------------------------------------------- smap
 
@@ -304,7 +350,7 @@ class EDM:
         out = np.zeros((self.data.N, len(thetas)), np.float32)
         for Eg, members in groups.items():
             out[members] = self._smap_group_sweep(Eg, members, thetas)
-        return out
+        return self._mask_rows(out)
 
     def _smap_group_sweep(self, E, members, thetas) -> np.ndarray:
         c = self.config
@@ -354,6 +400,10 @@ class EDM:
         c = self.config
         li = self.data.index_of(lib)
         ti = self.data.index_of(target)
+        if self._pair_invalid(li, ti):  # masked series: NaN, no engine run
+            if lib_sizes is None:
+                return np.float32(np.nan)
+            return np.full(len(tuple(lib_sizes)), np.nan, np.float32)
         E = self._resolve_pair_E(ti, E)
         if lib_sizes is None:
             # Single full-library cap through the same curves path a
@@ -420,6 +470,17 @@ class EDM:
         c = self.config
         li = self.data.index_of(lib)
         ti = self.data.index_of(target)
+        if self._pair_invalid(li, ti):  # masked series: NaN verdict
+            if lib_sizes is None:
+                return SurrogateResult(
+                    float("nan"),
+                    np.full(num_surrogates, np.nan, np.float32),
+                    float("nan"), method, num_surrogates)
+            S = len(tuple(lib_sizes))
+            return SurrogateResult(
+                np.full(S, np.nan, np.float32),
+                np.full((S, num_surrogates), np.nan, np.float32),
+                np.full(S, np.nan), method, num_surrogates)
         E = self._resolve_pair_E(ti, E)
         y = np.asarray(self.data.panel[ti])
         surr = make_surrogates(y, num_surrogates, method=method,
@@ -444,7 +505,8 @@ class EDM:
     # -------------------------------------------------------------- xmap
 
     def xmap(self, method: str = "simplex", *, E_opt=None,
-             theta: float | None = None) -> np.ndarray:
+             theta: float | None = None,
+             run_dir: str | None = None) -> np.ndarray:
         """All-pairs cross-map skill matrix → (N, N) ρ.
 
         Entry (l, t) = skill of cross-mapping series t from series l's
@@ -462,6 +524,18 @@ class EDM:
         configs route through the E-grouped zero-collective sharded
         engines, whose per-shard inner loop uses the same batched
         engine.
+
+        ``run_dir=`` makes the run **fault-tolerant and resumable**
+        (``repro.edm.runner``): every engine tile is journaled under
+        that directory, SIGTERM/SIGINT checkpoints and exits with code
+        ``runner.PREEMPTED_EXIT`` (17), a device OOM halves the batch
+        and retries, and calling again with the same run_dir resumes
+        bit-identically from the last committed tile — a completed
+        journal short-circuits to the stored matrix with zero compute.
+        The journal is keyed by a content hash of panel + config + task,
+        so a stale run_dir (anything changed) is refused, never reused.
+        Masked-invalid series are NaN rows/columns in the returned
+        matrix (and named in ``run_dir/report.json``).
         """
         if method not in ("simplex", "smap"):
             raise ValueError(f"unknown xmap method {method!r}")
@@ -471,10 +545,57 @@ class EDM:
             E_opt = np.full(N, c.E, np.int32) if c.E else self._rho()[0]
         E_opt, groups = _e_groups(E_opt, N)
         if c.mesh is not None:
-            return self._xmap_sharded(method, E_opt, theta)
-        return self._xmap_local(method, groups, theta)
+            rho = self._xmap_sharded(method, E_opt, theta, run_dir)
+        else:
+            rho = self._xmap_local(method, groups, theta, run_dir)
+        return self._mask_matrix(rho)
 
-    def _xmap_local(self, method, groups, theta) -> np.ndarray:
+    def _xmap_group_launch(self, method, E, members, theta, iM):
+        """One E-group's engine as a ``launch(a, b, B)`` closure + its B.
+
+        The (launch, B) pair is the resumable unit the fault-tolerant
+        runner re-drives (at any batch size — the engines are
+        bit-invariant in B); the plain path drives the same closure
+        through ``drive_batched`` directly, so journaled and
+        un-journaled runs execute byte-identical launches.
+        """
+        c = self.config
+        X = self.data.panel
+        N = self.data.N
+        tgts = X[np.asarray(members)]
+        Lp = num_embedded(self.data.L, E, c.tau)
+        if method == "smap":
+            from repro.core.ccm import pad_batch
+            from repro.core.smap_engine import smap_group
+            th = float(c.theta if theta is None else theta)
+            B = min(N, c.batch_libs) if c.batch_libs else N
+
+            def launch(a, b, B):
+                return smap_group(
+                    pad_batch(X[a:b], B), tgts, E=E, tau=c.tau,
+                    Tp=c.Tp_cross, theta=th, ridge=c.ridge,
+                    impl=self._impl)
+
+            return launch, B
+        if iM is not None:
+            from repro.core.ccm import auto_batch_libs
+            from repro.edm.plan import (make_master_group_launch,
+                                        master_group_batch_bytes)
+            launch = make_master_group_launch(
+                X, iM[:, E - 1], tgts, E=E, tau=c.tau, Tp=c.Tp_cross,
+                k=c.k_for(E), impl=self._impl)
+            B = c.batch_libs or auto_batch_libs(
+                Lp, N, c.batch_budget_mb,
+                per_series_bytes=master_group_batch_bytes(
+                    Lp, iM.shape[-1]))
+            return launch, max(1, min(int(B), N))
+        from repro.core.ccm import auto_batch_libs, make_group_launch
+        launch = make_group_launch(X, tgts, E=E, tau=c.tau, Tp=c.Tp_cross,
+                                   k=c.k_for(E), impl=self._impl)
+        B = c.batch_libs or auto_batch_libs(Lp, N, c.batch_budget_mb)
+        return launch, max(1, min(int(B), N))
+
+    def _xmap_local(self, method, groups, theta, run_dir=None) -> np.ndarray:
         """Local all-pairs matrix: library-batched engine per E-group.
 
         Each E-group runs as ceil(N/B) batched engine launches
@@ -483,12 +604,12 @@ class EDM:
         kNN master that covers the needed levels supplies the neighbor
         indices (zero kNN work); otherwise the direct
         ``ops.all_knn_batch`` engine runs — a one-shot matrix no longer
-        pays for building a master it would use once.
+        pays for building a master it would use once. With ``run_dir``
+        the same launches run under the journaled ``MatrixRunner``.
         """
+        from repro.core.ccm import drive_batched
         c = self.config
-        X = self.data.panel
         N = self.data.N
-        rho = np.zeros((N, N), np.float32)
         hit = self._cache.get("master")
         use_master = method == "simplex" and c.cache and hit is not None \
             and hit[3] >= max(groups)
@@ -506,44 +627,86 @@ class EDM:
             iM = None
             if method == "simplex" and c.cache:
                 self.stats["xmap_direct_runs"] += 1
-        for E, members in groups.items():
-            tgts = X[members]
-            if method == "smap":
-                from repro.core.smap_engine import smap_group
-                block = np.asarray(smap_group(
-                    X, tgts, E=E, tau=c.tau, Tp=c.Tp_cross,
-                    theta=float(c.theta if theta is None else theta),
-                    ridge=c.ridge, impl=self._impl))
-            elif use_master:
-                block = ccm_group_from_master_batched(
-                    X, iM[:, E - 1], tgts, E=E, tau=c.tau, Tp=c.Tp_cross,
-                    k=c.k_for(E), impl=self._impl, batch_libs=c.batch_libs,
-                    budget_mb=c.batch_budget_mb)
-            else:
-                from repro.core.ccm import ccm_group_batched
-                block = ccm_group_batched(
-                    X, tgts, E=E, tau=c.tau, Tp=c.Tp_cross, k=c.k_for(E),
-                    impl=self._impl, batch_libs=c.batch_libs,
-                    budget_mb=c.batch_budget_mb)
-            rho[:, members] = block
+        entries = [
+            (E, members) + self._xmap_group_launch(
+                method, E, members, theta, iM)
+            for E, members in groups.items()]
+        if run_dir is not None:
+            return self._run_journaled(run_dir, method, theta, entries,
+                                       (N, N))
+        rho = np.zeros((N, N), np.float32)
+        for E, members, launch, B in entries:
+            rho[:, members] = drive_batched(N, B, launch)
         return rho
 
-    def _xmap_sharded(self, method, E_opt, theta) -> np.ndarray:
+    def _xmap_sharded(self, method, E_opt, theta, run_dir=None) -> np.ndarray:
         c = self.config
         X = self.data.panel
+        N = self.data.N
         from repro.distributed.sharded_ccm import (
-            sharded_ccm_matrix, sharded_smap_matrix)
-        if method == "smap":
-            return np.asarray(sharded_smap_matrix(
-                X, X, E_opt=E_opt, tau=c.tau, Tp=c.Tp_cross,
-                theta=float(c.theta if theta is None else theta),
-                ridge=c.ridge, mesh=c.mesh, lib_axes=c.lib_axes,
-                tgt_axes=c.tgt_axes, impl=self._impl))[: self.data.N]
-        return np.asarray(sharded_ccm_matrix(
-            X, X, E_opt=E_opt, tau=c.tau, Tp=c.Tp_cross, mesh=c.mesh,
-            lib_axes=c.lib_axes, tgt_axes=c.tgt_axes, impl=self._impl,
-            batch_libs=c.batch_libs,
-            batch_budget_mb=c.batch_budget_mb))[: self.data.N]
+            _egroup_layout, mesh_axes_size, sharded_ccm_matrix,
+            sharded_smap_matrix)
+
+        def matrix(X_lib, layout=None):
+            if method == "smap":
+                return np.asarray(sharded_smap_matrix(
+                    X_lib, X, E_opt=E_opt, tau=c.tau, Tp=c.Tp_cross,
+                    theta=float(c.theta if theta is None else theta),
+                    ridge=c.ridge, mesh=c.mesh, lib_axes=c.lib_axes,
+                    tgt_axes=c.tgt_axes, impl=self._impl, layout=layout))
+            return np.asarray(sharded_ccm_matrix(
+                X_lib, X, E_opt=E_opt, tau=c.tau, Tp=c.Tp_cross,
+                mesh=c.mesh, lib_axes=c.lib_axes, tgt_axes=c.tgt_axes,
+                impl=self._impl, batch_libs=c.batch_libs,
+                batch_budget_mb=c.batch_budget_mb, layout=layout))
+
+        if run_dir is None:
+            return matrix(X)[:N]
+        # Journaled mesh run: the lib axis is cut into row chunks and
+        # each chunk is ONE SPMD matrix call (libraries auto-pad over
+        # the lib shards; rows are independent, so chunking is
+        # bit-identical) — completed chunks persist as journal tiles.
+        # The static E-group target layout is computed once and reused
+        # across every chunk instead of re-derived per call.
+        S_l = c.mesh_axis_size(c.lib_axes)
+        S_t = mesh_axes_size(c.mesh, c.tgt_axes)
+        layout = _egroup_layout(
+            jnp.broadcast_to(jnp.asarray(E_opt, jnp.int32), (N,)), S_t)
+        tile = c.run_tile_rows or max(S_l, -(-N // 8))
+        tile = -(-int(tile) // S_l) * S_l  # round up to full lib shards
+
+        def launch(a, b, B):
+            return matrix(X[a:b], layout=layout)
+
+        entries = [(0, np.arange(N), launch, tile)]
+        return self._run_journaled(run_dir, method, theta, entries, (N, N))
+
+    def _run_journaled(self, run_dir, method, theta, entries,
+                       shape) -> np.ndarray:
+        """Drive xmap tile groups through a journaled ``MatrixRunner``."""
+        from repro.edm.runner import MatrixRunner, run_key
+        c = self.config
+        groups_sig = [[E, len(members)] for E, members, _, _ in entries]
+        th = (float(c.theta if theta is None else theta)
+              if method == "smap" else None)
+        key = run_key(self.data.panel, c,
+                      ("xmap", method, th, tuple(map(tuple, groups_sig))))
+        runner = MatrixRunner(
+            run_dir, key=key, shape=shape, groups_sig=groups_sig,
+            keep=c.checkpoint_keep, checkpoint_every=c.checkpoint_every,
+            oom_retries=c.oom_retries,
+            invalid_series=self.data.invalid_report)
+        if runner.complete:
+            # Finished journal: the stored matrix IS the result — zero
+            # engine launches (restart loops may re-run unconditionally).
+            self.stats["runs_short_circuited"] += 1
+            return runner.result()
+        with runner:
+            for g, (E, members, launch, B) in enumerate(entries):
+                runner.drive_group(g, launch, B, members)
+            out = runner.finalize()
+        self.stats["rows_resumed"] += runner.resumed_rows
+        return out
 
     # ------------------------------------------------------ batched entry
 

@@ -1,0 +1,385 @@
+"""Fault tolerance (ISSUE 6): journaled resumable xmap runs, preemption
+→ checkpoint-and-exit-17, OOM → halve-B backoff, hardened ingestion, and
+the run-report plumbing (stragglers, heartbeats, invalid series)."""
+
+import json
+import os
+import signal
+import subprocess
+import sys
+import textwrap
+
+import numpy as np
+import jax.numpy as jnp
+import pytest
+
+from repro.core import ccm
+from repro.data import timeseries as ts
+from repro.edm import (EDM, EDMConfig, Dataset, MatrixRunner,
+                       PREEMPTED_EXIT, run_key, screen_panel)
+from repro.edm import runner as runner_mod
+
+
+def _panel(n=6, steps=220, seed=3):
+    panel, _ = ts.forced_network_panel(n, steps, seed=seed)
+    return jnp.asarray(panel)
+
+
+# --------------------------------------------------- drive_batched hooks
+
+
+def test_drive_batched_start_and_on_block():
+    """start= skips committed rows; on_block sees exactly the landed
+    tiles in order, unpadded."""
+    calls, blocks = [], []
+
+    def launch(a, b, B):
+        calls.append((a, b, B))
+        return jnp.arange(a, a + B, dtype=jnp.float32)[:, None]
+
+    out = ccm.drive_batched(7, 3, launch, start=3,
+                            on_block=lambda a, b, blk: blocks.append(
+                                (a, b, blk.copy())))
+    assert calls == [(3, 6, 3), (6, 7, 3)]
+    assert [(a, b) for a, b, _ in blocks] == [(3, 6), (6, 7)]
+    np.testing.assert_array_equal(blocks[1][2][:, 0], [6.0])  # pad dropped
+    np.testing.assert_array_equal(out[3:, 0], np.arange(3, 7))
+    # nothing left to drive: no launches, None result
+    assert ccm.drive_batched(4, 2, launch, start=4) is None
+
+
+def test_drive_batched_monitor_counts_tiles():
+    from repro.distributed.fault import StragglerMonitor
+    mon = StragglerMonitor()
+    ccm.drive_batched(6, 2, lambda a, b, B: jnp.zeros((B, 1)), monitor=mon)
+    rep = mon.report()
+    assert rep["steps"] == 3 and rep["median_s"] is not None
+
+
+# ------------------------------------------------------- backoff helpers
+
+
+def test_is_oom_error_markers():
+    assert runner_mod.is_oom_error(RuntimeError("RESOURCE_EXHAUSTED: foo"))
+    assert runner_mod.is_oom_error(Exception("Out of memory allocating"))
+    assert runner_mod.is_oom_error(MemoryError())
+    assert not runner_mod.is_oom_error(ValueError("shape mismatch"))
+
+
+def test_halved_batch_equalizes():
+    # cap 8 over 20 remaining rows → 3 launches of ceil(20/3)=7
+    assert runner_mod.halved_batch(16, 20) == 7
+    assert runner_mod.halved_batch(2, 100) == 1  # floor
+    assert runner_mod.halved_batch(8, 3) == 3    # cap clamps to remaining
+
+
+def test_run_key_ignores_perf_knobs_only():
+    """Resuming with a different batch size / snapshot cadence is legal
+    (results are B-invariant); any numeric knob changes the key."""
+    X = np.asarray(_panel())
+    sig = ("xmap", "simplex", None, ((3, 6),))
+    base = run_key(X, EDMConfig(E=3), sig)
+    assert run_key(X, EDMConfig(E=3, batch_libs=2, checkpoint_every=5,
+                                oom_retries=1, run_tile_rows=2), sig) == base
+    assert run_key(X, EDMConfig(E=4), sig) != base
+    assert run_key(X, EDMConfig(E=3, tau=2), sig) != base
+    assert run_key(X * 2.0, EDMConfig(E=3), sig) != base
+    assert run_key(X, EDMConfig(E=3), ("xmap", "smap", 1.0, ((3, 6),))) != base
+
+
+# ------------------------------------------------- journaled local runs
+
+
+def test_journaled_xmap_bit_identical_and_reported(tmp_path):
+    X = _panel()
+    ref = EDM(X, EDMConfig(E=3, batch_libs=2)).xmap()
+    run = tmp_path / "run"
+    got = EDM(X, EDMConfig(E=3, batch_libs=2)).xmap(run_dir=str(run))
+    np.testing.assert_array_equal(ref, got)
+    rep = json.loads((run / "report.json").read_text())
+    assert rep["status"] == "complete"
+    assert rep["rows_done"] == rep["rows_total"] == 6
+    assert rep["stragglers"]["steps"] == 3  # ceil(6/2) launch timings
+    assert len((run / "heartbeat").read_text().splitlines()) == 3
+    manifest = json.loads((run / "run.json").read_text())
+    assert manifest["status"] == "complete" and manifest["groups"] == [[3, 6]]
+
+
+def test_completed_run_short_circuits_without_launches(tmp_path, monkeypatch):
+    X = _panel()
+    run = tmp_path / "run"
+    ref = EDM(X, EDMConfig(E=3, batch_libs=2)).xmap(run_dir=str(run))
+
+    def boom(*a, **k):  # any engine launch on the re-run is a failure
+        raise AssertionError("completed journal must not recompute")
+
+    monkeypatch.setattr(ccm, "_group_step", boom)
+    sess = EDM(X, EDMConfig(E=3, batch_libs=2))
+    np.testing.assert_array_equal(sess.xmap(run_dir=str(run)), ref)
+    assert sess.stats["runs_short_circuited"] == 1
+
+
+def test_stale_journal_refused(tmp_path):
+    X = _panel()
+    run = tmp_path / "run"
+    EDM(X, EDMConfig(E=3, batch_libs=2)).xmap(run_dir=str(run))
+    with pytest.raises(ValueError, match="DIFFERENT run"):
+        EDM(X * 1.5, EDMConfig(E=3, batch_libs=2)).xmap(run_dir=str(run))
+    with pytest.raises(ValueError, match="DIFFERENT run"):
+        EDM(X, EDMConfig(E=4, batch_libs=2)).xmap(run_dir=str(run))
+
+
+def test_preempt_then_resume_recomputes_no_committed_tile(
+        tmp_path, monkeypatch):
+    """SIGTERM mid-run → snapshot + SystemExit(17); the rerun drives only
+    the tiles the journal does not hold and is bit-identical."""
+    X = _panel()
+    cfg = EDMConfig(E=3, batch_libs=2)
+    ref = EDM(X, cfg).xmap()
+    run = tmp_path / "run"
+    orig = ccm._group_step
+    n = {"launches": 0}
+
+    def sigterm_mid_run(*a, **k):
+        n["launches"] += 1
+        if n["launches"] == 2:  # tile 0 in flight, not yet committed
+            os.kill(os.getpid(), signal.SIGTERM)
+        return orig(*a, **k)
+
+    monkeypatch.setattr(ccm, "_group_step", sigterm_mid_run)
+    with pytest.raises(SystemExit) as exc:
+        EDM(X, cfg).xmap(run_dir=str(run))
+    assert exc.value.code == PREEMPTED_EXIT
+    assert signal.getsignal(signal.SIGTERM) == signal.SIG_DFL  # restored
+    rep = json.loads((run / "report.json").read_text())
+    assert rep["status"] == "preempted" and 0 < rep["rows_done"] < 6
+
+    resumed = {"launches": 0}
+
+    def counting(*a, **k):
+        resumed["launches"] += 1
+        return orig(*a, **k)
+
+    monkeypatch.setattr(ccm, "_group_step", counting)
+    got = EDM(X, cfg).xmap(run_dir=str(run))
+    np.testing.assert_array_equal(ref, got)
+    assert resumed["launches"] == 2  # 3 tiles total, 1 was journaled
+    rep = json.loads((run / "report.json").read_text())
+    assert rep["status"] == "complete" and rep["rows_resumed"] == 2
+
+
+def test_oom_triggers_halve_b_retry(tmp_path, monkeypatch):
+    """An injected RESOURCE_EXHAUSTED halves B (equalized) and the run
+    completes bit-identically, with the decision logged in the report."""
+    X = _panel()
+    ref = EDM(X, EDMConfig(E=3, batch_libs=2)).xmap()
+    orig = ccm._group_step
+    fail = {"armed": True}
+
+    def oom_once(*a, **k):
+        if fail["armed"]:
+            fail["armed"] = False
+            raise RuntimeError("RESOURCE_EXHAUSTED: out of memory")
+        return orig(*a, **k)
+
+    monkeypatch.setattr(ccm, "_group_step", oom_once)
+    run = tmp_path / "run"
+    got = EDM(X, EDMConfig(E=3, batch_libs=6)).xmap(run_dir=str(run))
+    np.testing.assert_array_equal(ref, got)
+    trail = json.loads((run / "report.json").read_text())["oom_backoff"]
+    assert trail[0]["action"] == "halve"
+    assert trail[0]["B"] == 6 and trail[0]["to_B"] == 3
+
+
+def test_oom_retries_bounded(tmp_path, monkeypatch):
+    X = _panel()
+
+    def always_oom(*a, **k):
+        raise RuntimeError("RESOURCE_EXHAUSTED: out of memory")
+
+    monkeypatch.setattr(ccm, "_group_step", always_oom)
+    run = tmp_path / "run"
+    with pytest.raises(RuntimeError, match="RESOURCE_EXHAUSTED"):
+        EDM(X, EDMConfig(E=3, batch_libs=4, oom_retries=2)).xmap(
+            run_dir=str(run))
+    trail = json.loads((run / "report.json").read_text())["oom_backoff"]
+    assert [t["action"] for t in trail] == ["halve", "halve", "give_up"]
+
+
+def test_non_oom_errors_propagate_unretried(tmp_path, monkeypatch):
+    X = _panel()
+    calls = {"n": 0}
+
+    def broken(*a, **k):
+        calls["n"] += 1
+        raise ValueError("not a memory problem")
+
+    monkeypatch.setattr(ccm, "_group_step", broken)
+    with pytest.raises(ValueError, match="not a memory problem"):
+        EDM(X, EDMConfig(E=3, batch_libs=2)).xmap(
+            run_dir=str(tmp_path / "run"))
+    assert calls["n"] == 1
+
+
+def test_runner_refuses_finalize_with_missing_group(tmp_path):
+    r = MatrixRunner(str(tmp_path / "run"), key="k", shape=(4, 4),
+                     groups_sig=[[2, 4]])
+    with pytest.raises(RuntimeError, match="not driven"):
+        r.finalize()
+
+
+# --------------------------------------------- checkpoint restore hygiene
+
+
+def test_corrupt_checkpoint_leaf_named_in_error(tmp_path):
+    from repro.checkpoint import CheckpointManager
+    mgr = CheckpointManager(str(tmp_path / "ck"), keep=2)
+    state = {"rho": np.ones((3, 3), np.float32), "done": np.zeros(3, bool)}
+    mgr.save(1, state)
+    step_dir = mgr._step_dir(1)
+    leaf = os.path.join(step_dir, "leaf_00000.npy")
+    with open(leaf, "wb") as f:
+        f.write(b"\x00" * 8)  # truncated garbage
+    with pytest.raises(ValueError, match="leaf 0 is unreadable"):
+        mgr.restore(state, step=1)
+
+
+def test_swapped_checkpoint_leaf_fails_manifest_check(tmp_path):
+    from repro.checkpoint import CheckpointManager
+    mgr = CheckpointManager(str(tmp_path / "ck"), keep=2)
+    state = {"a": np.ones((3, 3), np.float32), "b": np.zeros(3, bool)}
+    mgr.save(1, state)
+    leaf = os.path.join(mgr._step_dir(1), "leaf_00000.npy")
+    np.save(leaf, np.ones((2, 2), np.float32))  # wrong shape vs manifest
+    with pytest.raises(ValueError, match="does not match its manifest"):
+        mgr.restore(state, step=1)
+
+
+# --------------------------------------------------- hardened ingestion
+
+
+def test_screen_panel_flags_nonfinite_and_constant():
+    X = np.asarray(_panel(4)).copy()
+    X[1, 7] = np.inf
+    X[3, :] = 2.5
+    rep = screen_panel(X)
+    assert [(r["index"], r["reason"]) for r in rep] == [
+        (1, "1 non-finite values"), (3, "constant series")]
+
+
+def test_dataset_raise_names_series():
+    X = np.asarray(_panel(3)).copy()
+    X[2, 0] = np.nan
+    with pytest.raises(ValueError, match="series c.*non-finite"):
+        Dataset(X, names=["a", "b", "c"])
+
+
+def test_dataset_drop_compacts_and_reports():
+    X = np.asarray(_panel(4)).copy()
+    X[1, :] = 0.0
+    d = Dataset(X, names=list("abcd"), on_invalid="drop")
+    assert d.N == 3 and d.names == ["a", "c", "d"]
+    assert d.valid.all()
+    assert d.invalid_report == [
+        {"index": 1, "name": "b", "reason": "constant series"}]
+
+
+def test_dataset_mask_keeps_shape_and_zeroes():
+    X = np.asarray(_panel(4)).copy()
+    X[2, 5] = -np.inf
+    d = Dataset(X, on_invalid="mask")
+    assert d.N == 4 and d.num_invalid == 1 and not d.is_valid(2)
+    assert np.isfinite(np.asarray(d.panel)).all()
+
+
+def test_masked_session_outputs_nan_flagged(tmp_path):
+    """mask policy end to end: xmap rows AND columns of invalid series
+    are NaN, valid entries match the clean sub-panel's values, pairwise
+    calls NaN out, and the run report names the series."""
+    X = np.asarray(_panel(6)).copy()
+    X[1, 3] = np.nan
+    X[4, :] = 1.0
+    sess = EDM(X, EDMConfig(E=3, on_invalid="mask"))
+    run = tmp_path / "run"
+    rho = sess.xmap(run_dir=str(run))
+    bad, good = [1, 4], [0, 2, 3, 5]
+    assert np.isnan(rho[bad, :]).all() and np.isnan(rho[:, bad]).all()
+    assert np.isfinite(rho[np.ix_(good, good)]).all()
+    rep = json.loads((run / "report.json").read_text())
+    assert [r["index"] for r in rep["invalid_series"]] == bad
+    # valid×valid entries equal the same pairs of an all-clean session
+    clean = EDM(X[good], EDMConfig(E=3)).xmap()
+    np.testing.assert_array_equal(rho[np.ix_(good, good)], clean)
+    # pairwise paths
+    assert np.isnan(sess.ccm(0, 1))
+    assert np.isfinite(sess.ccm(0, 2))
+    curve = sess.ccm(4, 2, lib_sizes=(50, 100))
+    assert curve.shape == (2,) and np.isnan(curve).all()
+    sr = sess.surrogate_test(0, 4, num_surrogates=4)
+    assert np.isnan(sr.rho) and np.isnan(sr.pvalue)
+    assert np.isnan(sess.simplex(E=3)[bad]).all()
+    assert np.isnan(sess.smap()[bad]).all()
+    assert np.isfinite(sess.smap()[good]).all()
+    E_opt, rcurve = sess.optimal_E()
+    assert np.isnan(rcurve[bad]).all() and (E_opt[bad] == 1).all()
+
+
+def test_clean_panel_unaffected_by_mask_policy():
+    X = _panel(5)
+    np.testing.assert_array_equal(
+        EDM(X, EDMConfig(E=3, on_invalid="mask")).xmap(),
+        EDM(X, EDMConfig(E=3)).xmap())
+
+
+# ------------------------------------------- subprocess kill-and-resume
+
+
+def test_subprocess_sigterm_kill_and_resume(tmp_path):
+    """A real process: SIGTERM lands mid-run, the interpreter exits with
+    PREEMPTED_EXIT, and a second process resumes bit-identically while
+    recomputing none of the committed tiles."""
+    run = str(tmp_path / "run")
+    prog = textwrap.dedent("""
+        import os, signal, sys
+        import numpy as np, jax.numpy as jnp
+        from repro.core import ccm
+        from repro.data import timeseries as ts
+        from repro.edm import EDM, EDMConfig
+        panel, _ = ts.forced_network_panel(6, 220, seed=3)
+        X = jnp.asarray(panel)
+        cfg = EDMConfig(E=3, batch_libs=2)
+        mode, run = sys.argv[1], sys.argv[2]
+        orig = ccm._group_step
+        n = {"launches": 0}
+        def wrapped(*a, **k):
+            n["launches"] += 1
+            if mode == "kill" and n["launches"] == 2:
+                os.kill(os.getpid(), signal.SIGTERM)
+            return orig(*a, **k)
+        ccm._group_step = wrapped
+        rho = EDM(X, cfg).xmap(run_dir=run)
+        np.save(os.path.join(run, f"{mode}.npy"), rho)
+        print(f"LAUNCHES={n['launches']}")
+    """)
+    env = dict(os.environ)
+    env["PYTHONPATH"] = os.path.abspath(
+        os.path.join(os.path.dirname(__file__), "..", "src"))
+    kill = subprocess.run([sys.executable, "-c", prog, "kill", run],
+                          env=env, capture_output=True, text=True,
+                          timeout=300)
+    assert kill.returncode == PREEMPTED_EXIT, kill.stderr
+    with open(os.path.join(run, "report.json")) as f:
+        assert json.load(f)["status"] == "preempted"
+    resume = subprocess.run([sys.executable, "-c", prog, "resume", run],
+                            env=env, capture_output=True, text=True,
+                            timeout=300)
+    assert resume.returncode == 0, resume.stderr
+    assert "LAUNCHES=2" in resume.stdout  # 3 tiles total, 1 journaled
+    fresh = subprocess.run(
+        [sys.executable, "-c", prog, "fresh", str(tmp_path / "fresh")],
+        env=env, capture_output=True, text=True, timeout=300)
+    assert fresh.returncode == 0, fresh.stderr
+    assert "LAUNCHES=3" in fresh.stdout
+    np.testing.assert_array_equal(
+        np.load(os.path.join(run, "resume.npy")),
+        np.load(os.path.join(str(tmp_path / "fresh"), "fresh.npy")))

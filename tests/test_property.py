@@ -166,3 +166,55 @@ def test_lookup_convex_combination_bounds(x):
     span = max(hi - lo, 1e-3)
     assert yhat.min() >= lo - 1e-3 * span - 1e-4
     assert yhat.max() <= hi + 1e-3 * span + 1e-4
+
+
+# ----------------------------------------------- ingestion mask policy
+
+
+def _corrupt(panel, bad_idx, kind):
+    """Inject one invalid series (non-finite or constant) at bad_idx."""
+    panel = panel.copy()
+    if kind == "nan":
+        panel[bad_idx, ::7] = np.nan
+    elif kind == "inf":
+        panel[bad_idx, 3] = np.inf
+    else:
+        panel[bad_idx, :] = panel[bad_idx, 0]
+    return panel
+
+
+@given(bad=st.integers(0, 4), kind=st.sampled_from(["nan", "inf", "const"]),
+       seed=st.integers(0, 2**10))
+@settings(**_smap_settings)
+def test_mask_policy_nan_closure(bad, kind, seed):
+    """For ANY single corrupt series, on_invalid="mask" yields exactly:
+    NaN on every output touching it, and bit-identical values elsewhere
+    to the clean sub-panel session (drop) — mask never leaks a corrupt
+    series into a valid pair's result."""
+    from repro.edm import EDM, EDMConfig
+    panel, _ = ts.forced_network_panel(5, 160, seed=seed)
+    X = _corrupt(np.asarray(panel), bad, kind)
+    sess = EDM(X, EDMConfig(E=2, on_invalid="mask"))
+    rho = sess.xmap()
+    good = [i for i in range(5) if i != bad]
+    assert np.isnan(rho[bad, :]).all() and np.isnan(rho[:, bad]).all()
+    dropped = EDM(X, EDMConfig(E=2, on_invalid="drop"))
+    assert dropped.data.N == 4
+    np.testing.assert_array_equal(rho[np.ix_(good, good)], dropped.xmap())
+    # pairwise closure: NaN iff the pair touches the corrupt series
+    g = good[0]
+    assert np.isnan(sess.ccm(g, bad)) and np.isnan(sess.ccm(bad, g))
+    assert np.isfinite(sess.ccm(good[0], good[1]))
+    sr = sess.surrogate_test(bad, g, num_surrogates=3)
+    assert np.isnan(sr.rho) and np.isnan(sr.pvalue)
+
+
+@given(kind=st.sampled_from(["nan", "inf", "const"]),
+       seed=st.integers(0, 2**10))
+@settings(**_smap_settings)
+def test_raise_policy_always_names_offender(kind, seed):
+    from repro.edm import Dataset
+    panel, _ = ts.forced_network_panel(4, 120, seed=seed)
+    X = _corrupt(np.asarray(panel), 2, kind)
+    with pytest.raises(ValueError, match="series 2"):
+        Dataset(X)
