@@ -11,10 +11,12 @@ Journal format (everything lives under ``run_dir``):
 
 * ``run.json`` — the run manifest: a **content hash** of the panel
   bytes + the numeric-semantics fields of the ``EDMConfig`` + the task
-  signature (method, θ, the E-group structure), the matrix shape, and
-  the group layout. A resume whose recomputed key differs is REFUSED
-  with a clear error — a stale journal (edited panel, changed config)
-  can never silently leak rows into a fresh run.
+  signature (method, θ, the **full per-series E table** — not a
+  group-size summary, so reassigning manifolds while keeping group
+  sizes still changes the key), the matrix shape, and the group
+  layout. A resume whose recomputed key differs is REFUSED with a
+  clear error — a stale journal (edited panel, changed config, changed
+  ``E_opt``) can never silently leak rows into a fresh run.
 * ``state/step_*`` — run-state snapshots via
   ``checkpoint.CheckpointManager`` (atomic tmp+rename publish, last-K
   retention, manifest-validated restore): the partial ρ matrix plus a
@@ -24,6 +26,10 @@ Journal format (everything lives under ``run_dir``):
 * ``heartbeat`` — one appended line per committed tile
   (``distributed.fault.Heartbeat``) so an external watchdog can detect
   a hang (no heartbeat progress) as opposed to a crash (process gone).
+* ``lock`` — an advisory ``flock`` held for the runner's lifetime: a
+  restart loop relaunching before the dying process has fully exited
+  would otherwise interleave two writers over ``run.json`` and the
+  snapshot dirs. The second process fails fast with a clear error.
 * ``report.json`` — the run report: progress counters, straggler
   flags (``StragglerMonitor`` over the engine launch timings), the OOM
   backoff decision trail, and the dataset's invalid-series records.
@@ -51,6 +57,7 @@ Graceful degradation:
 
 from __future__ import annotations
 
+import fcntl
 import hashlib
 import json
 import os
@@ -104,21 +111,29 @@ def run_key(panel, config, task_sig) -> str:
     return h.hexdigest()[:32]
 
 
+#: Allocator-failure markers, ANCHORED: a message must start with one
+#: (the XLA status prefix / allocator message itself) or carry it right
+#: after a ``": "`` wrapper separator. An error that merely *mentions*
+#: memory mid-sentence is not an OOM and must not burn backoff retries.
+OOM_MARKERS = ("RESOURCE_EXHAUSTED", "Out of memory",
+               "CUDA_ERROR_OUT_OF_MEMORY")
+
+
 def is_oom_error(e: BaseException) -> bool:
     """Does this look like a device/host allocation failure?
 
     XLA surfaces device OOM as ``XlaRuntimeError`` with a
     ``RESOURCE_EXHAUSTED:`` status prefix (at dispatch or at the async
     result's materialization); host-side failures come as
-    ``MemoryError`` or allocator messages. Matching on the status text
-    keeps this backend-agnostic — the error class moved modules across
-    jaxlib versions.
+    ``MemoryError`` or allocator messages. Matching on the anchored
+    status/allocator text keeps this backend-agnostic — the error class
+    moved modules across jaxlib versions — without misclassifying
+    unrelated errors whose text happens to mention memory.
     """
     if isinstance(e, MemoryError):
         return True
     msg = str(e)
-    return ("RESOURCE_EXHAUSTED" in msg or "Out of memory" in msg
-            or "out of memory" in msg)
+    return any(msg.startswith(m) or f": {m}" in msg for m in OOM_MARKERS)
 
 
 def halved_batch(B: int, remaining: int) -> int:
@@ -202,7 +217,42 @@ class MatrixRunner:
         self._t0 = time.monotonic()
         self._guard: PreemptionGuard | None = None
         self.resumed_rows = 0
-        self._load_manifest()
+        self._lock = None
+        self._acquire_lock()
+        try:
+            self._load_manifest()
+        except BaseException:
+            self._release_lock()
+            raise
+
+    # --------------------------------------------------------------- lock
+
+    def _acquire_lock(self) -> None:
+        """Advisory single-writer lock on ``run_dir`` (fail fast).
+
+        The preemption/restart-loop design (exit 17, controller
+        relaunches) makes it plausible for a resume process to race a
+        still-dying predecessor; two writers would interleave
+        ``run.json``/``report.json`` replaces and snapshot dirs. flock
+        is per open file description, so this also catches two runners
+        in one process.
+        """
+        f = open(os.path.join(self.dir, "lock"), "w")
+        try:
+            fcntl.flock(f, fcntl.LOCK_EX | fcntl.LOCK_NB)
+        except OSError:
+            f.close()
+            raise RuntimeError(
+                f"run_dir {self.dir} is locked by another live run — a "
+                f"previous process is still writing this journal. Wait "
+                f"for it to exit (or kill it) before resuming.") from None
+        self._lock = f
+
+    def _release_lock(self) -> None:
+        if self._lock is not None:
+            fcntl.flock(self._lock, fcntl.LOCK_UN)
+            self._lock.close()
+            self._lock = None
 
     # ---------------------------------------------------- manifest/journal
 
@@ -271,6 +321,7 @@ class MatrixRunner:
         if self._guard is not None:
             self._guard.restore()
             self._guard = None
+        self._release_lock()
 
     def __enter__(self) -> "MatrixRunner":
         return self.start()
@@ -325,6 +376,14 @@ class MatrixRunner:
                 return
             except Exception as e:  # noqa: BLE001 — filtered to OOM below
                 if not is_oom_error(e):
+                    if "out of memory" in str(e).lower():
+                        # Mentions memory but fails the anchored match:
+                        # propagate unretried, with a trail entry so the
+                        # report explains why no backoff was attempted.
+                        self.oom_trail.append(
+                            {"group": g, "B": B, "action": "unclassified",
+                             "error": str(e)[:200]})
+                        self.write_report()
                     raise
                 if attempts >= self.oom_retries or B <= 1:
                     self.oom_trail.append(

@@ -547,7 +547,7 @@ class EDM:
         if c.mesh is not None:
             rho = self._xmap_sharded(method, E_opt, theta, run_dir)
         else:
-            rho = self._xmap_local(method, groups, theta, run_dir)
+            rho = self._xmap_local(method, groups, theta, run_dir, E_opt)
         return self._mask_matrix(rho)
 
     def _xmap_group_launch(self, method, E, members, theta, iM):
@@ -595,7 +595,8 @@ class EDM:
         B = c.batch_libs or auto_batch_libs(Lp, N, c.batch_budget_mb)
         return launch, max(1, min(int(B), N))
 
-    def _xmap_local(self, method, groups, theta, run_dir=None) -> np.ndarray:
+    def _xmap_local(self, method, groups, theta, run_dir=None,
+                    E_opt=None) -> np.ndarray:
         """Local all-pairs matrix: library-batched engine per E-group.
 
         Each E-group runs as ceil(N/B) batched engine launches
@@ -633,7 +634,7 @@ class EDM:
             for E, members in groups.items()]
         if run_dir is not None:
             return self._run_journaled(run_dir, method, theta, entries,
-                                       (N, N))
+                                       (N, N), E_opt)
         rho = np.zeros((N, N), np.float32)
         for E, members, launch, B in entries:
             rho[:, members] = drive_batched(N, B, launch)
@@ -679,18 +680,24 @@ class EDM:
             return matrix(X[a:b], layout=layout)
 
         entries = [(0, np.arange(N), launch, tile)]
-        return self._run_journaled(run_dir, method, theta, entries, (N, N))
+        return self._run_journaled(run_dir, method, theta, entries, (N, N),
+                                   E_opt)
 
     def _run_journaled(self, run_dir, method, theta, entries,
-                       shape) -> np.ndarray:
+                       shape, E_opt) -> np.ndarray:
         """Drive xmap tile groups through a journaled ``MatrixRunner``."""
         from repro.edm.runner import MatrixRunner, run_key
         c = self.config
         groups_sig = [[E, len(members)] for E, members, _, _ in entries]
         th = (float(c.theta if theta is None else theta)
               if method == "smap" else None)
+        # The task signature hashes the FULL per-series E table, not a
+        # group-size summary: E_opt=[2,3] vs [3,2] keep group sizes but
+        # assign different manifolds, and must key to different runs.
+        e_table = np.ascontiguousarray(
+            np.broadcast_to(np.asarray(E_opt, np.int32), (self.data.N,)))
         key = run_key(self.data.panel, c,
-                      ("xmap", method, th, tuple(map(tuple, groups_sig))))
+                      ("xmap", method, th, e_table.tobytes()))
         runner = MatrixRunner(
             run_dir, key=key, shape=shape, groups_sig=groups_sig,
             keep=c.checkpoint_keep, checkpoint_every=c.checkpoint_every,
@@ -700,6 +707,7 @@ class EDM:
             # Finished journal: the stored matrix IS the result — zero
             # engine launches (restart loops may re-run unconditionally).
             self.stats["runs_short_circuited"] += 1
+            runner.close()  # release the run_dir lock
             return runner.result()
         with runner:
             for g, (E, members, launch, B) in enumerate(entries):

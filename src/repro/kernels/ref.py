@@ -226,15 +226,17 @@ def lookup_rho(
 #
 # One launch computes the neighbor tables of B library series at one E —
 # the batch axis is embarrassingly independent, so this is a *layout*
-# contract, not a numerics change: every per-series stage either runs on
-# per-series shapes or is a rounding-free selection (top-k, gathers), and
-# the result is bit-invariant in B (the per-series oracle is the B = 1
-# launch of the same program). NOTE the legacy per-series route — the
-# same pipeline inside a ``lax.map`` body (``core.ccm.ccm_group``) — is
-# NOT always bit-equal to this: XLA CPU contracts the distance
-# accumulation differently inside map bodies at some shapes (~1 ULP,
-# e.g. Lp = 94; measured while building this engine), one more entry in
-# the lax.map pathology file alongside the TopK slowdown in ROADMAP.
+# contract, not a numerics change: the result is bit-invariant in B (any
+# batch decomposition of this program gives identical tables — the
+# contract journaled resume and OOM backoff re-tiling rely on). What is
+# NOT contracted is bit-equality against *other programs* computing the
+# same tables: XLA CPU contracts the distance accumulation differently
+# at some shapes (~1 ULP) both inside ``lax.map`` bodies (e.g. Lp = 94,
+# the legacy ``core.ccm.ccm_group`` route) and in the standalone 2-D
+# per-series pipeline (e.g. L = 150, E = 4) — selection indices still
+# agree (ties at 1 ULP don't arise in practice), distances wobble in
+# the last bit. One more entry in the XLA-CPU contraction pathology
+# file alongside the TopK slowdown in ROADMAP.
 # --------------------------------------------------------------------------
 
 
@@ -276,12 +278,13 @@ def all_knn_batch(
 ) -> tuple[jax.Array, jax.Array]:
     """All-kNN tables for B library series in ONE launch → (B, Lp, k).
 
-    ``X`` is a (B, L) stack of series; slice b of the output equals the
-    fused per-series pipeline (``pairwise_distances`` + ``topk_select``
-    traced as one program) on ``X[b]``, with ``lax.top_k``'s
-    (value, index) tie order. Results are bit-invariant in B — the
-    per-series oracle is the B = 1 launch (see the section comment for
-    why the *lax.map* legacy route is the one that wobbles).
+    ``X`` is a (B, L) stack of series; slice b of the output matches the
+    fused per-series pipeline (``pairwise_distances`` + ``topk_select``)
+    on ``X[b]`` — indices exactly, with ``lax.top_k``'s (value, index)
+    tie order; distances to ~1 ULP (the per-series pipeline is a
+    different XLA program, see the section comment). Results are
+    **bit-invariant in B**: any batch decomposition of this program
+    yields identical tables — that is the resume/backoff contract.
     """
     X = jnp.asarray(X)
     if X.ndim != 2:

@@ -63,7 +63,15 @@ def test_is_oom_error_markers():
     assert runner_mod.is_oom_error(RuntimeError("RESOURCE_EXHAUSTED: foo"))
     assert runner_mod.is_oom_error(Exception("Out of memory allocating"))
     assert runner_mod.is_oom_error(MemoryError())
+    assert runner_mod.is_oom_error(
+        RuntimeError("Execution failed: RESOURCE_EXHAUSTED: oom"))
     assert not runner_mod.is_oom_error(ValueError("shape mismatch"))
+    # mentions memory mid-sentence ≠ an allocation failure: the anchored
+    # match must not burn backoff retries on these
+    assert not runner_mod.is_oom_error(
+        ValueError("option 'out of memory handler' is unknown"))
+    assert not runner_mod.is_oom_error(
+        RuntimeError("watchdog saw the job run out of memory budget"))
 
 
 def test_halved_batch_equalizes():
@@ -127,6 +135,29 @@ def test_stale_journal_refused(tmp_path):
         EDM(X * 1.5, EDMConfig(E=3, batch_libs=2)).xmap(run_dir=str(run))
     with pytest.raises(ValueError, match="DIFFERENT run"):
         EDM(X, EDMConfig(E=4, batch_libs=2)).xmap(run_dir=str(run))
+
+
+def test_changed_e_table_same_group_sizes_refused(tmp_path):
+    """The run key hashes the FULL per-series E table: permuting E_opt
+    while keeping group sizes (here {2:3, 3:3} both times) must key to
+    a different run, not silently resume the stale journal."""
+    X = _panel(6)
+    cfg = EDMConfig(E=3, batch_libs=2)
+    run = tmp_path / "run"
+    EDM(X, cfg).xmap(E_opt=[2, 2, 2, 3, 3, 3], run_dir=str(run))
+    with pytest.raises(ValueError, match="DIFFERENT run"):
+        EDM(X, cfg).xmap(E_opt=[3, 3, 3, 2, 2, 2], run_dir=str(run))
+
+
+def test_run_dir_single_writer_lock(tmp_path):
+    """A second live MatrixRunner on the same run_dir fails fast; the
+    lock releases on close() so a sequential resume still works."""
+    d = str(tmp_path / "run")
+    r1 = MatrixRunner(d, key="k", shape=(4, 4), groups_sig=[[2, 4]])
+    with pytest.raises(RuntimeError, match="locked by another live run"):
+        MatrixRunner(d, key="k", shape=(4, 4), groups_sig=[[2, 4]])
+    r1.close()
+    MatrixRunner(d, key="k", shape=(4, 4), groups_sig=[[2, 4]]).close()
 
 
 def test_preempt_then_resume_recomputes_no_committed_tile(
@@ -221,6 +252,27 @@ def test_non_oom_errors_propagate_unretried(tmp_path, monkeypatch):
     assert calls["n"] == 1
 
 
+def test_memory_mention_unretried_but_recorded(tmp_path, monkeypatch):
+    """An error that mentions memory without the anchored OOM markers
+    propagates on the first launch (no halve-B retries burned) and the
+    report's trail records it as unclassified."""
+    X = _panel()
+    calls = {"n": 0}
+
+    def broken(*a, **k):
+        calls["n"] += 1
+        raise ValueError("plugin 'out of memory watcher' failed to load")
+
+    monkeypatch.setattr(ccm, "_group_step", broken)
+    run = tmp_path / "run"
+    with pytest.raises(ValueError, match="failed to load"):
+        EDM(X, EDMConfig(E=3, batch_libs=2, oom_retries=4)).xmap(
+            run_dir=str(run))
+    assert calls["n"] == 1
+    trail = json.loads((run / "report.json").read_text())["oom_backoff"]
+    assert [t["action"] for t in trail] == ["unclassified"]
+
+
 def test_runner_refuses_finalize_with_missing_group(tmp_path):
     r = MatrixRunner(str(tmp_path / "run"), key="k", shape=(4, 4),
                      groups_sig=[[2, 4]])
@@ -265,6 +317,16 @@ def test_screen_panel_flags_nonfinite_and_constant():
     rep = screen_panel(X)
     assert [(r["index"], r["reason"]) for r in rep] == [
         (1, "1 non-finite values"), (3, "constant series")]
+
+
+def test_screen_panel_counts_and_all_inf_row():
+    X = np.asarray(_panel(4)).copy()
+    X[0, :] = np.inf                      # ptp is inf-inf: nonfinite wins
+    X[2, 3] = np.nan
+    X[2, 9] = np.nan
+    rep = screen_panel(X)
+    assert [(r["index"], r["reason"]) for r in rep] == [
+        (0, f"{X.shape[1]} non-finite values"), (2, "2 non-finite values")]
 
 
 def test_dataset_raise_names_series():

@@ -37,8 +37,13 @@ def test_ref_batch_matches_per_series_pipeline(rng, L, B, E, tau, k):
             X[b], E=E, tau=tau, k=kk, exclude_self=True, max_idx=Lp - 1)
         np.testing.assert_array_equal(np.asarray(i[b]), np.asarray(want_i),
                                       err_msg=f"series {b}")
-        np.testing.assert_array_equal(np.asarray(d[b]), np.asarray(want_d),
-                                      err_msg=f"series {b}")
+        # Distances: ~1 ULP, not bit-equal — the oracle is a DIFFERENT
+        # XLA program (2-D accumulation) and XLA CPU may contract it
+        # differently from the batched (B, Lp, Lp) stream at some
+        # shapes. Bit-equality is only contracted in B (next test).
+        np.testing.assert_allclose(np.asarray(d[b]), np.asarray(want_d),
+                                   rtol=2e-7, atol=2e-7,
+                                   err_msg=f"series {b}")
 
 
 def test_ref_batch_is_bit_invariant_in_B(rng):
