@@ -200,6 +200,57 @@ def _run_resume_overhead():
             f"(bound {RESUME_OVERHEAD_MAX:.0%})")
 
 
+#: Max tolerated pairs/s cost of telemetry with a sink attached (the
+#: ISSUE 7 overhead contract; the disabled path is counters-only dict
+#: ops and measures ~0%).
+TELEMETRY_OVERHEAD_MAX = 0.02
+
+
+def _run_telemetry_overhead():
+    """ISSUE 7 guard: an attached telemetry sink (spans + events live)
+    must cost <2% of the plain engine's throughput at a dataset-shaped
+    workload. The disabled-by-default path (no sink) shares the row as
+    the baseline — metric counters are on in BOTH runs, so the row
+    isolates exactly the span/event emission cost.
+    """
+    from repro import telemetry
+    from repro.edm import EDM, EDMConfig
+
+    N, L, E = DATASETS[0][2] + (DATASETS[0][3],)  # Fish1_Normo shape
+    panel = jax.numpy.asarray(tent_map_panel(N, L, seed=7))
+    cfg = EDMConfig(E=E, cache=False)  # direct engine both sides
+    EDM(panel, cfg).xmap()  # compile warmup (shared program)
+
+    def best_of(enabled, iters=3):
+        best = float("inf")
+        for _ in range(iters):
+            sess = EDM(panel, cfg)
+            rec = telemetry.Recorder()
+            if enabled:
+                telemetry.add_sink(rec)
+            try:
+                t0 = time.perf_counter()
+                sess.xmap()
+                best = min(best, time.perf_counter() - t0)
+            finally:
+                if enabled:
+                    telemetry.remove_sink(rec)
+        return best * 1e6
+
+    t_plain = best_of(False)
+    t_tel = best_of(True)
+    overhead = t_tel / t_plain - 1.0
+    pairs = N * N
+    row("ccm_telemetry_overhead", t_tel,
+        f"{pairs / (t_tel * 1e-6):.0f}pairs_per_s_telemetry_"
+        f"overhead{overhead * 100:+.1f}pct_vs_disabled")
+    if overhead > TELEMETRY_OVERHEAD_MAX:
+        raise SystemExit(
+            f"telemetry-overhead guard failed: an attached sink makes "
+            f"xmap {overhead:.1%} slower than the disabled path "
+            f"(bound {TELEMETRY_OVERHEAD_MAX:.0%})")
+
+
 def _committed_pairs_per_s() -> dict[str, float]:
     """Dataset pairs/s rows of the committed artifact (pre-overwrite).
 
@@ -228,6 +279,8 @@ def run():
     seed_pps = _run_group_engine(sweep_batch)
     if "--resume-overhead" in sys.argv:
         _run_resume_overhead()
+    if "--telemetry-overhead" in sys.argv:
+        _run_telemetry_overhead()
     for name, paper_shape, (N, L), E in DATASETS:
         panel = jax.numpy.asarray(tent_map_panel(N, L, seed=7))
         E_opt = np.full(N, E, np.int32)

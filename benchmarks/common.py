@@ -7,6 +7,8 @@ import time
 import jax
 import numpy as np
 
+from repro import telemetry
+
 
 def time_fn(fn, *args, warmup: int = 1, iters: int = 5,
             stat: str = "median") -> float:
@@ -33,9 +35,19 @@ _ROWS: list[dict] = []  # rows since the last drain (run.py → JSON artifact)
 
 
 def row(name: str, us: float, derived: str):
+    """Record one bench result row (CSV line + JSON artifact row).
+
+    Rows also publish through the telemetry registry — a
+    ``bench_<name>_us`` gauge plus a ``bench.row`` event — so bench runs
+    and production runs share one observability surface
+    (``telemetry.render_prom()`` exports both).
+    """
     print(f"{name},{us:.1f},{derived}")
     _ROWS.append({"name": name, "us_per_call": round(us, 1),
                   "derived": derived})
+    telemetry.gauge(f"bench_{name}_us").set(us)
+    telemetry.event("bench.row", row=name, us_per_call=round(us, 1),
+                    derived=derived)
 
 
 def drain_rows() -> list[dict]:

@@ -12,7 +12,13 @@ preemption ABI (exit code ``PREEMPTED_EXIT`` = 17, journal status
 * no journaled tile was recomputed (engine launch count = remaining
   tiles only).
 
-Run: ``PYTHONPATH=src python examples/resume_smoke.py``
+Run: ``PYTHONPATH=src python examples/resume_smoke.py [out_dir]``
+
+With ``out_dir``, the run dirs land at ``<out_dir>/run`` and
+``<out_dir>/fresh`` instead of tempdirs — CI passes one so it can
+upload ``<out_dir>/run/telemetry/events.jsonl`` as a build artifact.
+The smoke also asserts the telemetry span log exists, is schema-valid,
+and records both attempts of the interrupted run.
 """
 
 import json
@@ -59,8 +65,15 @@ def _child(mode: str, run_dir: str) -> subprocess.CompletedProcess:
 def main() -> None:
     from repro.edm import PREEMPTED_EXIT
 
-    run = tempfile.mkdtemp(prefix="resume_smoke_")
-    fresh = tempfile.mkdtemp(prefix="resume_smoke_ref_")
+    if len(sys.argv) > 1:
+        base = os.path.abspath(sys.argv[1])
+        run = os.path.join(base, "run")
+        fresh = os.path.join(base, "fresh")
+        os.makedirs(run, exist_ok=True)
+        os.makedirs(fresh, exist_ok=True)
+    else:
+        run = tempfile.mkdtemp(prefix="resume_smoke_")
+        fresh = tempfile.mkdtemp(prefix="resume_smoke_ref_")
 
     kill = _child("kill", run)
     assert kill.returncode == PREEMPTED_EXIT, (
@@ -89,6 +102,17 @@ def main() -> None:
     b = np.load(os.path.join(fresh, "fresh.npy"))
     assert np.array_equal(a, b), "resumed run is not bit-identical"
     print(f"resumed with {launches} launches (4 fresh), bit-identical")
+
+    from repro.telemetry.schema import validate_events_file
+    log = os.path.join(run, "telemetry", "events.jsonl")
+    assert os.path.exists(log), "journaled run wrote no telemetry log"
+    errs = validate_events_file(log)
+    assert not errs, "telemetry log fails schema:\n" + "\n".join(errs)
+    with open(log) as f:
+        names = [json.loads(line)["name"] for line in f]
+    assert "run.start" in names and "run.resume" in names, names
+    print(f"telemetry log schema-valid ({len(names)} events, "
+          f"both attempts recorded)")
     print("RESUME_SMOKE_OK")
 
 

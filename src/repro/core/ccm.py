@@ -14,12 +14,14 @@ series sharing that E (§3.4's grouping), fused Pearson ρ.
 from __future__ import annotations
 
 import functools
+import time
 import warnings
 
 import jax
 import jax.numpy as jnp
 import numpy as np
 
+from repro import telemetry
 from repro.core.embedding import embed_offset, num_embedded, pred_rows
 from repro.kernels import ops
 
@@ -343,31 +345,48 @@ def drive_batched(Nl: int, B: int, launch, *, start: int = 0,
     if start >= Nl:  # resumed run with no tiles left: nothing to drive
         return None
     out = pending = None
+    # Always-on per-launch metrics (dict/int ops, no sink required):
+    # end-to-end launch latency (dispatch → rows on host), pairs/s
+    # numerator, and the launch count. The tile *event* and the drive
+    # span are emitted only when a sink is live.
+    lat_hist = telemetry.histogram("edm_launch_latency_seconds")
+    pairs = telemetry.counter("edm_pairs_total")
+    launches = telemetry.counter("edm_launches")
 
     def land(pending):
         nonlocal out
-        (pa, pb), arr = pending
-        block = np.asarray(arr)
+        (pa, pb), arr, t_disp = pending
+        t_land = time.perf_counter()
+        block = np.asarray(arr)       # the device sync point
+        t_done = time.perf_counter()
         if out is None:
             out = np.empty((Nl,) + block.shape[1:], block.dtype)
         out[pa:pb] = block[: pb - pa]
+        lat_hist.observe(t_done - t_disp)
+        pairs.inc(int(block[: pb - pa].size))
+        if telemetry.active():
+            telemetry.event("engine.tile", a=pa, b=pb,
+                            latency_s=t_done - t_disp,
+                            sync_s=t_done - t_land)
         if on_block is not None:
             on_block(pa, pb, block[: pb - pa])
 
-    for a in range(start, Nl, B):
+    with telemetry.span("engine.drive", Nl=Nl, B=B, start=start):
+        for a in range(start, Nl, B):
+            if monitor is not None:
+                monitor.start()
+            launches.inc()
+            cur = launch(a, min(a + B, Nl), B)
+            if pending is not None:
+                land(pending)
+                if monitor is not None:
+                    monitor.stop(pending[0][0])
+            pending = ((a, min(a + B, Nl)), cur, time.perf_counter())
         if monitor is not None:
             monitor.start()
-        cur = launch(a, min(a + B, Nl), B)
-        if pending is not None:
-            land(pending)
-            if monitor is not None:
-                monitor.stop(pending[0][0])
-        pending = ((a, min(a + B, Nl)), cur)
-    if monitor is not None:
-        monitor.start()
-    land(pending)
-    if monitor is not None:
-        monitor.stop(pending[0][0])
+        land(pending)
+        if monitor is not None:
+            monitor.stop(pending[0][0])
     return out
 
 
@@ -380,8 +399,10 @@ def make_group_launch(libs, targets, *, E, tau, Tp, k, impl):
     closure is the resumable unit, not the whole group call.
     """
     impl_r = ops.resolve_impl(impl)
+    group_launches = telemetry.counter("edm_group_launches")
 
     def launch(a, b, B):
+        group_launches.inc()
         return _group_step(pad_batch(libs[a:b], B), targets, E=E, tau=tau,
                            Tp=Tp, k=k, impl=impl_r)
 
@@ -425,6 +446,7 @@ def ccm_group_batched(
     B = batch_libs if batch_libs is not None else auto_batch_libs(
         Lp, Nl, budget_mb)
     B = max(1, min(int(B), Nl))
+    telemetry.gauge("edm_batch_libs_effective").set(B)
     kk = E + 1 if k is None else int(k)
     launch = make_group_launch(libs, targets, E=E, tau=tau, Tp=Tp, k=kk,
                                impl=impl)

@@ -21,6 +21,8 @@ import signal
 import statistics
 import time
 
+from repro import telemetry
+
 
 class PreemptionGuard:
     """Converts SIGTERM/SIGINT into a polled "checkpoint and exit" flag.
@@ -55,24 +57,42 @@ class PreemptionGuard:
 
 
 class StragglerMonitor:
-    def __init__(self, threshold: float = 2.0, window: int = 50):
-        self.threshold = threshold
+    """Rolling-median launch timer; flags launches ``threshold ×`` slower.
+
+    ``threshold`` is configurable per run (``EDMConfig(
+    straggler_threshold=...)`` threads it through ``EDM.xmap(run_dir=
+    ...)``); ``clock`` is injectable so regression tests can replay a
+    synthetic timing sequence deterministically. Each flagged launch is
+    also published as a ``straggler.flag`` telemetry event and counted
+    in ``edm_stragglers_flagged``.
+    """
+
+    def __init__(self, threshold: float = 2.0, window: int = 50,
+                 clock=time.monotonic):
+        if not threshold > 0:
+            raise ValueError(f"threshold must be > 0, got {threshold}")
+        self.threshold = float(threshold)
         self.window = window
+        self.clock = clock
         self.times: list[float] = []
         self.flagged: list[tuple[int, float, float]] = []
         self._t0 = None
 
     def start(self):
-        self._t0 = time.monotonic()
+        self._t0 = self.clock()
 
     def stop(self, step: int) -> bool:
-        dt = time.monotonic() - self._t0
+        dt = self.clock() - self._t0
         hist = self.times[-self.window:]
         self.times.append(dt)
         if len(hist) >= 5:
             med = statistics.median(hist)
             if dt > self.threshold * med:
                 self.flagged.append((step, dt, med))
+                telemetry.counter("edm_stragglers_flagged").inc()
+                telemetry.event("straggler.flag", step=step, seconds=dt,
+                                rolling_median_s=med,
+                                threshold=self.threshold)
                 return True
         return False
 

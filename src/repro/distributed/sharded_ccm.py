@@ -29,6 +29,7 @@ import jax.numpy as jnp
 import numpy as np
 from jax.sharding import PartitionSpec as P
 
+from repro import telemetry
 from repro.core.embedding import embed_offset, num_embedded, pred_rows
 from repro.kernels import ops
 
@@ -190,17 +191,20 @@ def sharded_ccm_matrix(
             hard_max=num_embedded(L, Eb, tau) - 1 - max(Tp, 0), impl=impl,
             batch_libs=batch_libs, budget_mb=batch_budget_mb)
 
-    if E_opt is None:
-        mapped = _shard_map(
-            block_fn(E),
-            mesh=mesh,
-            in_specs=(P(lib_axes, None), P(tgt_axes, None)),
-            out_specs=P(lib_axes, tgt_axes),
-        )
-        return mapped(X_lib, X_tgt)
-    return _egrouped_matrix(X_lib, X_tgt, block_fn, E_opt=E_opt, mesh=mesh,
-                            lib_axes=lib_axes, tgt_axes=tgt_axes,
-                            layout=layout)
+    telemetry.counter("edm_sharded_launches").inc()
+    with telemetry.span("sharded.ccm_matrix", N_lib=int(X_lib.shape[0]),
+                        N_tgt=int(X_tgt.shape[0]), fixed_E=E is not None):
+        if E_opt is None:
+            mapped = _shard_map(
+                block_fn(E),
+                mesh=mesh,
+                in_specs=(P(lib_axes, None), P(tgt_axes, None)),
+                out_specs=P(lib_axes, tgt_axes),
+            )
+            return mapped(X_lib, X_tgt)
+        return _egrouped_matrix(X_lib, X_tgt, block_fn, E_opt=E_opt,
+                                mesh=mesh, lib_axes=lib_axes,
+                                tgt_axes=tgt_axes, layout=layout)
 
 
 def _egrouped_matrix(X_lib, X_tgt, block_fn, *, E_opt, mesh, lib_axes,
@@ -315,17 +319,21 @@ def sharded_ccm_convergence(
 
         return block
 
-    if E_opt is None:
-        mapped = _shard_map(
-            block_fn(E),
-            mesh=mesh,
-            in_specs=(P(lib_axes, None), P(tgt_axes, None)),
-            out_specs=P(None, lib_axes, tgt_axes),
-        )
-        return mapped(X_lib, X_tgt)
-    return _egrouped_matrix(X_lib, X_tgt, block_fn, E_opt=E_opt, mesh=mesh,
-                            lib_axes=lib_axes, tgt_axes=tgt_axes,
-                            curves=True)
+    telemetry.counter("edm_sharded_launches").inc()
+    with telemetry.span("sharded.ccm_convergence",
+                        N_lib=int(X_lib.shape[0]),
+                        N_tgt=int(X_tgt.shape[0])):
+        if E_opt is None:
+            mapped = _shard_map(
+                block_fn(E),
+                mesh=mesh,
+                in_specs=(P(lib_axes, None), P(tgt_axes, None)),
+                out_specs=P(None, lib_axes, tgt_axes),
+            )
+            return mapped(X_lib, X_tgt)
+        return _egrouped_matrix(X_lib, X_tgt, block_fn, E_opt=E_opt,
+                                mesh=mesh, lib_axes=lib_axes,
+                                tgt_axes=tgt_axes, curves=True)
 
 
 def sharded_optimal_E(
@@ -354,13 +362,16 @@ def sharded_optimal_E(
     def local(Xl):  # the local driver, verbatim, on the shard's series
         return optimal_E_batch(Xl, E_max=E_max, tau=tau, Tp=Tp, impl=impl)
 
-    mapped = _shard_map(
-        local,
-        mesh=mesh,
-        in_specs=(P(axes, None),),
-        out_specs=(P(axes), P(axes, None)),
-    )
-    return mapped(X)
+    telemetry.counter("edm_sharded_launches").inc()
+    with telemetry.span("sharded.optimal_E", N=int(X.shape[0]),
+                        E_max=E_max):
+        mapped = _shard_map(
+            local,
+            mesh=mesh,
+            in_specs=(P(axes, None),),
+            out_specs=(P(axes), P(axes, None)),
+        )
+        return mapped(X)
 
 
 def sharded_smap_theta(
@@ -392,13 +403,16 @@ def sharded_smap_theta(
         return smap_theta_sweep(Xl, E=E, tau=tau, Tp=Tp, thetas=thetas,
                                 ridge=ridge, impl=impl)
 
-    mapped = _shard_map(
-        local,
-        mesh=mesh,
-        in_specs=(P(axes, None),),
-        out_specs=P(axes, None),
-    )
-    return mapped(X)
+    telemetry.counter("edm_sharded_launches").inc()
+    with telemetry.span("sharded.smap_theta", N=int(X.shape[0]), E=E,
+                        thetas=len(thetas)):
+        mapped = _shard_map(
+            local,
+            mesh=mesh,
+            in_specs=(P(axes, None),),
+            out_specs=P(axes, None),
+        )
+        return mapped(X)
 
 
 def sharded_smap_matrix(
@@ -445,17 +459,20 @@ def sharded_smap_matrix(
                               theta=float(theta), ridge=ridge, impl=impl)
         return block
 
-    if E_opt is None:
-        mapped = _shard_map(
-            block_fn(E),
-            mesh=mesh,
-            in_specs=(P(lib_axes, None), P(tgt_axes, None)),
-            out_specs=P(lib_axes, tgt_axes),
-        )
-        return mapped(X_lib, X_tgt)
-    return _egrouped_matrix(X_lib, X_tgt, block_fn, E_opt=E_opt, mesh=mesh,
-                            lib_axes=lib_axes, tgt_axes=tgt_axes,
-                            layout=layout)
+    telemetry.counter("edm_sharded_launches").inc()
+    with telemetry.span("sharded.smap_matrix", N_lib=int(X_lib.shape[0]),
+                        N_tgt=int(X_tgt.shape[0]), fixed_E=E is not None):
+        if E_opt is None:
+            mapped = _shard_map(
+                block_fn(E),
+                mesh=mesh,
+                in_specs=(P(lib_axes, None), P(tgt_axes, None)),
+                out_specs=P(lib_axes, tgt_axes),
+            )
+            return mapped(X_lib, X_tgt)
+        return _egrouped_matrix(X_lib, X_tgt, block_fn, E_opt=E_opt,
+                                mesh=mesh, lib_axes=lib_axes,
+                                tgt_axes=tgt_axes, layout=layout)
 
 
 def ccm_step(X: jax.Array, *, E: int, tau: int, mesh: jax.sharding.Mesh,

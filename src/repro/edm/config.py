@@ -86,6 +86,12 @@ class EDMConfig:
               ``None`` auto-sizes ~8 tiles rounded to the lib-shard
               count. Local runs tile at the engine's launch batch B and
               ignore this.
+    straggler_threshold: a journaled run's ``StragglerMonitor`` flags a
+              tile launch slower than this multiple of the rolling
+              median launch time (flags land in the run report and as
+              ``straggler.flag`` telemetry events). Perf-observation
+              only — never part of the run key, so resuming with a
+              different threshold is legal.
     """
 
     E: int | None = None
@@ -111,6 +117,7 @@ class EDMConfig:
     checkpoint_every: int | None = None
     oom_retries: int = 4
     run_tile_rows: int | None = None
+    straggler_threshold: float = 2.0
 
     def __post_init__(self):
         if self.E is not None and self.E < 1:
@@ -166,6 +173,10 @@ class EDMConfig:
         if self.run_tile_rows is not None and self.run_tile_rows < 1:
             raise ValueError(
                 f"run_tile_rows must be >= 1, got {self.run_tile_rows}")
+        if not self.straggler_threshold > 0:
+            raise ValueError(
+                f"straggler_threshold must be > 0, got "
+                f"{self.straggler_threshold}")
         object.__setattr__(self, "lib_axes", tuple(self.lib_axes))
         object.__setattr__(self, "tgt_axes", tuple(self.tgt_axes))
         if self.mesh is not None:

@@ -39,6 +39,7 @@ import functools
 import jax
 import jax.numpy as jnp
 
+from repro import telemetry
 from repro.core.embedding import embed_offset, num_embedded, pred_rows
 from repro.kernels import ops
 
@@ -287,8 +288,10 @@ def make_master_group_launch(X, iM_E, targets, *, E, tau, Tp, k, impl):
     from repro.core.ccm import pad_batch
 
     impl_r = ops.resolve_impl(impl)
+    master_launches = telemetry.counter("edm_master_launches")
 
     def launch(a, b, B):
+        master_launches.inc()
         return _master_group_step(
             pad_batch(X[a:b], B), pad_batch(iM_E[a:b], B), targets, E=E,
             tau=tau, Tp=Tp, k=k, impl=impl_r)
@@ -338,6 +341,7 @@ def ccm_group_from_master_batched(X, iM_E, targets, *, E, tau, Tp, k, impl,
             Lp, Nl, budget_mb,
             per_series_bytes=master_group_batch_bytes(Lp, iM_E.shape[-1]))
     B = max(1, min(int(B), max(Nl, 1)))
+    telemetry.gauge("edm_batch_libs_effective").set(B)
     launch = make_master_group_launch(X, iM_E, targets, E=E, tau=tau, Tp=Tp,
                                       k=k, impl=impl)
     return drive_batched(Nl, B, launch)

@@ -63,9 +63,11 @@ import json
 import os
 import signal
 import time
+import uuid
 
 import numpy as np
 
+from repro import telemetry
 from repro.checkpoint import CheckpointManager
 from repro.core.ccm import drive_batched
 from repro.distributed.fault import (Heartbeat, PreemptionGuard,
@@ -196,7 +198,8 @@ class MatrixRunner:
     def __init__(self, run_dir: str, *, key: str,
                  shape: tuple[int, int], groups_sig,
                  keep: int = 3, checkpoint_every: int | None = None,
-                 oom_retries: int = 4, invalid_series=()):
+                 oom_retries: int = 4, invalid_series=(),
+                 straggler_threshold: float = 2.0):
         self.dir = os.path.abspath(run_dir)
         os.makedirs(self.dir, exist_ok=True)
         self.key = key
@@ -208,7 +211,7 @@ class MatrixRunner:
         self.ckpt = CheckpointManager(os.path.join(self.dir, "state"),
                                       keep=keep)
         self.heartbeat = Heartbeat(os.path.join(self.dir, "heartbeat"))
-        self.monitor = StragglerMonitor()
+        self.monitor = StragglerMonitor(threshold=straggler_threshold)
         self.oom_trail: list[dict] = []
         self.invalid_series = list(invalid_series)
         self.state = RunState(self.shape, len(self.groups_sig))
@@ -217,6 +220,11 @@ class MatrixRunner:
         self._t0 = time.monotonic()
         self._guard: PreemptionGuard | None = None
         self.resumed_rows = 0
+        #: this attempt's identity + the journal's prior-attempt trail —
+        #: the resume lineage the run report and inspector surface.
+        self.run_id = uuid.uuid4().hex[:12]
+        self.prior_attempts: list[dict] = []
+        self._sink: telemetry.JsonlSink | None = None
         self._lock = None
         self._acquire_lock()
         try:
@@ -224,6 +232,20 @@ class MatrixRunner:
         except BaseException:
             self._release_lock()
             raise
+        self._pairs_resumed = self._pairs_done()
+        if not self.complete:
+            # One JSONL event log per journaled run, shared across
+            # attempts (append mode): every span/event emitted anywhere
+            # in the process while this runner is live lands here.
+            self._sink = telemetry.JsonlSink(
+                os.path.join(self.dir, "telemetry", "events.jsonl"))
+            telemetry.add_sink(self._sink)
+            telemetry.counter("edm_runs_started").inc()
+            telemetry.event(
+                "run.resume" if self.resumed_rows else "run.start",
+                run_id=self.run_id, key=self.key,
+                rows_resumed=self.resumed_rows,
+                prior_run_ids=[a["run_id"] for a in self.prior_attempts])
 
     # --------------------------------------------------------------- lock
 
@@ -283,23 +305,45 @@ class MatrixRunner:
                 f"{list(self.shape)}) despite an identical key — the "
                 f"journal is corrupt; delete it and rerun")
         self._status = manifest.get("status", "running")
+        self.prior_attempts = list(manifest.get("attempts", []))
         step = self.ckpt.latest_step()
         if step is not None:
             self.state.load(self.ckpt.restore(self.state.tree(), step=step))
             self._since_snapshot = 0
             self.resumed_rows = self.state.rows_done
+        if not self.complete:
+            # a live attempt: reopen the manifest under this run_id
+            self._status = "running"
+            self._write_manifest()
+
+    def _pairs_done(self) -> int:
+        """Matrix cells committed so far (each group's done rows cover
+        only that group's member columns — not the full target axis)."""
+        return int(sum(self.state.done[g].sum() * n
+                       for g, (_, n) in enumerate(self.groups_sig)))
+
+    def _attempt_record(self) -> dict:
+        return {"run_id": self.run_id, "status": self._status,
+                "rows_resumed": self.resumed_rows,
+                "elapsed_s": round(time.monotonic() - self._t0, 3)}
 
     def _write_manifest(self) -> None:
         tmp = self._manifest_path + ".tmp"
         with open(tmp, "w") as f:
             json.dump({"key": self.key, "shape": list(self.shape),
                        "groups": self.groups_sig,
-                       "status": self._status}, f)
+                       "status": self._status,
+                       "attempts": (self.prior_attempts
+                                    + [self._attempt_record()])}, f)
         os.replace(tmp, self._manifest_path)
 
     def _snapshot(self) -> None:
         self.ckpt.save(self.state.rows_done, self.state.tree())
         self._since_snapshot = 0
+        # refresh the report on every snapshot so the run inspector
+        # (python -m repro.edm.inspect) sees live progress, not just the
+        # terminal states
+        self.write_report()
 
     @property
     def complete(self) -> bool:
@@ -321,6 +365,10 @@ class MatrixRunner:
         if self._guard is not None:
             self._guard.restore()
             self._guard = None
+        if self._sink is not None:
+            telemetry.remove_sink(self._sink)
+            self._sink.close()
+            self._sink = None
         self._release_lock()
 
     def __enter__(self) -> "MatrixRunner":
@@ -354,6 +402,9 @@ class MatrixRunner:
             done[a:b] = True
             self._tiles += 1
             self._since_snapshot += 1
+            telemetry.counter("edm_tiles_committed").inc()
+            telemetry.event("tile.commit", group=g, a=a, b=b,
+                            rows_done=self.state.rows_done)
             self.heartbeat.beat(self.state.rows_done)
             # auto cadence: ~8 snapshots per group — bounds journal I/O
             # to a few % of engine time on many-tile runs while a
@@ -397,15 +448,21 @@ class MatrixRunner:
                     {"group": g, "B": B, "to_B": newB, "action": "halve",
                      "attempt": attempts, "rows_remaining": remaining,
                      "error": str(e)[:200]})
+                telemetry.counter("edm_oom_backoffs").inc()
+                telemetry.event("oom.backoff", group=g, B=B, to_B=newB,
+                                rows_remaining=remaining)
                 attempts += 1
                 B = newB
 
     def _preempt(self):
         """Commit the journal and exit PREEMPTED_EXIT (restart-loop ABI)."""
-        self._snapshot()
         self._status = "preempted"
+        self._snapshot()
         self._write_manifest()
         self.write_report()
+        telemetry.counter("edm_runs_preempted").inc()
+        telemetry.event("run.preempt", run_id=self.run_id,
+                        rows_done=self.state.rows_done)
         self.close()
         raise SystemExit(PREEMPTED_EXIT)
 
@@ -415,10 +472,13 @@ class MatrixRunner:
             raise RuntimeError(
                 f"finalize() with {int((~self.state.done).sum())} rows "
                 f"not driven — a tile group was skipped")
-        self._snapshot()
         self._status = "complete"
+        self._snapshot()
         self._write_manifest()
         self.write_report()
+        telemetry.event("run.complete", run_id=self.run_id,
+                        rows_done=self.state.rows_done,
+                        tiles=self._tiles)
         self.close()
         return self.state.rho
 
@@ -426,17 +486,40 @@ class MatrixRunner:
 
     def write_report(self) -> dict:
         rows_total = int(self.state.done.size)
+        elapsed = time.monotonic() - self._t0
+        pairs_done = self._pairs_done()
+        pairs_this = pairs_done - self._pairs_resumed
+        prior_elapsed = sum(a.get("elapsed_s") or 0.0
+                            for a in self.prior_attempts)
         report = {
             "key": self.key,
             "status": self._status,
+            "run_id": self.run_id,
+            "prior_run_ids": [a.get("run_id")
+                              for a in self.prior_attempts],
             "rows_done": self.state.rows_done,
             "rows_total": rows_total,
             "rows_resumed": self.resumed_rows,
+            "rows_this_attempt": self.state.rows_done - self.resumed_rows,
             "tiles_committed": self._tiles,
-            "elapsed_s": round(time.monotonic() - self._t0, 3),
+            "pairs_done": pairs_done,
+            # this-attempt throughput and monotonic durations: elapsed_s
+            # is THIS attempt's monotonic clock; cumulative_elapsed_s
+            # adds every prior attempt's recorded duration so the
+            # inspector can show cumulative vs this-attempt progress.
+            "pairs_per_s": (round(pairs_this / elapsed, 3)
+                            if elapsed > 0 else None),
+            "tiles_per_s": (round(self._tiles / elapsed, 3)
+                            if elapsed > 0 else None),
+            "elapsed_s": round(elapsed, 3),
+            "cumulative_elapsed_s": round(prior_elapsed + elapsed, 3),
             "stragglers": self.monitor.report(),
             "oom_backoff": self.oom_trail,
             "invalid_series": self.invalid_series,
+            # the whole process-local metrics registry, Prometheus text
+            # exposition format (edm_pairs_total, the per-launch latency
+            # histogram, cache/run counters, ...)
+            "metrics_prom": telemetry.render_prom(),
         }
         tmp = os.path.join(self.dir, "report.json.tmp")
         with open(tmp, "w") as f:

@@ -35,6 +35,7 @@ import dataclasses
 import jax.numpy as jnp
 import numpy as np
 
+from repro import telemetry
 from repro.edm.config import EDMConfig
 from repro.edm.dataset import Dataset
 from repro.edm.plan import (
@@ -102,6 +103,21 @@ class EDM:
         self.stats: collections.Counter = collections.Counter()
         self._queue: list[tuple[int, jnp.ndarray, tuple[str, ...]]] = []
         self._next_ticket = 0
+
+    def _bump(self, key: str, n: int = 1) -> None:
+        """Session cache/run statistic: the in-session ``stats`` Counter
+        AND the process-wide telemetry counter (``edm_<key>``) — the
+        latter is the supported observation API
+        (``telemetry.Recorder.counter_delta``)."""
+        self.stats[key] += n
+        telemetry.counter(f"edm_{key}").inc(n)
+
+    def _plan_event(self, task: str) -> None:
+        """Emit the resolved Plan as a ``plan.execute`` event (sinks
+        only — ``plan()`` itself is too costly for the disabled path)."""
+        if telemetry.active():
+            telemetry.event("plan.execute", task=task,
+                            plan=self.plan(task).describe())
 
     # ---------------------------------------------------- validity masking
     #
@@ -240,12 +256,14 @@ class EDM:
         c = self.config
         hit = self._cache.get("master")
         if hit is not None and hit[3] >= E_levels:
-            self.stats["knn_master_hits"] += 1
+            self._bump("knn_master_hits")
             return hit
         k_m = max(E_levels + 1, c.k or 0) + c.slack
-        dM, iM = panel_master(self.data.panel, E_max=E_levels, tau=c.tau,
-                              k=k_m, impl=self._impl)
-        self.stats["knn_master_builds"] += 1
+        with telemetry.span("session.master_build", E_levels=E_levels,
+                            k_master=k_m, N=self.data.N):
+            dM, iM = panel_master(self.data.panel, E_max=E_levels,
+                                  tau=c.tau, k=k_m, impl=self._impl)
+        self._bump("knn_master_builds")
         hit = self._cache["master"] = (dM, iM, k_m, E_levels)
         return hit
 
@@ -255,7 +273,7 @@ class EDM:
         if hit is None:
             hit = self._cache["rho"] = self._run_optimal_E()
         else:
-            self.stats["rho_hits"] += 1
+            self._bump("rho_hits")
         return hit
 
     # ---------------------------------------------------------- optimal E
@@ -302,7 +320,10 @@ class EDM:
         ``simplex``/``smap``/``ccm``/``xmap`` calls reuse both the result
         and (locally) the kNN master tables built here.
         """
-        E_opt, rho = self._rho()
+        with telemetry.span("session.optimal_E", E_max=self.config.E_max,
+                            N=self.data.N):
+            self._plan_event("optimal_E")
+            E_opt, rho = self._rho()
         return E_opt.copy(), rho.copy()
 
     # ------------------------------------------------------------ simplex
@@ -316,18 +337,21 @@ class EDM:
         """
         c = self.config
         E = E if E is not None else c.E
-        if E is None:
-            E_opt, rho = self._rho()
-            return rho[np.arange(self.data.N), E_opt - 1].copy()
-        if c.cache and c.mesh is None:
-            _, iM, _, _ = self._master(E)
-            return self._mask_rows(np.asarray(simplex_skill_from_master(
-                self.data.panel, iM[:, E - 1], E=E, tau=c.tau, Tp=c.Tp,
-                k=c.k_for(E), impl=self._impl)))
-        from repro.core.simplex import simplex_skill
-        return self._mask_rows(np.asarray([
-            simplex_skill(x, E=E, tau=c.tau, Tp=c.Tp, impl=self._impl)
-            for x in self.data.panel]))
+        with telemetry.span("session.simplex", N=self.data.N,
+                            E=E or "per-series"):
+            if E is None:
+                E_opt, rho = self._rho()
+                return rho[np.arange(self.data.N), E_opt - 1].copy()
+            if c.cache and c.mesh is None:
+                _, iM, _, _ = self._master(E)
+                return self._mask_rows(np.asarray(
+                    simplex_skill_from_master(
+                        self.data.panel, iM[:, E - 1], E=E, tau=c.tau,
+                        Tp=c.Tp, k=c.k_for(E), impl=self._impl)))
+            from repro.core.simplex import simplex_skill
+            return self._mask_rows(np.asarray([
+                simplex_skill(x, E=E, tau=c.tau, Tp=c.Tp, impl=self._impl)
+                for x in self.data.panel]))
 
     # -------------------------------------------------------------- smap
 
@@ -342,15 +366,17 @@ class EDM:
         thetas = c.thetas if thetas is None else tuple(
             float(t) for t in thetas)
         E = E if E is not None else c.E
-        if E is not None:
-            groups = {int(E): np.arange(self.data.N)}
-        else:
-            E_opt, _ = self._rho()
-            _, groups = _e_groups(E_opt, self.data.N)
-        out = np.zeros((self.data.N, len(thetas)), np.float32)
-        for Eg, members in groups.items():
-            out[members] = self._smap_group_sweep(Eg, members, thetas)
-        return self._mask_rows(out)
+        with telemetry.span("session.smap", N=self.data.N,
+                            E=E or "per-series", thetas=len(thetas)):
+            if E is not None:
+                groups = {int(E): np.arange(self.data.N)}
+            else:
+                E_opt, _ = self._rho()
+                _, groups = _e_groups(E_opt, self.data.N)
+            out = np.zeros((self.data.N, len(thetas)), np.float32)
+            for Eg, members in groups.items():
+                out[members] = self._smap_group_sweep(Eg, members, thetas)
+            return self._mask_rows(out)
 
     def _smap_group_sweep(self, E, members, thetas) -> np.ndarray:
         c = self.config
@@ -405,6 +431,13 @@ class EDM:
                 return np.float32(np.nan)
             return np.full(len(tuple(lib_sizes)), np.nan, np.float32)
         E = self._resolve_pair_E(ti, E)
+        with telemetry.span("session.ccm", lib=li, target=ti, E=E,
+                            sweep=lib_sizes is not None):
+            self._plan_event("ccm")
+            return self._ccm_pair(li, ti, E, lib_sizes)
+
+    def _ccm_pair(self, li, ti, E, lib_sizes) -> np.ndarray:
+        c = self.config
         if lib_sizes is None:
             # Single full-library cap through the same curves path a
             # sweep uses: a covering cached master supplies the
@@ -439,7 +472,7 @@ class EDM:
         if (c.cache and c.mesh is None and hit is not None
                 and hit[3] >= E
                 and master_slack_covers(caps, Lp=Lp, k=k, k_master=hit[2])):
-            self.stats["knn_master_hits"] += 1
+            self._bump("knn_master_hits")
             curves = ccm_convergence_from_master(
                 x, hit[1][li, E - 1], targets, E=E, tau=c.tau,
                 Tp=c.Tp_cross, caps=caps, k=k, impl=self._impl)
@@ -482,21 +515,24 @@ class EDM:
                 np.full((S, num_surrogates), np.nan, np.float32),
                 np.full(S, np.nan), method, num_surrogates)
         E = self._resolve_pair_E(ti, E)
-        y = np.asarray(self.data.panel[ti])
-        surr = make_surrogates(y, num_surrogates, method=method,
-                               period=period, seed=seed)
-        targets = jnp.concatenate(
-            [jnp.asarray(y)[None, :], jnp.asarray(surr)], axis=0)
-        squeeze = lib_sizes is None
-        if squeeze:  # one cap: the full usable library
-            Lp = num_embedded(self.data.L, E, c.tau)
-            lib_sizes = (Lp - max(c.Tp_cross, 0),)
-        curves = self._ccm_curves(li, targets, E=E, lib_sizes=lib_sizes)
+        with telemetry.span("session.surrogate_test", lib=li, target=ti,
+                            E=E, M=num_surrogates, method=method):
+            y = np.asarray(self.data.panel[ti])
+            surr = make_surrogates(y, num_surrogates, method=method,
+                                   period=period, seed=seed)
+            targets = jnp.concatenate(
+                [jnp.asarray(y)[None, :], jnp.asarray(surr)], axis=0)
+            squeeze = lib_sizes is None
+            if squeeze:  # one cap: the full usable library
+                Lp = num_embedded(self.data.L, E, c.tau)
+                lib_sizes = (Lp - max(c.Tp_cross, 0),)
+            curves = self._ccm_curves(li, targets, E=E,
+                                      lib_sizes=lib_sizes)
         rho = curves[:, 0]
         null = curves[:, 1:]
         pval = ((1.0 + (null >= rho[:, None]).sum(axis=1))
                 / (1.0 + num_surrogates))
-        self.stats["surrogate_tests"] += 1
+        self._bump("surrogate_tests")
         if squeeze:
             return SurrogateResult(float(rho[0]), null[0], float(pval[0]),
                                    method, num_surrogates)
@@ -541,13 +577,19 @@ class EDM:
             raise ValueError(f"unknown xmap method {method!r}")
         c = self.config
         N = self.data.N
-        if E_opt is None:
-            E_opt = np.full(N, c.E, np.int32) if c.E else self._rho()[0]
-        E_opt, groups = _e_groups(E_opt, N)
-        if c.mesh is not None:
-            rho = self._xmap_sharded(method, E_opt, theta, run_dir)
-        else:
-            rho = self._xmap_local(method, groups, theta, run_dir, E_opt)
+        with telemetry.span("session.xmap", method=method, N=N,
+                            journaled=run_dir is not None,
+                            placement=("sharded" if c.mesh is not None
+                                       else "local")):
+            self._plan_event("xmap")
+            if E_opt is None:
+                E_opt = np.full(N, c.E, np.int32) if c.E else self._rho()[0]
+            E_opt, groups = _e_groups(E_opt, N)
+            if c.mesh is not None:
+                rho = self._xmap_sharded(method, E_opt, theta, run_dir)
+            else:
+                rho = self._xmap_local(method, groups, theta, run_dir,
+                                       E_opt)
         return self._mask_matrix(rho)
 
     def _xmap_group_launch(self, method, E, members, theta, iM):
@@ -627,7 +669,7 @@ class EDM:
         else:
             iM = None
             if method == "simplex" and c.cache:
-                self.stats["xmap_direct_runs"] += 1
+                self._bump("xmap_direct_runs")
         entries = [
             (E, members) + self._xmap_group_launch(
                 method, E, members, theta, iM)
@@ -702,18 +744,19 @@ class EDM:
             run_dir, key=key, shape=shape, groups_sig=groups_sig,
             keep=c.checkpoint_keep, checkpoint_every=c.checkpoint_every,
             oom_retries=c.oom_retries,
-            invalid_series=self.data.invalid_report)
+            invalid_series=self.data.invalid_report,
+            straggler_threshold=c.straggler_threshold)
         if runner.complete:
             # Finished journal: the stored matrix IS the result — zero
             # engine launches (restart loops may re-run unconditionally).
-            self.stats["runs_short_circuited"] += 1
+            self._bump("runs_short_circuited")
             runner.close()  # release the run_dir lock
             return runner.result()
         with runner:
             for g, (E, members, launch, B) in enumerate(entries):
                 runner.drive_group(g, launch, B, members)
             out = runner.finalize()
-        self.stats["rows_resumed"] += runner.resumed_rows
+        self._bump("rows_resumed", runner.resumed_rows)
         return out
 
     # ------------------------------------------------------ batched entry
@@ -749,6 +792,10 @@ class EDM:
         assembles batch i's block (``core.ccm.drive_batched``).
         """
         queue, self._queue = self._queue, []
+        with telemetry.span("session.flush", panels=len(queue)):
+            return self._flush_batches(queue)
+
+    def _flush_batches(self, queue) -> dict[int, PanelResult]:
         results = {t: PanelResult() for t, _, _ in queue}
         batches: dict[tuple, list] = collections.defaultdict(list)
         for ticket, panel, tasks in queue:
@@ -780,5 +827,5 @@ class EDM:
                         psess._cache["master"] = (dM[a:b], iM[a:b], k_m, lv)
                     results[ticket].xmap = psess.xmap(
                         E_opt=None if E_all is None else E_all[a:b])
-            self.stats["panels_flushed"] += len(items)
+            self._bump("panels_flushed", len(items))
         return results

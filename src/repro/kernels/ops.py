@@ -25,6 +25,7 @@ import functools
 import jax
 import jax.numpy as jnp
 
+from repro import telemetry
 from repro.kernels import lookup as _lookup_k
 from repro.kernels import pairwise_dist as _pairwise_k
 from repro.kernels import ref as _ref
@@ -92,6 +93,25 @@ def resolve_impl(impl: str = "auto") -> str:
 _resolve = resolve_impl
 
 
+def _tel(op: str, impl: str, **attrs) -> None:
+    """Per-dispatch telemetry: an ``edm_ops_<op>_calls`` counter bump
+    plus (when a sink is live) an ``ops.<op>`` event with static
+    shape/impl attrs.
+
+    Counters, not timed spans, on purpose: these dispatchers run at
+    *trace* time inside jitted programs, where ``block_until_ready``
+    cannot fence a tracer — a wall-time span here would measure trace
+    overhead once and nothing on cached calls. Timed spans live at the
+    driver level (``core.ccm.drive_batched``), where tile landings are
+    real device syncs. A dispatch count therefore means "this op was
+    traced", which is exactly the invocation-count contract the session
+    cache tests assert (they clear jit caches first).
+    """
+    telemetry.counter(f"edm_ops_{op}_calls").inc()
+    if telemetry.active():
+        telemetry.event(f"ops.{op}", impl=impl, **attrs)
+
+
 def pairwise_distances(
     x: jax.Array,
     *,
@@ -103,6 +123,7 @@ def pairwise_distances(
 ) -> jax.Array:
     """(Lp, Lp) squared distances of the delay embedding (fused, Alg. 1)."""
     impl = _resolve(impl)
+    _tel("pairwise_distances", impl, E=E, tau=tau, L=int(x.shape[-1]))
     if impl == "ref":
         return _ref.pairwise_distances(x, E=E, tau=tau)
     return _pairwise_k.pairwise_distances(
@@ -122,6 +143,7 @@ def topk_select(
 ) -> tuple[jax.Array, jax.Array]:
     """k nearest per row → (Euclidean dists, int32 idx), ascending (Alg. 2)."""
     impl = _resolve(impl)
+    _tel("topk_select", impl, k=k, Lp=int(D.shape[-1]))
     if impl == "ref":
         return _ref.topk_select(D, k=k, exclude_self=exclude_self,
                                 max_idx=max_idx)
@@ -150,6 +172,8 @@ def topk_select_sizes(
     full re-scans of the distance matrix (see kernels/topk.py).
     """
     impl = _resolve(impl)
+    _tel("topk_select_sizes", impl, k=k, sizes=len(max_idxs),
+         Lp=int(D.shape[-1]))
     if impl == "ref":
         return _ref.topk_select_sizes(
             D, k=k, max_idxs=tuple(int(m) for m in max_idxs),
@@ -181,6 +205,7 @@ def all_knn(
     """
     k = E + 1 if k is None else k
     impl_r = _resolve(impl)
+    _tel("all_knn", impl_r, E=E, k=k, fused=fused, L=int(x.shape[-1]))
     if fused and impl_r != "ref":
         from repro.kernels.knn_fused import all_knn_fused
         return all_knn_fused(
@@ -212,6 +237,8 @@ def all_knn_batch(
     kernels/knn_batch.py and ``ref.all_knn_batch``.
     """
     impl = _resolve(impl)
+    _tel("all_knn_batch", impl, E=E, B=int(X.shape[0]),
+         L=int(X.shape[-1]))
     if impl == "ref":
         return _ref.all_knn_batch(
             X, E=E, tau=tau, k=k, exclude_self=exclude_self, max_idx=max_idx)
@@ -241,6 +268,7 @@ def all_knn_multi_e(
     rank-1 lag term collapses it (see kernels/knn_multi_e.py).
     """
     impl = _resolve(impl)
+    _tel("all_knn_multi_e", impl, E_max=E_max, L=int(x.shape[-1]))
     if impl == "ref":
         return _ref.all_knn_multi_e(
             x, E_max=E_max, tau=tau, k=k, exclude_self=exclude_self,
@@ -274,6 +302,7 @@ def smap_gram(
     """
     impl = _resolve(impl)
     thetas = tuple(float(t) for t in thetas)
+    _tel("smap_gram", impl, E=E, thetas=len(thetas), L=int(x.shape[-1]))
     if impl == "ref":
         return _ref.smap_gram(x, Y, E=E, tau=tau, Tp=Tp, thetas=thetas,
                               exclude_self=exclude_self)
@@ -294,6 +323,7 @@ def lookup(
 ) -> jax.Array:
     """Batched simplex lookup → (N, Lp) predictions (Alg. 3)."""
     impl = _resolve(impl)
+    _tel("lookup", impl, N=int(Y.shape[0]))
     if impl == "ref":
         return _ref.lookup(Y, idx, w, offset=offset)
     return _lookup_k.lookup(Y, idx, w, offset=offset, block=block,
@@ -311,6 +341,7 @@ def lookup_rho(
 ) -> jax.Array:
     """Fused lookup + Pearson ρ per target → (N,) (paper §3.4 fused path)."""
     impl = _resolve(impl)
+    _tel("lookup_rho", impl, N=int(Y.shape[0]))
     if impl == "ref":
         return _ref.lookup_rho(Y, idx, w, offset=offset)
     return _lookup_k.lookup_rho(Y, idx, w, offset=offset, block=block,

@@ -6,7 +6,7 @@ import numpy as np
 import jax.numpy as jnp
 import pytest
 
-from repro import core
+from repro import core, telemetry
 from repro.core import ccm
 from repro.data import timeseries as ts
 from repro.edm import EDM, EDMConfig
@@ -99,58 +99,43 @@ def test_master_batched_bit_invariant_and_matches_per_series():
 # ------------------------------------------------------ launch counting
 
 
-def test_engine_launch_count_ceil_nl_over_b(monkeypatch):
+def test_engine_launch_count_ceil_nl_over_b():
     """ceil(Nl/B) engine launches, exactly — the padded ragged final
-    batch rides in the last launch, never a retrace or an extra step."""
+    batch rides in the last launch, never a retrace or an extra step.
+    Counted via the ``edm_group_launches`` telemetry counter the launch
+    closure increments at runtime (no cache clear needed — launches are
+    per call, not per trace)."""
     X = _panel(7)
-    calls = {"n": 0}
-    real = ccm._group_step
-
-    def counting(*a, **k):
-        calls["n"] += 1
-        return real(*a, **k)
-
-    monkeypatch.setattr(ccm, "_group_step", counting)
+    launches = telemetry.counter("edm_group_launches")
+    base = launches.value
     core.ccm_group_batched(X, X, E=3, impl="ref", batch_libs=3)
-    assert calls["n"] == 3  # ceil(7/3)
-    calls["n"] = 0
+    assert launches.value - base == 3  # ceil(7/3)
+    base = launches.value
     core.ccm_group_batched(X, X, E=3, impl="ref", batch_libs=7)
-    assert calls["n"] == 1
-    calls["n"] = 0
+    assert launches.value - base == 1
+    base = launches.value
     core.ccm_group_batched(X, X, E=3, impl="ref", batch_libs=100)  # clamped
-    assert calls["n"] == 1
+    assert launches.value - base == 1
 
 
-def test_session_xmap_launch_count(monkeypatch):
+def test_session_xmap_launch_count():
     """The session's xmap drives each E-group with ceil(N/B) launches of
     the right engine: master-derived when the cached master covers the
-    group, direct otherwise."""
+    group, direct otherwise. Asserted via Recorder counter deltas on the
+    two launch counters."""
     X = _panel(6)
-    counts = {"direct": 0, "master": 0}
-    real_g, real_m = ccm._group_step, edm_plan._master_group_step
-
-    def count_g(*a, **k):
-        counts["direct"] += 1
-        return real_g(*a, **k)
-
-    def count_m(*a, **k):
-        counts["master"] += 1
-        return real_m(*a, **k)
-
-    monkeypatch.setattr(ccm, "_group_step", count_g)
-    monkeypatch.setattr(edm_plan, "_master_group_step", count_m)
-
-    sess = EDM(X, EDMConfig(E=3, batch_libs=2))  # fixed E: one group
-    sess.xmap()
-    assert counts == {"direct": 3, "master": 0}  # ceil(6/2), no master built
+    with telemetry.record() as rec:
+        EDM(X, EDMConfig(E=3, batch_libs=2)).xmap()  # fixed E: one group
+    assert rec.counter_delta("edm_group_launches") == 3  # ceil(6/2)
+    assert rec.counter_delta("edm_master_launches") == 0  # no master built
 
     sess2 = EDM(X, EDMConfig(E_max=4, batch_libs=2))
     sess2.optimal_E()  # builds the master the xmap then derives from
-    counts.update(direct=0, master=0)
     groups = len(set(sess2.optimal_E()[0].tolist()))
-    sess2.xmap()
-    assert counts["direct"] == 0
-    assert counts["master"] == 3 * groups  # ceil(6/2) per E-group
+    with telemetry.record() as rec2:
+        sess2.xmap()
+    assert rec2.counter_delta("edm_group_launches") == 0
+    assert rec2.counter_delta("edm_master_launches") == 3 * groups
 
 
 def test_repeat_xmap_amortizes_via_master_on_second_call():

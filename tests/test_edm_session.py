@@ -12,7 +12,7 @@ import jax.numpy as jnp
 import numpy as np
 import pytest
 
-from repro import core
+from repro import core, telemetry
 from repro.data import timeseries as ts
 from repro.edm import EDM, EDMConfig
 from repro.kernels import ops
@@ -153,61 +153,43 @@ def test_legacy_matrix_wrappers_delegate():
 # ------------------------------------------------- cached-kNN reuse
 
 
-def test_knn_engine_runs_exactly_once_per_panel(monkeypatch):
+def test_knn_engine_runs_exactly_once_per_panel():
     """Regression for the facade's core promise: optimal_E → simplex →
     xmap on one panel trace the multi-E kNN engine exactly once, and the
-    per-E pairwise pipeline never runs at all."""
+    per-E pairwise pipeline never runs at all. Counted via the telemetry
+    dispatch counters (trace-time increments, hence the cache clear);
+    test_ops_counter_matches_monkeypatch_shim guards that these counters
+    track real dispatches."""
     X = _panel()
-    counts = {"multi_e": 0, "pairwise": 0}
-    real_multi, real_pair = ops.all_knn_multi_e, ops.pairwise_distances
-
-    def count_multi(*a, **k):
-        counts["multi_e"] += 1
-        return real_multi(*a, **k)
-
-    def count_pair(*a, **k):
-        counts["pairwise"] += 1
-        return real_pair(*a, **k)
-
-    monkeypatch.setattr(ops, "all_knn_multi_e", count_multi)
-    monkeypatch.setattr(ops, "pairwise_distances", count_pair)
-    jax.clear_caches()  # shim counts trace-time calls; drop stale traces
-
-    sess = EDM(X, EDMConfig(E_max=5))
-    sess.optimal_E()
-    sess.simplex(E=2)
-    sess.simplex()
-    sess.xmap()
-    sess.optimal_E()
-    assert counts["multi_e"] == 1, counts
-    assert counts["pairwise"] == 0, counts
+    jax.clear_caches()  # ops counters count trace-time dispatches
+    with telemetry.record() as rec:
+        sess = EDM(X, EDMConfig(E_max=5))
+        sess.optimal_E()
+        sess.simplex(E=2)
+        sess.simplex()
+        sess.xmap()
+        sess.optimal_E()
+    assert rec.counter_delta("edm_ops_all_knn_multi_e_calls") == 1
+    assert rec.counter_delta("edm_ops_pairwise_distances_calls") == 0
+    assert rec.counter_delta("edm_knn_master_builds") == 1
+    assert rec.counter_delta("edm_knn_master_hits") >= 2
     assert sess.stats["knn_master_builds"] == 1
     assert sess.stats["knn_master_hits"] >= 2
     assert sess.stats["rho_hits"] >= 2
 
 
-def test_cache_disabled_falls_back_to_legacy_paths(monkeypatch):
+def test_cache_disabled_falls_back_to_legacy_paths():
     """cache=False must recompute neighbors (direct batched engine), not
     read a master — and still agree with the cached session."""
     X = _panel(4)
-    counts = {"batch": 0, "multi_e": 0}
-    real_batch, real_multi = ops.all_knn_batch, ops.all_knn_multi_e
-
-    def count_batch(*a, **k):
-        counts["batch"] += 1
-        return real_batch(*a, **k)
-
-    def count_multi(*a, **k):
-        counts["multi_e"] += 1
-        return real_multi(*a, **k)
-
-    monkeypatch.setattr(ops, "all_knn_batch", count_batch)
-    monkeypatch.setattr(ops, "all_knn_multi_e", count_multi)
     jax.clear_caches()
-    sess = EDM(X, EDMConfig(E_max=4, cache=False))
-    E_opt, rho = sess.optimal_E()
-    got = sess.xmap()
-    assert counts["batch"] >= 1  # direct engine recomputes distances
+    with telemetry.record() as rec:
+        sess = EDM(X, EDMConfig(E_max=4, cache=False))
+        E_opt, rho = sess.optimal_E()
+        got = sess.xmap()
+    # direct engine recomputes distances, never builds a master
+    assert rec.counter_delta("edm_ops_all_knn_batch_calls") >= 1
+    assert rec.counter_delta("edm_knn_master_builds") == 0
     E_l, rho_l = core.optimal_E_batch(X, E_max=4)
     np.testing.assert_array_equal(E_opt, np.asarray(E_l))
     np.testing.assert_array_equal(got, EDM(X, EDMConfig(E_max=4)).xmap())
@@ -246,25 +228,22 @@ def test_fixed_e_session_on_short_panel():
     assert sess._cache["master"][3] == 2  # built at level E, not E_max
 
 
-def test_flush_xmap_reuses_batch_session_state(monkeypatch):
+def test_flush_xmap_reuses_batch_session_state():
     """Regression: flush()'s xmap branch slices the batch session's
     E_opt and kNN master into the per-panel sessions instead of
     re-running the multi-E engine per queued panel."""
     X = _panel(6)
-    counts = {"multi_e": 0}
-    real_multi = ops.all_knn_multi_e
-
-    def count_multi(*a, **k):
-        counts["multi_e"] += 1
-        return real_multi(*a, **k)
-
-    monkeypatch.setattr(ops, "all_knn_multi_e", count_multi)
     jax.clear_caches()
-    sess = EDM(X, EDMConfig(E_max=4))
-    t1 = sess.submit_panel(X[:3], tasks=("optimal_E", "xmap"))
-    t2 = sess.submit_panel(X[3:], tasks=("optimal_E", "xmap"))
-    res = sess.flush()
-    assert counts["multi_e"] == 1  # one batch master, panels get slices
+    with telemetry.record() as rec:
+        sess = EDM(X, EDMConfig(E_max=4))
+        t1 = sess.submit_panel(X[:3], tasks=("optimal_E", "xmap"))
+        t2 = sess.submit_panel(X[3:], tasks=("optimal_E", "xmap"))
+        res = sess.flush()
+    # one batch master, panels get slices
+    assert rec.counter_delta("edm_ops_all_knn_multi_e_calls") == 1
+    assert rec.counter_delta("edm_panels_flushed") == 2
+    assert [s["name"] for s in rec.spans("session.flush")] \
+        == ["session.flush"]
     for ticket, sl in ((t1, slice(0, 3)), (t2, slice(3, 6))):
         np.testing.assert_array_equal(
             res[ticket].xmap, EDM(X[sl], EDMConfig(E_max=4)).xmap())
@@ -273,42 +252,62 @@ def test_flush_xmap_reuses_batch_session_state(monkeypatch):
 # ----------------------------------------- ccm convergence + surrogates
 
 
-def test_ccm_lib_sizes_runs_knn_engine_once_per_panel(monkeypatch):
+def test_ccm_lib_sizes_runs_knn_engine_once_per_panel():
     """Acceptance regression for ISSUE 4: a convergence sweep never
     re-runs kNN per size. With the master's slack covering every cap the
     sweep derives tables from the ONE master pass (no pairwise, no
     top-k at all); smaller caps fall back to exactly one pairwise +
-    one multi-cap streaming top-k, regardless of |sizes|."""
+    one multi-cap streaming top-k, regardless of |sizes|. Staged deltas
+    read the ops dispatch counters directly."""
     X = _panel()
-    counts = {"multi_e": 0, "pairwise": 0, "topk": 0, "topk_sizes": 0}
-    reals = (ops.all_knn_multi_e, ops.pairwise_distances, ops.topk_select,
-             ops.topk_select_sizes)
+    names = {"multi_e": "edm_ops_all_knn_multi_e_calls",
+             "pairwise": "edm_ops_pairwise_distances_calls",
+             "topk": "edm_ops_topk_select_calls",
+             "topk_sizes": "edm_ops_topk_select_sizes_calls"}
 
-    def shim(name, fn):
-        def wrapper(*a, **k):
-            counts[name] += 1
-            return fn(*a, **k)
-        return wrapper
+    def snap():
+        return {k: telemetry.counter(n).value for k, n in names.items()}
 
-    monkeypatch.setattr(ops, "all_knn_multi_e", shim("multi_e", reals[0]))
-    monkeypatch.setattr(ops, "pairwise_distances", shim("pairwise", reals[1]))
-    monkeypatch.setattr(ops, "topk_select", shim("topk", reals[2]))
-    monkeypatch.setattr(ops, "topk_select_sizes",
-                        shim("topk_sizes", reals[3]))
+    def delta(base):
+        now = snap()
+        return {k: now[k] - base[k] for k in names}
+
     jax.clear_caches()
-
+    base = snap()
     sess = EDM(X, EDMConfig(E_max=4, extra_slack=60))
     sess.optimal_E()
-    assert counts["multi_e"] == 1
+    assert delta(base)["multi_e"] == 1
     # slack covers caps down to Lp-1-60: master-derived, zero kNN work
     sess.ccm(0, 1, lib_sizes=(190, 210, 239))
-    assert counts == {"multi_e": 1, "pairwise": 0, "topk": 0,
-                      "topk_sizes": 0}, counts
+    assert delta(base) == {"multi_e": 1, "pairwise": 0, "topk": 0,
+                           "topk_sizes": 0}
     # deep caps: ONE engine pass for all 8 sizes, never per-size
     sess.ccm(0, 1, lib_sizes=(20, 40, 60, 80, 100, 140, 180, 200))
-    assert counts == {"multi_e": 1, "pairwise": 1, "topk": 0,
-                      "topk_sizes": 1}, counts
+    assert delta(base) == {"multi_e": 1, "pairwise": 1, "topk": 0,
+                           "topk_sizes": 1}
     assert sess.stats["knn_master_builds"] == 1
+
+
+def test_ops_counter_matches_monkeypatch_shim(monkeypatch):
+    """The one shim test kept on purpose: the telemetry dispatch counter
+    and a counting monkeypatch shim must see the SAME calls. If a kernel
+    path ever stops routing through ``ops`` (so the counter undercounts)
+    or the counter double-fires, this trips before the counter-based
+    regressions above start lying."""
+    X = _panel(4)
+    calls = {"n": 0}
+    real = ops.all_knn_multi_e
+
+    def counting(*a, **k):
+        calls["n"] += 1
+        return real(*a, **k)
+
+    monkeypatch.setattr(ops, "all_knn_multi_e", counting)
+    jax.clear_caches()
+    with telemetry.record() as rec:
+        EDM(X, EDMConfig(E_max=4)).optimal_E()
+    assert calls["n"] >= 1
+    assert rec.counter_delta("edm_ops_all_knn_multi_e_calls") == calls["n"]
 
 
 def test_ccm_lib_sizes_bit_identical_to_legacy_loop():

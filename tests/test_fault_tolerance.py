@@ -276,8 +276,11 @@ def test_memory_mention_unretried_but_recorded(tmp_path, monkeypatch):
 def test_runner_refuses_finalize_with_missing_group(tmp_path):
     r = MatrixRunner(str(tmp_path / "run"), key="k", shape=(4, 4),
                      groups_sig=[[2, 4]])
-    with pytest.raises(RuntimeError, match="not driven"):
-        r.finalize()
+    try:
+        with pytest.raises(RuntimeError, match="not driven"):
+            r.finalize()
+    finally:
+        r.close()  # detach the run's telemetry sink + release the lock
 
 
 # --------------------------------------------- checkpoint restore hygiene
