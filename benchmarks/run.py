@@ -10,6 +10,7 @@ directory so the perf trajectory is diffable across PRs:
   bench_esweep   → ISSUE 1 (seed per-E optimal-E sweep vs multi-E engine)
   bench_smap     → ISSUE 2 (seed per-query S-Map lstsq vs batched engine)
   bench_edm      → ISSUE 3 (session facade overhead; cached-kNN CCM reuse)
+  bench_serve    → ISSUE 8 (serving: append-merge vs rebuild, batching)
 """
 
 from __future__ import annotations
@@ -28,6 +29,7 @@ def main() -> None:
         bench_knn,
         bench_lookup,
         bench_roofline,
+        bench_serve,
         bench_smap,
     )
 
@@ -39,6 +41,7 @@ def main() -> None:
         "esweep": bench_esweep,
         "smap": bench_smap,
         "edm": bench_edm,
+        "serve": bench_serve,
     }
     only = sys.argv[1] if len(sys.argv) > 1 else None
     print("name,us_per_call,derived")

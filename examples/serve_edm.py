@@ -1,0 +1,161 @@
+"""Serving smoke: concurrent HTTP clients ≡ direct sessions, one append tick.
+
+The CI job for the serving subsystem (docs/ARCHITECTURE.md "Serving"):
+
+* start an ``EDMServer`` behind the stdlib HTTP front end on an
+  ephemeral port and register a panel over the wire;
+* drive N concurrent client threads issuing compatible CCM requests
+  (the scheduler coalesces them into group launches) plus ``optimal_E``
+  and ``xmap`` panel ops, and assert every response **bit-matches** a
+  direct in-process ``EDM`` session on the same panel — the served-
+  answer contract: batching and transport never change bits
+  (``EDM.ccm_batch`` on a singleton pair is the quiesced CCM oracle);
+* submit one **append tick** through the server and assert post-append
+  answers bit-match a COLD session built on the grown panel — the
+  incremental kNN-master merge is indistinguishable from a rebuild;
+* record the whole run to a telemetry JSONL sink and assert it is
+  schema-valid and contains the serve spans/metrics CI expects.
+
+Run: ``PYTHONPATH=src python examples/serve_edm.py [out_dir]``
+
+With ``out_dir``, the event log lands at
+``<out_dir>/serve/telemetry/events.jsonl`` so CI can schema-validate and
+upload it; without, a tempdir is used.
+"""
+
+import json
+import os
+import sys
+import tempfile
+import threading
+import urllib.request
+
+import numpy as np
+
+from repro import telemetry
+from repro.data import timeseries as ts
+from repro.edm import EDM, EDMConfig
+from repro.serving import EDMServer, serve_http
+from repro.telemetry import schema
+
+N_CLIENTS = 6
+E_REQ = 3
+CFG = dict(E_max=4, cache=True)
+
+
+def _post(port: int, op: str, **body) -> dict:
+    req = urllib.request.Request(
+        f"http://127.0.0.1:{port}/v1/{op}",
+        data=json.dumps(body).encode(), method="POST",
+        headers={"Content-Type": "application/json"})
+    with urllib.request.urlopen(req) as resp:
+        return json.loads(resp.read())
+
+
+def _get(port: int, path: str) -> str:
+    with urllib.request.urlopen(f"http://127.0.0.1:{port}{path}") as resp:
+        return resp.read().decode()
+
+
+def _bit_match(served, oracle: np.float32, what: str) -> None:
+    got = np.float32(np.nan if served is None else served)
+    ok = (got == oracle) or (np.isnan(got) and np.isnan(oracle))
+    assert ok, f"{what}: served {got!r} != direct {oracle!r}"
+
+
+def main() -> None:
+    out = sys.argv[1] if len(sys.argv) > 1 else tempfile.mkdtemp()
+    log = os.path.join(out, "serve", "telemetry", "events.jsonl")
+    sink = telemetry.JsonlSink(log)
+    telemetry.add_sink(sink)
+
+    panel, _ = ts.forced_network_panel(8, 300, seed=33)
+    panel = np.asarray(panel, np.float32)
+    rng = np.random.default_rng(5)
+    delta = rng.standard_normal((panel.shape[0], 6)).astype(np.float32)
+
+    # Direct oracles: the same answers with no server in the loop.
+    direct = EDM(panel, EDMConfig(**CFG))
+    direct_grown = EDM(np.concatenate([panel, delta], axis=1),
+                       EDMConfig(**CFG))
+    pairs = [(i, (i + 1) % panel.shape[0]) for i in range(panel.shape[0])]
+    oracle = {p: direct.ccm_batch([p], E=E_REQ)[0] for p in pairs}
+    oracle_grown = {p: direct_grown.ccm_batch([p], E=E_REQ)[0] for p in pairs}
+
+    srv = EDMServer()
+    httpd = serve_http(srv)
+    port = httpd.server_address[1]
+    try:
+        _post(port, "register", panel="smoke", data=panel.tolist(), **CFG)
+
+        # --- N concurrent clients, compatible CCM requests -> coalesced
+        errors: list[BaseException] = []
+
+        def client(cid: int) -> None:
+            try:
+                for lib, tgt in pairs[cid::2]:
+                    r = _post(port, "ccm", panel="smoke",
+                              lib=lib, target=tgt, E=E_REQ)["result"]
+                    _bit_match(r, oracle[(lib, tgt)],
+                               f"client {cid} ccm{(lib, tgt)}")
+            except BaseException as exc:  # surface in the parent
+                errors.append(exc)
+
+        threads = [threading.Thread(target=client, args=(i,))
+                   for i in range(N_CLIENTS)]
+        for t in threads:
+            t.start()
+        for t in threads:
+            t.join()
+        if errors:
+            raise errors[0]
+
+        # --- panel ops over the wire match the direct session
+        e_direct, rho_direct = direct.optimal_E()
+        e_srv, rho_srv = _post(port, "optimal_E", panel="smoke")["result"]
+        assert np.array_equal(np.asarray(e_srv, np.int32), e_direct)
+        # JSON None -> NaN; float32 -> float64 repr -> float32 is exact,
+        # so equality below is still bitwise.
+        assert np.array_equal(np.asarray(rho_srv, np.float32),
+                              np.asarray(rho_direct, np.float32),
+                              equal_nan=True)
+        x_srv = _post(port, "xmap", panel="smoke")["result"]
+        assert np.array_equal(np.asarray(x_srv, np.float32),
+                              np.asarray(direct.xmap(), np.float32),
+                              equal_nan=True)
+
+        # --- one append tick: server == COLD session on the grown panel
+        info = _post(port, "append", panel="smoke",
+                     delta=delta.tolist())["result"]
+        assert info["L"] == panel.shape[1] + delta.shape[1], info
+        for p in pairs:
+            r = _post(port, "ccm", panel="smoke",
+                      lib=p[0], target=p[1], E=E_REQ)["result"]
+            _bit_match(r, oracle_grown[p], f"post-append ccm{p}")
+
+        # --- observability surfaces
+        prom = _get(port, "/metrics")
+        for needle in ("serve_requests", "serve_batches",
+                       "serve_latency_ms_ccm", "edm_knn_master_appends"):
+            assert needle in prom, f"{needle} missing from /metrics"
+        panels = json.loads(_get(port, "/panels"))["panels"]
+        assert panels[0]["name"] == "smoke" and panels[0]["version"] == 1
+    finally:
+        httpd.shutdown()
+        srv.close()
+        telemetry.remove_sink(sink)
+        sink.close()
+
+    errs = schema.validate_events_file(log)
+    assert not errs, f"telemetry schema violations: {errs[:5]}"
+    names = {json.loads(line)["name"]
+             for line in open(log) if line.strip()}
+    for needle in ("serve.register", "serve.batch", "serve.request",
+                   "session.append", "session.master_append"):
+        assert needle in names, f"{needle} missing from {log}"
+    print(f"telemetry log: {log}")
+    print("SERVE SMOKE OK")
+
+
+if __name__ == "__main__":
+    main()

@@ -22,7 +22,8 @@ docs/ARCHITECTURE.md for the fault-tolerance design.
 """
 
 from repro.edm.config import DEFAULT_THETAS, EDMConfig
-from repro.edm.dataset import INVALID_POLICIES, Dataset, screen_panel
+from repro.edm.dataset import (INVALID_POLICIES, Dataset, merge_stats,
+                               screen_panel, series_stats)
 from repro.edm.plan import Plan
 from repro.edm.runner import PREEMPTED_EXIT, MatrixRunner, RunState, run_key
 from repro.edm.session import EDM, PanelResult, SurrogateResult
@@ -31,4 +32,5 @@ from repro.edm.surrogates import make_surrogates
 __all__ = ["DEFAULT_THETAS", "EDM", "EDMConfig", "Dataset",
            "INVALID_POLICIES", "MatrixRunner", "PREEMPTED_EXIT",
            "PanelResult", "Plan", "RunState", "SurrogateResult",
-           "make_surrogates", "run_key", "screen_panel"]
+           "make_surrogates", "merge_stats", "run_key", "screen_panel",
+           "series_stats"]

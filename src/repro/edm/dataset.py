@@ -33,7 +33,57 @@ from repro.kernels import ops
 INVALID_POLICIES = ("raise", "mask", "drop")
 
 
-def screen_panel(panel: np.ndarray) -> list[dict]:
+def series_stats(arr: np.ndarray) -> dict:
+    """Running per-series screening stats of an (N, dt) column block.
+
+    ``{"cnt": non-finite count, "lo"/"hi": finite min/max}`` — the
+    sufficient statistic for the screen's two invalidity predicates
+    (non-finite entries; constant series). Stats of column blocks
+    compose via ``merge_stats``, which is what lets ``Dataset.append``
+    re-screen a grown panel from only the Δt new columns in O(N·Δt).
+    """
+    arr = np.asarray(arr)
+    finite = np.isfinite(arr)
+    return {
+        "cnt": (~finite).sum(axis=1).astype(np.int64),
+        "lo": np.min(np.where(finite, arr, np.inf), axis=1,
+                     initial=np.inf),
+        "hi": np.max(np.where(finite, arr, -np.inf), axis=1,
+                     initial=-np.inf),
+    }
+
+
+def merge_stats(a: dict, b: dict) -> dict:
+    """Stats of the column-concatenation of two blocks."""
+    return {"cnt": a["cnt"] + b["cnt"],
+            "lo": np.minimum(a["lo"], b["lo"]),
+            "hi": np.maximum(a["hi"], b["hi"])}
+
+
+def _records(cnt, lo, hi, delta_cnt=None) -> list[dict]:
+    """Invalid-series records from screening stats (empty = clean).
+
+    ``delta_cnt`` (delta mode) attributes non-finite faults introduced
+    by an appended block, so the report names where the corruption
+    arrived.
+    """
+    bad = cnt > 0
+    const = ~bad & (lo >= hi)  # no finite spread (lo > hi: no data)
+    recs = []
+    for i in np.nonzero(bad | const)[0]:
+        if not bad[i]:
+            reason = "constant series"
+        elif delta_cnt is not None and delta_cnt[i] > 0:
+            reason = (f"{int(delta_cnt[i])} non-finite values in "
+                      f"appended delta")
+        else:
+            reason = f"{int(cnt[i])} non-finite values"
+        recs.append({"index": int(i), "name": None, "reason": reason})
+    return recs
+
+
+def screen_panel(panel: np.ndarray, *, prior: dict | None = None
+                 ) -> list[dict]:
     """Invalid-series records of an (N, L) panel (empty = clean).
 
     A series is invalid when it contains non-finite values (NaN/Inf —
@@ -45,17 +95,25 @@ def screen_panel(panel: np.ndarray) -> list[dict]:
     Python loop): at the 10⁵-series panels this module targets, the
     screen runs on every Dataset construction and must stay O(panel)
     flops with O(N) extra memory.
+
+    Delta mode: with ``prior=`` (running ``series_stats`` of the
+    already-screened columns), ``panel`` is only the appended (N, Δt)
+    block and the screen is O(N·Δt) — the grown panel is judged from
+    merged stats, with delta-introduced non-finite faults named as
+    such. Used by ``Dataset.append``.
     """
     arr = np.asarray(panel)
-    if arr.size == 0:
+    if arr.size == 0 and prior is None:
         return []
-    bad_counts = (~np.isfinite(arr)).sum(axis=1)
-    with np.errstate(invalid="ignore", over="ignore"):  # inf-inf in ptp
-        const = (np.ptp(arr, axis=1) == 0) & (bad_counts == 0)
-    return [{"index": int(i), "name": None,
-             "reason": (f"{int(bad_counts[i])} non-finite values"
-                        if bad_counts[i] else "constant series")}
-            for i in np.nonzero((bad_counts > 0) | const)[0]]
+    stats = series_stats(arr)
+    if prior is None:
+        return _records(stats["cnt"], stats["lo"], stats["hi"])
+    if len(prior["cnt"]) != arr.shape[0]:
+        raise ValueError(
+            f"delta has {arr.shape[0]} series but prior stats cover "
+            f"{len(prior['cnt'])}")
+    m = merge_stats(prior, stats)
+    return _records(m["cnt"], m["lo"], m["hi"], delta_cnt=stats["cnt"])
 
 
 class Dataset:
@@ -84,6 +142,7 @@ class Dataset:
                 raise ValueError(
                     f"{len(names)} names for {panel.shape[0]} series")
         self.on_invalid = on_invalid
+        stats = series_stats(np.asarray(panel))
         report = screen_panel(np.asarray(panel))
         for r in report:
             r["name"] = names[r["index"]] if names is not None else None
@@ -101,6 +160,7 @@ class Dataset:
                 f"on_invalid='drop' to remove them")
         if report and on_invalid == "drop":
             panel = panel[np.nonzero(valid)[0]]
+            stats = {k: v[valid] for k, v in stats.items()}
             if names is not None:
                 names = [n for n, ok in zip(names, valid) if ok]
             if panel.shape[0] == 0:
@@ -114,7 +174,72 @@ class Dataset:
         self.panel = panel
         self.names = names
         self.valid = valid
+        self._stats = stats  # running series_stats of the raw panel
         self._embeddings: dict[tuple[int, int], jax.Array] = {}
+
+    def append(self, delta) -> list[dict]:
+        """Grow every series by Δt points under the bound policy.
+
+        The screen is O(N·Δt), not O(N·L): the running per-series stats
+        kept since construction absorb only the new columns
+        (``screen_panel`` delta mode). ``"raise"`` rejects the delta
+        BEFORE mutating any state, naming the offending series;
+        ``"mask"`` zeroes non-finite delta entries and flags the series
+        invalid; ``"drop"`` removes series the delta invalidated.
+
+        Returns the invalid-series records introduced by this delta.
+        Indices are PRE-append — positions in the panel as it was when
+        the call started — so callers holding per-series caches (the
+        ``EDM`` session's kNN master) can compact them to match.
+        Embedding caches are cleared; stats are computed on the raw
+        delta, so a masked series never silently "heals".
+        """
+        delta = jnp.asarray(delta)
+        if delta.ndim == 1:
+            delta = delta[None, :]
+        if delta.ndim != 2 or delta.shape[0] != self.N:
+            raise ValueError(
+                f"delta must be ({self.N}, dt), got {tuple(delta.shape)}")
+        if delta.shape[1] < 1:
+            raise ValueError("delta must append at least one point")
+        arr = np.asarray(delta)
+        fresh = [dict(r) for r in screen_panel(arr, prior=self._stats)
+                 if self.valid[r["index"]]]
+        for r in fresh:
+            r["name"] = (self.names[r["index"]]
+                         if self.names is not None else None)
+        if fresh and self.on_invalid == "raise":
+            what = "; ".join(
+                f"series {r['name'] if r['name'] is not None else r['index']}"
+                f": {r['reason']}" for r in fresh)
+            raise ValueError(
+                f"append rejected: delta would invalidate series ({what}); "
+                f"bind the panel with on_invalid='mask' or 'drop' to accept "
+                f"faulty ticks")
+        merged = merge_stats(self._stats, series_stats(arr))
+        if self.num_invalid or fresh:  # mask policy: keep NaN out of kernels
+            delta = jnp.nan_to_num(delta, nan=0.0, posinf=0.0, neginf=0.0)
+        panel = jnp.concatenate([self.panel, delta], axis=1)
+        if fresh and self.on_invalid == "drop":
+            bad = {r["index"] for r in fresh}
+            keep = np.array([i for i in range(self.N) if i not in bad], int)
+            if keep.size == 0:
+                raise ValueError(
+                    "append would invalidate every remaining series; "
+                    "refusing to drop the whole panel")
+            panel = panel[keep]
+            merged = {k: v[keep] for k, v in merged.items()}
+            if self.names is not None:
+                self.names = [self.names[i] for i in keep]
+            self.valid = np.ones(panel.shape[0], bool)
+        else:
+            self.valid = np.asarray(
+                (merged["cnt"] == 0) & (merged["lo"] < merged["hi"]))
+        self.panel = panel
+        self._stats = merged
+        self.invalid_report = self.invalid_report + fresh
+        self._embeddings.clear()
+        return fresh
 
     @property
     def N(self) -> int:

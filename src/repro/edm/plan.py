@@ -42,6 +42,7 @@ import jax.numpy as jnp
 from repro import telemetry
 from repro.core.embedding import embed_offset, num_embedded, pred_rows
 from repro.kernels import ops
+from repro.kernels.ref import strict_sq
 
 
 @dataclasses.dataclass(frozen=True)
@@ -82,6 +83,29 @@ def panel_master(X, *, E_max, tau, k, impl):
                                    exclude_self=True, max_idx=None, impl=impl)
 
     return jax.lax.map(one, X)
+
+
+@functools.partial(jax.jit, static_argnames=("tau", "impl"))
+def panel_master_append(X, dM, iM, *, tau, impl):
+    """Grow a whole panel's master tables to cover appended points.
+
+    ``X`` is the grown (N, L_new) panel; ``dM``/``iM`` the stored
+    ``panel_master`` tables of its (N, L_old) prefix. One
+    ``ops.master_append`` merge per series (sequential ``lax.map``, as
+    in ``panel_master``) → (N, E_max, L_new, k) tables bit-identical to
+    ``panel_master`` on the grown panel, at O(Lp·(k+Δt)) per level
+    instead of O(Lp²). The serving path's per-tick master update
+    (``EDM.append``); k_master is preserved, so the
+    ``master_slack_covers`` slack rule carries over unchanged.
+    """
+
+    def one(args):
+        x, d, i = args
+        return ops.master_append(x, d, i, tau=tau, impl=impl)
+
+    return jax.lax.map(one, (X, dM, iM))
+
+
 
 
 def _derive_idx(iE, *, k, max_idx):
@@ -129,7 +153,7 @@ def _gathered_dists(x, idx, ok, *, E, tau):
     for lag in range(E):
         xk = jax.lax.dynamic_slice_in_dim(xf, lag * tau, Lp, axis=-1)
         d = xk[ii] - xk[jj]
-        acc = acc + d * d
+        acc = acc + strict_sq(d)
     return jnp.where(ok, jnp.sqrt(jnp.maximum(acc, 0.0)), jnp.inf)
 
 
@@ -251,7 +275,7 @@ def _gathered_dists_batch(X, idx, ok, *, E, tau):
         xk = jax.lax.dynamic_slice_in_dim(xf, lag * tau, Lp, axis=-1)
         d = (xk[:, :rows, None]
              - jnp.take_along_axis(xk, jj, axis=-1).reshape(B, rows, k))
-        acc = acc + d * d
+        acc = acc + strict_sq(d)
     return jnp.where(ok, jnp.sqrt(jnp.maximum(acc, 0.0)), jnp.inf)
 
 

@@ -41,8 +41,10 @@ from repro.edm.dataset import Dataset
 from repro.edm.plan import (
     Plan,
     ccm_convergence_from_master,
+    ccm_group_from_master_batched,
     master_slack_covers,
     panel_master,
+    panel_master_append,
     rho_curves_from_master,
     simplex_skill_from_master,
 )
@@ -267,6 +269,44 @@ class EDM:
         hit = self._cache["master"] = (dM, iM, k_m, E_levels)
         return hit
 
+    def append(self, delta) -> list[dict]:
+        """Grow the bound panel by Δt points, updating caches in place.
+
+        The serving tick primitive: screening covers only the new
+        columns (``Dataset.append``), and a cached kNN master is grown
+        by ``panel_master_append`` — O(Lp·Δt) stream-in/merge per
+        series, bit-identical to the cold O(Lp²) rebuild — so a warm
+        session absorbs a tick without repaying its build. Derived
+        caches that summarize the whole panel (the optimal-E rho
+        curves) are invalidated; the master survives. Under
+        ``on_invalid="drop"`` the master rows of dropped series are
+        compacted to match the panel. Returns ``Dataset.append``'s
+        records of series this delta invalidated (pre-append indices).
+        """
+        c = self.config
+        old_N = self.data.N
+        with telemetry.span("session.append", N=old_N):
+            records = self.data.append(delta)  # raises before mutating
+            self._cache.pop("rho", None)
+            hit = self._cache.get("master")
+            if hit is not None and c.cache:
+                dM, iM, k_m, lv = hit
+                if len(records) and self.data.N != old_N:  # drop compaction
+                    keep = np.setdiff1d(
+                        np.arange(old_N), [r["index"] for r in records])
+                    dM, iM = dM[keep], iM[keep]
+                dt = int(self.data.L) - int(dM.shape[2])
+                with telemetry.span("session.master_append", dt=dt,
+                                    E_levels=lv, N=self.data.N):
+                    dM, iM = panel_master_append(
+                        self.data.panel, dM, iM, tau=c.tau, impl=self._impl)
+                self._cache["master"] = (dM, iM, k_m, lv)
+                self._bump("knn_master_appends")
+            else:
+                self._cache.pop("master", None)
+            self._bump("appends")
+        return records
+
     def _rho(self):
         """Cached (E_opt, rho-curve) pair, computing it on first use."""
         hit = self._cache.get("rho")
@@ -481,6 +521,58 @@ class EDM:
                 x, targets, E=E, tau=c.tau, Tp=c.Tp_cross, caps=caps,
                 exclude_self=True, impl=self._impl)
         return np.asarray(curves)[inv]
+
+    def ccm_batch(self, pairs, *, E: int) -> np.ndarray:
+        """Full-library CCM skill for many (lib, target) pairs → (n,) ρ.
+
+        The serving primitive: n compatible requests (same panel, same
+        E) become ONE library-batched engine launch
+        (``ccm_group_from_master_batched`` — the xmap matrix engine)
+        instead of n single-pair passes, ~20× the pairs/s on saturated
+        queues. Its bit contract is *batch invariance*: the launch
+        always cross-maps against the full panel's target set and the
+        library axis is batch-invariant, so a pair's ρ is a pure
+        function of (library state, lib, target, E) — the same bits no
+        matter which other requests share its batch.
+        ``ccm_batch([(l, t)], E=E)`` is therefore the quiesced oracle
+        for any batched call. Values agree with the classic
+        convergence-path ``ccm`` to the final ULP (different engines
+        round differently); serving pins its answers to THIS method.
+        Pairs touching masked-invalid series come back NaN; without a
+        covering cached master (tiny panels, slack exhausted) it falls
+        back to per-pair classic ``ccm``.
+        """
+        c = self.config
+        E = int(E)
+        idx = [(self.data.index_of(l), self.data.index_of(t))
+               for l, t in pairs]
+        out = np.full(len(idx), np.nan, np.float32)
+        live = [(j, li, ti) for j, (li, ti) in enumerate(idx)
+                if not self._pair_invalid(li, ti)]
+        if not live:
+            return out
+        Lp = num_embedded(self.data.L, E, c.tau)
+        cap = Lp - max(c.Tp_cross, 0)
+        k = E + 1
+        hit = (self._master(E) if c.cache and c.mesh is None else None)
+        if hit is None or not master_slack_covers(
+                (cap,), Lp=Lp, k=k, k_master=hit[2]):
+            for j, li, ti in live:
+                out[j] = self.ccm(li, ti, E=E)
+            return out
+        libs = sorted({li for _, li, _ in live})
+        lpos = {li: i for i, li in enumerate(libs)}
+        la = jnp.asarray(libs)
+        with telemetry.span("session.ccm_batch", pairs=len(idx),
+                            libs=len(libs), E=E):
+            self._plan_event("ccm")
+            g = np.asarray(ccm_group_from_master_batched(
+                self.data.panel[la], hit[1][la, E - 1], self.data.panel,
+                E=E, tau=c.tau, Tp=c.Tp_cross, k=k, impl=self._impl))
+        for j, li, ti in live:
+            out[j] = g[lpos[li], ti]
+        self._bump("ccm_batch_pairs", len(live))
+        return out
 
     def surrogate_test(self, lib, target, *, num_surrogates: int = 100,
                        method: str = "shuffle", period: int | None = None,

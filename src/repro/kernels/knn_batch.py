@@ -34,7 +34,7 @@ import jax
 import jax.numpy as jnp
 from jax.experimental import pallas as pl
 
-from repro.kernels.ref import num_embedded
+from repro.kernels.ref import num_embedded, strict_sq
 
 _BIG_I = 2**30  # python int: jnp constants must not be captured by kernels
 
@@ -57,7 +57,7 @@ def _kernel(xc_ref, xr_ref, dk_ref, ik_ref, *, E, tau, k, mx, br, bc, gj,
         xi = xc_ref[pl.dslice(i0 + e * tau, br), :]  # (br, 1) sublanes
         xj = xr_ref[:, pl.dslice(j0 + e * tau, bc)]  # (1, bc) lanes
         d = xi - xj
-        acc = acc + d * d
+        acc = acc + strict_sq(d)
     invalid = cols > mx  # static cap, pre-clamped to Lp − 1
     if exclude_self:
         invalid = invalid | (cols == rows)

@@ -23,6 +23,8 @@ import jax
 import jax.numpy as jnp
 from jax.experimental import pallas as pl
 
+from repro.kernels.ref import strict_sq
+
 
 def _kernel(mx_ref, xc_ref, xr_ref, dk_ref, ik_ref, *, E, tau, k, br, Lp,
             exclude_self):
@@ -33,7 +35,7 @@ def _kernel(mx_ref, xc_ref, xr_ref, dk_ref, ik_ref, *, E, tau, k, br, Lp,
         xi = xc_ref[pl.dslice(i0 + kk * tau, br), :]  # (br, 1)
         xj = xr_ref[:, pl.dslice(kk * tau, Lp)]  # (1, Lp)
         d = xi - xj
-        acc = acc + d * d
+        acc = acc + strict_sq(d)
     # ---- Alg. 2 masking + k-pass extraction, still in VMEM
     cols = jax.lax.broadcasted_iota(jnp.int32, acc.shape, 1)
     max_idx = mx_ref[0, 0]

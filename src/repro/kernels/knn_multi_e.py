@@ -55,6 +55,7 @@ from repro.kernels.ref import (
     multi_e_max_idx,
     num_embedded,
     pad_multi_e_tables,
+    strict_sq,
 )
 
 _BIG_I = 2**30  # python int: jnp constants must not be captured by kernels
@@ -79,7 +80,7 @@ def _kernel(xc_ref, xr_ref, dk_ref, ik_ref, *, E_max, tau, ks, mxs,
         xi = xc_ref[pl.dslice(i0 + e * tau, br), :]  # (br, 1) sublanes
         xj = xr_ref[:, pl.dslice(j0 + e * tau, bc)]  # (1, bc) lanes
         d = xi - xj
-        acc = acc + d * d
+        acc = acc + strict_sq(d)
         # ---- level-E extraction: merge this block into the running k-best
         invalid = cols > mxs[e]  # static cap, pre-clamped to Lp_E − 1
         if exclude_self:

@@ -258,7 +258,7 @@ def all_knn_multi_e(
     max_idx=None,
     impl: str = "auto",
     block: tuple[int, int] = (128, 1024),
-) -> tuple[jax.Array, jax.Array]:
+):
     """Incremental all-kNN for every E in 1..E_max in ONE O(E_max·Lp²) pass.
 
     Returns (dists, idx), both (E_max, Lp_1, k_max) padded with inf/-1;
@@ -277,6 +277,36 @@ def all_knn_multi_e(
     return _multi_e(
         x, E_max=E_max, tau=tau, k=k, exclude_self=exclude_self,
         max_idx=max_idx, block=block, interpret=(impl == "interpret"))
+
+
+def master_append(
+    x: jax.Array,
+    dists: jax.Array,
+    idx: jax.Array,
+    *,
+    tau: int = 1,
+    impl: str = "auto",
+    block: int = 128,
+) -> tuple[jax.Array, jax.Array]:
+    """Stream dt appended points into a multi-E master — O(Lp·(k+dt))/level.
+
+    ``x`` is the FULL grown series; ``dists``/``idx`` are the stored
+    ``all_knn_multi_e`` tables of its prefix (uniform k — masters).
+    Returns the grown (E_max, L_new, k_m) tables, bit-identical to a
+    cold rebuild on ``x`` (see the append section in kernels/ref.py for
+    the strict-chain rules that make that hold). The impl knob selects
+    the merge-stage engine — ref's ``top_k`` and the Pallas k-best merge
+    (kernels/knn_append.py) are bit-identical selection over the same
+    candidate bits.
+    """
+    impl = _resolve(impl)
+    _tel("master_append", impl, E_max=int(dists.shape[0]),
+         L=int(x.shape[-1]), dt=int(x.shape[-1]) - int(dists.shape[1]))
+    if impl == "ref":
+        return _ref.master_append(x, dists, idx, tau=tau)
+    from repro.kernels.knn_append import master_append as _append_k
+    return _append_k(x, dists, idx, tau=tau, block=block,
+                     interpret=(impl == "interpret"))
 
 
 def smap_gram(

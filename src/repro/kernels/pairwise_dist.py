@@ -30,6 +30,8 @@ import jax
 import jax.numpy as jnp
 from jax.experimental import pallas as pl
 
+from repro.kernels.ref import strict_sq
+
 MXU_K = 128  # MXU contraction width the embedding dim is padded to.
 
 
@@ -41,7 +43,7 @@ def _kernel_vpu(xc_ref, xr_ref, o_ref, *, E: int, tau: int, bi: int, bj: int):
         xi = xc_ref[pl.dslice(i0 + k * tau, bi), :]  # (bi, 1) sublanes
         xj = xr_ref[:, pl.dslice(j0 + k * tau, bj)]  # (1, bj) lanes
         d = xi - xj
-        acc = acc + d * d
+        acc = acc + strict_sq(d)
     o_ref[...] = acc
 
 

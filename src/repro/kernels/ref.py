@@ -25,6 +25,33 @@ import numpy as np
 _INF = jnp.float32(jnp.inf)
 
 
+def strict_sq(d: jax.Array) -> jax.Array:
+    """The rounded square fl(d·d), pinned to strict IEEE at every shape.
+
+    Every distance chain in the repo accumulates ``acc ± d·d``. Left
+    bare, XLA CPU's backend (LLVM) may contract the multiply and the
+    accumulate into one FMA — one rounding instead of two — and whether
+    it does depends on how the surrounding program fused and vectorized,
+    i.e. on *buffer shapes*. That makes accumulator bits a function of
+    program shape, which breaks every bit-parity contract in the repo:
+    ``master_append``'s gathered/slab recomputes vs the cold (L, L)
+    build, derived-table recomputes vs engine outputs, and multi-E vs
+    per-E cross-checks. (``lax.optimization_barrier`` does NOT help: the
+    contraction happens below HLO, inside a fused loop body — measured.)
+
+    The guard select breaks the mul→add edge the contraction pattern
+    needs: ``d·d > −1`` is always true for real data, but neither XLA's
+    simplifier nor LLVM can prove it (without ``nnan``, ``d·d`` may be
+    NaN and the select must keep the 0.0 arm), so the select survives to
+    codegen and the product is materialized with its own rounding —
+    strict two-rounding semantics at any shape, matching a scalar numpy
+    ``fl(acc ± fl(d·d))`` chain exactly. NaN products select 0.0; inputs
+    are screened finite, so that arm is dead in practice.
+    """
+    d2 = d * d
+    return jnp.where(d2 > -1.0, d2, jnp.zeros_like(d2))
+
+
 def num_embedded(L: int, E: int, tau: int) -> int:
     """Number of valid delay-embedding vectors."""
     n = L - (E - 1) * tau
@@ -58,7 +85,7 @@ def pairwise_distances(x: jax.Array, *, E: int, tau: int) -> jax.Array:
     for k in range(E):
         xk = jax.lax.dynamic_slice_in_dim(x, k * tau, Lp, axis=-1)
         d = xk[:, None] - xk[None, :]
-        acc = acc + d * d
+        acc = acc + strict_sq(d)
     return acc
 
 
@@ -250,7 +277,7 @@ def _all_knn_batch(X, *, E, tau, k, exclude_self, max_idx):
     for lag in range(E):  # same accumulation order as pairwise_distances
         xk = jax.lax.dynamic_slice_in_dim(Xf, lag * tau, Lp, axis=-1)
         d = xk[:, :, None] - xk[:, None, :]
-        acc = acc + d * d
+        acc = acc + strict_sq(d)
     cols = jnp.arange(Lp, dtype=jnp.int32)
     mask = jnp.zeros((Lp, Lp), bool)
     if exclude_self:
@@ -432,14 +459,15 @@ def _all_knn_multi_e(x, *, E_max, tau, ks, mxs, exclude_self):
     for e in range(E_max):  # level e ↔ embedding dim E = e+1
         xk = jax.lax.dynamic_slice_in_dim(xpad, e * tau, L, axis=-1)
         d = xk[:, None] - xk[None, :]
+        d2 = strict_sq(d)  # shape-independent bits — the append contract
         invalid = cols > mxs[e]
         if exclude_self and (e == 0 or not sticky):
             invalid = invalid | (cols == rows)
         if sticky:
-            acc = jnp.where(invalid, -_INF, acc - d * d)
+            acc = jnp.where(invalid, -_INF, acc - d2)
             neg = acc
         else:  # non-monotone caps: mask a per-level copy instead
-            acc = acc - d * d
+            acc = acc - d2
             neg = jnp.where(invalid, -_INF, acc)
         # Rows ≥ Lp_E are garbage (x-padding) but cheap — the extraction
         # scans them and the final pad mask discards them; this avoids a
@@ -571,3 +599,176 @@ def pearson_rows(a: jax.Array, b: jax.Array) -> jax.Array:
     vb = jnp.sum(bm * bm, axis=-1)
     denom = jnp.sqrt(va * vb)
     return jnp.where(denom > 0, cov / jnp.maximum(denom, 1e-30), 0.0)
+
+# --------------------------------------------------------------------------
+# Incremental master append (the serving-path stream-in/merge primitive).
+#
+# A session's multi-E master is the top-k_m table of ``all_knn_multi_e``
+# over the library axis. When the monitored series grows by dt points the
+# level-e library grows by exactly dt columns (Lp_e = L − e·τ), and the
+# table can be updated without the O(Lp²) rebuild:
+#
+#   - OLD rows (i < Lp_old_e): their coordinates are unchanged, so any
+#     old column surviving into the new top-k_m must already sit in the
+#     stored top-k_m. Merge the stored k_m candidates against only the
+#     dt new columns — O(Lp·(k_m+dt)) per level.
+#   - NEW rows (Lp_old_e ≤ i < Lp_new_e): no stored state; one full
+#     (dt, L_new) scan per level.
+#
+# Bit-parity with a cold rebuild is the contract (tests/test_master_
+# append.py property-tests it over Δt/E/τ grids, ties included). Three
+# rules make it hold:
+#
+#   1. Every distance chain is STRICT two-rounding IEEE — ``strict_sq``
+#      in ``_all_knn_multi_e`` and in the recompute chains below. Strict
+#      per-element chains are deterministic regardless of buffer shape
+#      or vectorization, so the (Lp, k) gathered recompute of a stored
+#      candidate, the (dt, L) slab, and the cold (L, L) accumulator all
+#      produce the same bits. (Left bare, XLA CPU FMA-contracts
+#      acc − d·d at some shapes and the three programs disagree by
+#      1 ULP — measured; see ``strict_sq``.)
+#   2. The merge orders candidates in the *pre-sqrt* negated-squared
+#      domain (sqrt is many-to-one after f32 rounding — merging on sqrt
+#      values can invert 1-ULP ties), with candidates laid out
+#      [stored slots ascending, new columns ascending]: stored indices
+#      are < Lp_old_e ≤ new indices and ``lax.top_k`` is positionally
+#      stable, so equal-value ties resolve in global column order —
+#      exactly the cold extraction's tie rule.
+#   3. Stored garbage slots (dist=inf from k_m > Lp_old_e − 1) carry the
+#      OLD deterministic pattern [i, Lp_old_e, …]; those indices collide
+#      with now-valid columns. They enter the merge as −inf candidates
+#      and every surviving garbage slot is re-normalized afterwards to
+#      the cold pattern [i, Lp_new_e, …] — which, because garbage
+#      survives only when the finite count f equals Lp_new_e − 1, is
+#      exactly ``idx = i`` at slot f and ``idx = slot`` beyond it.
+#
+# The merge itself is then pure selection over carried bits, so the
+# Pallas variant (kernels/knn_append.py) shares these guarantees.
+# --------------------------------------------------------------------------
+
+
+def append_new_row_slab(x, *, dt, E_max, tau):
+    """Negated-squared distances of the dt newest rows vs all columns.
+
+    Returns (E_max, dt, L_new) UNMASKED accumulator levels: entry
+    [e, r, j] equals the cold accumulator value at
+    (row Lp_old_e + r, col j) wherever the cold entry is valid (strict
+    chains are shape-independent). Row r of level e also supplies the
+    dt new COLUMNS of every old row by symmetry: negation and squaring
+    are exact and the per-lag chain order is identical, so
+    acc(i, j) == acc(j, i) bitwise. Shared by the ref and Pallas paths.
+    """
+    L_new = x.shape[-1]
+    xpad = jnp.pad(x.astype(jnp.float32), (0, (E_max - 1) * tau))
+    xls = [jax.lax.dynamic_slice_in_dim(xpad, l * tau, L_new, axis=-1)
+           for l in range(E_max)]
+    outs = []
+    for e in range(E_max):
+        Lp_old = L_new - dt - e * tau
+        Lp_new = L_new - e * tau
+        acc = jnp.zeros((dt, L_new), jnp.float32)
+        for l in range(e + 1):
+            xl = xls[l]
+            df = xl[Lp_old:Lp_new, None] - xl[None, :]
+            acc = acc - strict_sq(df)
+        outs.append(acc)
+    return jnp.stack(outs)
+
+
+def normalize_garbage(nd, ik, rows):
+    """Rewrite non-finite slots to the cold build's garbage pattern.
+
+    ``nd`` (rows, k) negated-squared merge output, ``ik`` its indices,
+    ``rows`` (rows,) the row ids. Garbage survives the merge only when
+    the finite count equals the row's full valid-neighbor count, so the
+    cold pattern is self at the first garbage slot, then the slot id.
+    """
+    finite = nd > -_INF
+    nfin = jnp.sum(finite.astype(jnp.int32), axis=1)[:, None]
+    slot = jnp.arange(nd.shape[1], dtype=jnp.int32)[None, :]
+    garb = jnp.where(slot == nfin, rows[:, None], slot)
+    return jnp.where(finite, ik, garb)
+
+
+@functools.partial(jax.jit, static_argnames=("dt", "E_max", "tau"))
+def _master_append(x, dM, iM, *, dt, E_max, tau):
+    L_new = x.shape[-1]
+    L_old = L_new - dt
+    k_m = dM.shape[-1]
+    xpad = jnp.pad(x.astype(jnp.float32), (0, (E_max - 1) * tau))
+    xls = [jax.lax.dynamic_slice_in_dim(xpad, l * tau, L_new, axis=-1)
+           for l in range(E_max)]
+    slab = append_new_row_slab(x, dt=dt, E_max=E_max, tau=tau)
+    outs_d, outs_i = [], []
+    for e in range(E_max):  # level e ↔ embedding dim E = e+1
+        Lp_old = L_old - e * tau
+        Lp_new = L_new - e * tau
+        rows_o = jnp.arange(Lp_old, dtype=jnp.int32)
+        new_cols = Lp_old + jnp.arange(dt, dtype=jnp.int32)
+        # -- old rows: recompute stored candidates (strict chain) --------
+        i_o = iM[e, :Lp_old]
+        ok = jnp.isfinite(dM[e, :Lp_old])
+        jj = jnp.maximum(i_o, 0)  # clamp garbage/PAD for a safe gather
+        acc_s = jnp.zeros((Lp_old, k_m), jnp.float32)
+        for l in range(e + 1):
+            xl = xls[l]
+            ds = xl[:Lp_old, None] - xl[jj]
+            acc_s = acc_s - strict_sq(ds)
+        # dt new columns of every old row — slab transpose, by symmetry
+        nd_new = slab[e, :, :Lp_old].T
+        cand_nd = jnp.concatenate([jnp.where(ok, acc_s, -_INF), nd_new],
+                                  axis=1)
+        cand_i = jnp.concatenate(
+            [i_o, jnp.broadcast_to(new_cols, (Lp_old, dt))], axis=1)
+        nd_o, pos = jax.lax.top_k(cand_nd, k_m)
+        ik_o = normalize_garbage(
+            nd_o, jnp.take_along_axis(cand_i, pos, axis=1), rows_o)
+        # -- new rows: full slab rows, masked like the cold accumulator --
+        rows_n = Lp_old + jnp.arange(dt, dtype=jnp.int32)
+        colsL = jnp.arange(L_new, dtype=jnp.int32)[None, :]
+        inval = (colsL > Lp_new - 1) | (colsL == rows_n[:, None])
+        nd_n, ik_n = _chunked_topk(jnp.where(inval, -_INF, slab[e]), k_m)
+        # -- assemble the level ------------------------------------------
+        nd = jnp.concatenate([nd_o, nd_n], axis=0)
+        ik = jnp.concatenate([ik_o, ik_n], axis=0)
+        d_lvl = jnp.sqrt(jnp.maximum(-nd, 0.0))
+        outs_d.append(jnp.pad(d_lvl, ((0, L_new - Lp_new), (0, 0)),
+                              constant_values=jnp.inf))
+        outs_i.append(jnp.pad(ik, ((0, L_new - Lp_new), (0, 0)),
+                              constant_values=PAD_IDX))
+    return jnp.stack(outs_d), jnp.stack(outs_i)
+
+
+def check_append_args(x, dists, idx, tau: int) -> int:
+    """Validate master_append inputs; returns dt (the appended width)."""
+    E_max, L_old, _ = dists.shape
+    L_new = int(x.shape[-1])
+    dt = L_new - L_old
+    if dt < 1:
+        raise ValueError(f"append needs at least one new point, got dt={dt}")
+    if idx.shape != dists.shape:
+        raise ValueError(
+            f"dists/idx shape mismatch: {dists.shape} vs {idx.shape}")
+    num_embedded(L_old, E_max, tau)  # stored master must already be valid
+    return dt
+
+
+def master_append(
+    x: jax.Array,
+    dists: jax.Array,
+    idx: jax.Array,
+    *,
+    tau: int = 1,
+) -> tuple[jax.Array, jax.Array]:
+    """Grow a multi-E master table to cover ``dt`` appended points.
+
+    ``x`` is the FULL appended series (length L_new); ``dists``/``idx``
+    are the stored ``all_knn_multi_e`` tables of its length-L_old
+    prefix, both (E_max, L_old, k_m) with uniform k (``panel_master``
+    masters). Returns the (E_max, L_new, k_m) tables, bit-identical to
+    ``all_knn_multi_e(x, E_max=E_max, tau=tau, k=k_m)`` at
+    O(Lp·(k_m+dt)) per level instead of O(Lp²).
+    """
+    dt = check_append_args(x, dists, idx, tau)
+    E_max = dists.shape[0]
+    return _master_append(x, dists, idx, dt=dt, E_max=E_max, tau=tau)

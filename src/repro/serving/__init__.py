@@ -1,5 +1,16 @@
-"""Serving substrate: batched prefill/decode engine."""
+"""Serving substrate: batched prefill/decode engine + the EDM server.
 
+Two tenants share this package: the transformer ``ServeEngine``
+(fixed-slot prefill/decode batching) and the EDM session server
+(``EDMServer`` — warm per-panel sessions, FIFO + signature-coalescing
+scheduler, incremental library append; see ``edm_server``/
+``scheduler``/``state``).
+"""
+
+from repro.serving.edm_server import EDMServer, serve_http
 from repro.serving.engine import ServeEngine
+from repro.serving.scheduler import Scheduler
+from repro.serving.state import Registry
 
-__all__ = ["ServeEngine"]
+__all__ = ["EDMServer", "Registry", "Scheduler", "ServeEngine",
+           "serve_http"]

@@ -1,0 +1,173 @@
+"""EDM-as-a-service: warm sessions behind a batching scheduler.
+
+``EDMServer`` is the embeddable server object — register panels, submit
+``ccm``/``xmap``/``simplex``/``surrogate_test``/``optimal_E``/``append``
+requests from any number of threads, get ``Future``s back. Requests
+flow through ``scheduler.Scheduler``: FIFO with signature coalescing
+(compatible CCM requests become one group launch; appends are version
+barriers; see that module's docstring).
+
+``serve_http`` wraps a server in a stdlib ``ThreadingHTTPServer`` JSON
+front end — each connection thread blocks on its request's future while
+the single scheduler worker batches across connections, which is
+exactly the continuous-batching shape:
+
+* ``POST /v1/register``   {"panel": name, "data": [[...]], ...config}
+* ``POST /v1/<op>``       {"panel": name, ...params} → {"result": ...}
+* ``POST /v1/append``     {"panel": name, "delta": [[...]]}
+* ``GET  /panels``        registry listing
+* ``GET  /metrics``       Prometheus text (``telemetry.render_prom()``)
+* ``GET  /healthz``       liveness
+
+No third-party dependencies: stdlib HTTP, JSON bodies, numpy arrays
+serialized as nested lists (NaN encoded ``null`` per strict JSON).
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import json
+import threading
+from http.server import BaseHTTPRequestHandler, ThreadingHTTPServer
+
+import numpy as np
+
+from repro import telemetry
+from repro.serving.scheduler import OPS, Scheduler
+from repro.serving.state import Registry
+
+
+class EDMServer:
+    """Warm EDM sessions + the batching scheduler, one object."""
+
+    def __init__(self, *, autostart: bool = True, max_batch: int = 64):
+        self.registry = Registry()
+        self.scheduler = Scheduler(self.registry, autostart=autostart,
+                                   max_batch=max_batch)
+
+    def register_panel(self, name: str, panel, **kw) -> dict:
+        with telemetry.span("serve.register", panel=name):
+            return self.registry.register(name, panel, **kw)
+
+    def submit(self, op: str, panel: str, **params):
+        """Thread-safe enqueue; returns a ``concurrent.futures.Future``."""
+        return self.scheduler.submit(op, panel, **params)
+
+    def submit_many(self, op: str, panel: str, params_list: list[dict]):
+        """Bulk enqueue (one lock/wakeup); returns one Future per entry."""
+        return self.scheduler.submit_many(op, panel, params_list)
+
+    def call(self, op: str, panel: str, **params):
+        """Submit and block for the result (the one-client convenience)."""
+        return self.submit(op, panel, **params).result()
+
+    def metrics_text(self) -> str:
+        return telemetry.render_prom()
+
+    def close(self) -> None:
+        self.scheduler.close()
+
+    def __enter__(self):
+        return self
+
+    def __exit__(self, *exc):
+        self.close()
+
+
+# ------------------------------------------------------------------ JSON
+
+
+def _jsonable(obj):
+    """Results → strict-JSON values (arrays to lists, NaN to None)."""
+    if dataclasses.is_dataclass(obj) and not isinstance(obj, type):
+        return {f.name: _jsonable(getattr(obj, f.name))
+                for f in dataclasses.fields(obj)}
+    if isinstance(obj, dict):
+        return {str(k): _jsonable(v) for k, v in obj.items()}
+    if isinstance(obj, (list, tuple)):
+        return [_jsonable(v) for v in obj]
+    if isinstance(obj, np.ndarray) or hasattr(obj, "__array__"):
+        return _jsonable(np.asarray(obj).tolist())
+    if isinstance(obj, (np.floating, float)):
+        f = float(obj)
+        return f if np.isfinite(f) else None
+    if isinstance(obj, (np.integer,)):
+        return int(obj)
+    if isinstance(obj, (np.bool_,)):
+        return bool(obj)
+    return obj
+
+
+class _Handler(BaseHTTPRequestHandler):
+    server_version = "edm-serve/1"
+
+    # The EDMServer rides on the HTTP server object (set by serve_http).
+    @property
+    def edm(self) -> EDMServer:
+        return self.server.edm_server  # type: ignore[attr-defined]
+
+    def log_message(self, fmt, *args):  # quiet; telemetry covers it
+        pass
+
+    def _reply(self, code: int, payload, *, raw: str | None = None) -> None:
+        body = (raw if raw is not None
+                else json.dumps(payload)).encode("utf-8")
+        self.send_response(code)
+        self.send_header("Content-Type",
+                         "text/plain; charset=utf-8" if raw is not None
+                         else "application/json")
+        self.send_header("Content-Length", str(len(body)))
+        self.end_headers()
+        self.wfile.write(body)
+
+    def do_GET(self):  # noqa: N802 — stdlib API
+        if self.path == "/metrics":
+            self._reply(200, None, raw=self.edm.metrics_text())
+        elif self.path == "/panels":
+            self._reply(200, {"panels": self.edm.registry.infos()})
+        elif self.path == "/healthz":
+            self._reply(200, {"ok": True})
+        else:
+            self._reply(404, {"error": f"unknown path {self.path}"})
+
+    def do_POST(self):  # noqa: N802 — stdlib API
+        try:
+            n = int(self.headers.get("Content-Length", 0))
+            body = json.loads(self.rfile.read(n) or b"{}")
+            if not self.path.startswith("/v1/"):
+                self._reply(404, {"error": f"unknown path {self.path}"})
+                return
+            op = self.path[len("/v1/"):]
+            panel = body.pop("panel", None)
+            if panel is None:
+                self._reply(400, {"error": "missing 'panel'"})
+                return
+            if op == "register":
+                data = body.pop("data")
+                info = self.edm.register_panel(panel, np.asarray(
+                    data, np.float32), **body)
+                self._reply(200, {"result": info})
+                return
+            if op not in OPS:
+                self._reply(404, {"error": f"unknown op {op!r}"})
+                return
+            if op == "append":
+                body["delta"] = np.asarray(body["delta"], np.float32)
+            result = self.edm.call(op, panel, **body)
+            self._reply(200, {"result": _jsonable(result)})
+        except (KeyError, ValueError) as exc:
+            self._reply(400, {"error": str(exc)})
+        except Exception as exc:  # noqa: BLE001 — surface, don't crash
+            self._reply(500, {"error": f"{type(exc).__name__}: {exc}"})
+
+
+def serve_http(edm: EDMServer, host: str = "127.0.0.1", port: int = 0
+               ) -> ThreadingHTTPServer:
+    """Start the JSON front end on a daemon thread; returns the HTTP
+    server (``.server_address`` has the bound port; ``.shutdown()``
+    stops it). ``port=0`` binds an ephemeral port — the test/CI mode."""
+    httpd = ThreadingHTTPServer((host, port), _Handler)
+    httpd.edm_server = edm  # type: ignore[attr-defined]
+    threading.Thread(target=httpd.serve_forever, name="edm-serve-http",
+                     daemon=True).start()
+    return httpd

@@ -1,0 +1,305 @@
+"""Continuous batching scheduler for EDM serving.
+
+One FIFO queue, one worker thread, and a coalescing rule:
+
+* Every request carries a **signature** captured at submit time. For a
+  default-cap CCM request that is ``("ccm", panel, E, queued_version)``
+  — the compatibility class the ISSUE names: same panel, same embedding
+  geometry, same library state.
+* The worker always dequeues the HEAD request (FIFO — a long-queued
+  request is never starved by later arrivals) and then pulls every
+  other queued request with the *same signature* into its batch, in
+  arrival order. Compatible requests that arrived while earlier work
+  was executing ride the next launch — continuous batching, not fixed
+  windows.
+* A batch of n compatible CCM requests becomes ONE ``EDM.ccm_batch``
+  launch (the library-batched matrix engine,  ``drive_batched``'s
+  dispatch/assemble overlap underneath) instead of n single-pair engine
+  passes. ``ccm_batch``'s bit contract is batch invariance: a pair's ρ
+  never depends on which other requests share its launch, so
+  ``ccm_batch([(l, t)])`` is the quiesced oracle for every served
+  answer — batching changes throughput, never answers. Solo default-cap
+  requests go through the same method for the same reason.
+* An **append is a version barrier**: submitting it bumps the panel's
+  ``queued_version``, so requests behind it carry a signature no
+  earlier batch can match, and the FIFO order does the rest. Appends
+  themselves never coalesce.
+* Whole-panel ops (``xmap``, ``simplex``, ``optimal_E``,
+  ``surrogate_test``) coalesce only as exact duplicates — identical
+  params on the same version — which collapses request stampedes into
+  one execution fanned out to every waiting future.
+
+Telemetry: ``serve_queue_depth`` / ``serve_batch_occupancy`` gauges,
+``serve_latency_ms_<op>`` histograms, ``serve_requests`` /
+``serve_batches`` / ``serve_launches_saved`` counters, and a span per
+batch with per-request events.
+"""
+
+from __future__ import annotations
+
+import collections
+import dataclasses
+import threading
+import time
+from concurrent.futures import Future
+
+import numpy as np
+
+from repro import telemetry
+from repro.serving.state import PanelEntry, Registry
+
+#: Ops a request may carry; anything else is rejected at submit.
+OPS = ("ccm", "xmap", "simplex", "surrogate_test", "optimal_E", "append")
+
+
+@dataclasses.dataclass
+class Request:
+    ticket: int
+    op: str
+    panel: str
+    params: dict
+    signature: tuple
+    future: Future
+    t_submit: float
+
+
+def _frozen(params: dict) -> tuple:
+    """Hashable, order-insensitive view of request params."""
+    out = []
+    for k in sorted(params):
+        v = params[k]
+        if isinstance(v, (list, tuple)):
+            v = tuple(v)
+        elif isinstance(v, np.ndarray):
+            v = ("array", v.shape, v.tobytes())
+        out.append((k, v))
+    return tuple(out)
+
+
+class Scheduler:
+    """FIFO queue + single drain worker over a panel ``Registry``."""
+
+    def __init__(self, registry: Registry, *, autostart: bool = True,
+                 max_batch: int = 64):
+        self.registry = registry
+        self.max_batch = max_batch
+        self._q: collections.deque[Request] = collections.deque()
+        self._cv = threading.Condition()
+        self._next_ticket = 0
+        self._closed = False
+        self._worker = None
+        if autostart:
+            self._worker = threading.Thread(
+                target=self._run, name="edm-serve-worker", daemon=True)
+            self._worker.start()
+
+    # ------------------------------------------------------------ submit
+
+    def submit(self, op: str, panel: str, **params) -> Future:
+        """Enqueue a request; thread-safe; returns its ``Future``.
+
+        The coalescing signature (and, for appends, the version bump
+        that makes them barriers) is fixed here, under the queue lock —
+        after ``submit`` returns, no later request can be batched ahead
+        of this one's library state.
+        """
+        return self.submit_many(op, panel, [params])[0]
+
+    def submit_many(self, op: str, panel: str,
+                    params_list: list[dict]) -> list[Future]:
+        """Enqueue a burst of same-op requests under ONE lock acquisition.
+
+        The bulk path for saturating clients: signatures are still
+        per-request (so coalescing semantics are identical to n
+        ``submit`` calls in the same order), but queue-lock traffic,
+        telemetry, and worker wakeup are paid once per burst. The
+        scheduler takes ownership of the param dicts — callers must not
+        mutate them after submitting.
+        """
+        if op not in OPS:
+            raise ValueError(f"unknown op {op!r}; expected one of {OPS}")
+        entry = self.registry.get(panel)  # raises for unknown panels
+        futs = [Future() for _ in params_list]
+        now = time.perf_counter()
+        with self._cv:
+            if self._closed:
+                raise RuntimeError("scheduler is closed")
+            for params, fut in zip(params_list, futs):
+                ticket = self._next_ticket
+                self._next_ticket += 1
+                if op == "append":
+                    entry.queued_version += 1
+                    sig = ("append", panel, ticket)
+                elif (op == "ccm" and params.get("E") is not None
+                        and params.get("lib_sizes") is None):
+                    sig = ("ccm", panel, int(params["E"]),
+                           entry.queued_version)
+                else:  # sweeps / E-to-resolve CCM: solo. Panel ops: dedup.
+                    sig = ((op, panel, ticket) if op == "ccm"
+                           else (op, panel, entry.queued_version,
+                                 _frozen(params)))
+                self._q.append(Request(ticket, op, panel, params,
+                                       sig, fut, now))
+            telemetry.gauge("serve_queue_depth").set(len(self._q))
+            telemetry.counter("serve_requests").inc(len(futs))
+            self._cv.notify()
+        return futs
+
+    # ------------------------------------------------------------- drain
+
+    def drain_once(self, timeout: float | None = 0.0) -> int:
+        """Process one batch in the calling thread; returns its size.
+
+        The deterministic test/bench entry (``autostart=False``): the
+        exact coalescing the worker would perform, minus the thread.
+        """
+        batch = self._take_batch(timeout)
+        if not batch:
+            return 0
+        self._execute(batch)
+        return len(batch)
+
+    def _run(self) -> None:
+        while True:
+            batch = self._take_batch(timeout=0.1)
+            if batch is None:  # closed and drained
+                return
+            if batch:
+                self._execute(batch)
+
+    def _take_batch(self, timeout) -> list[Request] | None:
+        """Pop the head request plus every queued signature-match."""
+        with self._cv:
+            if not self._q:
+                if self._closed:
+                    return None
+                self._cv.wait(timeout)
+                if not self._q:
+                    return None if self._closed else []
+            head = self._q.popleft()
+            batch = [head]
+            if head.op != "append":
+                rest = collections.deque()
+                while self._q and len(batch) < self.max_batch:
+                    r = self._q.popleft()
+                    if r.signature == head.signature:
+                        batch.append(r)
+                    else:
+                        rest.append(r)
+                rest.extend(self._q)
+                self._q = rest
+            telemetry.gauge("serve_queue_depth").set(len(self._q))
+        telemetry.gauge("serve_batch_occupancy").set(len(batch))
+        telemetry.histogram("serve_batch_occupancy_hist").observe(len(batch))
+        if len(batch) > 1:
+            telemetry.counter("serve_launches_saved").inc(len(batch) - 1)
+        return batch
+
+    # ----------------------------------------------------------- execute
+
+    def _execute(self, batch: list[Request]) -> None:
+        head = batch[0]
+        entry = self.registry.get(head.panel)
+        t0 = time.perf_counter()
+        try:
+            with telemetry.span("serve.batch", op=head.op, panel=head.panel,
+                                size=len(batch)):
+                if head.op == "ccm" and len(batch) > 1:
+                    results = self._exec_ccm_batch(entry, batch)
+                else:
+                    results = [self._exec_one(entry, r) for r in batch]
+        except Exception as exc:  # noqa: BLE001 — failures go to futures
+            telemetry.counter("serve_errors").inc()
+            for r in batch:
+                r.future.set_exception(exc)
+            return
+        done = time.perf_counter()
+        ms = (done - t0) * 1e3
+        hist = telemetry.histogram(f"serve_latency_ms_{head.op}")
+        live = telemetry.active()  # per-request events only under a sink
+        for r, res in zip(batch, results):
+            if live:
+                telemetry.event("serve.request", op=r.op, ticket=r.ticket,
+                                batched_with=len(batch) - 1,
+                                queued_ms=(t0 - r.t_submit) * 1e3,
+                                exec_ms=ms)
+            hist.observe((done - r.t_submit) * 1e3)
+            r.future.set_result(res)
+        telemetry.counter("serve_batches").inc()
+
+    def _exec_one(self, entry: PanelEntry, r: Request):
+        sess = entry.sess
+        p = r.params
+        if r.op == "append":
+            records = sess.append(np.asarray(p["delta"], np.float32))
+            entry.version += 1
+            telemetry.counter("serve_appends").inc()
+            return {"records": records, "version": entry.version,
+                    "N": sess.data.N, "L": sess.data.L}
+        if r.op == "ccm":
+            if p.get("lib_sizes") is not None:  # sweep: classic engine
+                return sess.ccm(p["lib"], p["target"],
+                                lib_sizes=p["lib_sizes"], E=p.get("E"))
+            # Default-cap requests ALWAYS go through the batch engine —
+            # solo or coalesced, a pair's answer has the same bits.
+            E = p.get("E")
+            if E is None:
+                E = sess._resolve_pair_E(sess.data.index_of(p["target"]),
+                                         None)
+            return sess.ccm_batch([(p["lib"], p["target"])], E=E)[0]
+        if r.op == "xmap":
+            return sess.xmap(p.get("method", "simplex"),
+                             theta=p.get("theta"))
+        if r.op == "simplex":
+            return sess.simplex(p.get("E"))
+        if r.op == "optimal_E":
+            return sess.optimal_E()
+        if r.op == "surrogate_test":
+            return sess.surrogate_test(
+                p["lib"], p["target"],
+                num_surrogates=p.get("num_surrogates", 100),
+                method=p.get("method", "shuffle"),
+                period=p.get("period"), seed=p.get("seed", 0))
+        raise AssertionError(f"unreachable op {r.op!r}")
+
+    def _exec_ccm_batch(self, entry: PanelEntry, batch: list[Request]):
+        """n compatible CCM pairs as ONE coalesced engine launch.
+
+        ``EDM.ccm_batch`` owns the bit contract (batch-invariant
+        answers; see its docstring) — the scheduler only supplies the
+        coalesced pair list and the telemetry.
+        """
+        sess = entry.sess
+        E = int(batch[0].params["E"])
+        pairs = [(r.params["lib"], r.params["target"]) for r in batch]
+        rho = sess.ccm_batch(pairs, E=E)
+        telemetry.counter("serve_ccm_group_launches").inc()
+        self._bump_session(sess, "ccm_coalesced", len(batch))
+        return list(rho)  # np.float32 scalars, no copies
+
+    @staticmethod
+    def _bump_session(sess, key, n) -> None:
+        sess.stats[key] += n
+        telemetry.counter(f"edm_{key}").inc(n)
+
+    # ------------------------------------------------------------- close
+
+    def close(self) -> None:
+        """Stop accepting work; fail queued requests; join the worker."""
+        with self._cv:
+            if self._closed:
+                return
+            self._closed = True
+            pending = list(self._q)
+            self._q.clear()
+            self._cv.notify_all()
+        for r in pending:
+            r.future.set_exception(RuntimeError("scheduler closed"))
+        if self._worker is not None:
+            self._worker.join(timeout=5.0)
+
+    def __enter__(self):
+        return self
+
+    def __exit__(self, *exc):
+        self.close()

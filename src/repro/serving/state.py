@@ -1,0 +1,102 @@
+"""Panel registry for the EDM server: warm sessions + append versioning.
+
+One ``PanelEntry`` per registered panel, owning the long-lived ``EDM``
+session (so its kNN master, optimal-E curves, and jit caches stay warm
+across requests) and the two version counters the scheduler's
+coalescing rule is built on:
+
+* ``version``          — committed library state, bumped when an append
+                         EXECUTES. Results are tagged with it.
+* ``queued_version``   — what a request submitted *now* will observe,
+                         bumped when an append is ENQUEUED. Requests
+                         capture it in their coalescing signature, so a
+                         query behind a pending append can never be
+                         pulled into a batch that runs ahead of it: the
+                         append is a version barrier by construction.
+
+All mutation goes through the registry lock; the scheduler's single
+worker thread is the only caller that touches sessions after
+registration.
+"""
+
+from __future__ import annotations
+
+import threading
+
+import numpy as np
+
+from repro.edm.config import EDMConfig
+from repro.edm.session import EDM
+
+
+class PanelEntry:
+    """A registered panel: warm session + version counters."""
+
+    def __init__(self, name: str, sess: EDM):
+        self.name = name
+        self.sess = sess
+        self.version = 0
+        self.queued_version = 0
+
+    def info(self) -> dict:
+        """JSON-ready description (the ``/panels`` listing row)."""
+        return {
+            "name": self.name,
+            "N": self.sess.data.N,
+            "L": self.sess.data.L,
+            "version": self.version,
+            "num_invalid": self.sess.data.num_invalid,
+            "E_max": self.sess.config.E_max,
+            "tau": self.sess.config.tau,
+        }
+
+
+class Registry:
+    """Name → ``PanelEntry`` map behind one lock."""
+
+    def __init__(self):
+        self._lock = threading.Lock()
+        self._panels: dict[str, PanelEntry] = {}
+
+    @property
+    def lock(self) -> threading.Lock:
+        return self._lock
+
+    def register(self, name: str, panel, *, names=None,
+                 config: EDMConfig | None = None, **overrides) -> dict:
+        """Bind a panel under ``name``; rejects duplicates.
+
+        Construction (including the Dataset screen) happens outside the
+        registry lock — a big panel must not stall the scheduler — and
+        the name is claimed atomically afterwards.
+        """
+        panel = np.asarray(panel, np.float32)
+        if config is None:
+            config = EDMConfig(**overrides)
+        elif overrides:
+            config = config.replace(**overrides)
+        from repro.edm.dataset import Dataset
+        sess = EDM(Dataset(panel, names=names,
+                           on_invalid=config.on_invalid), config)
+        entry = PanelEntry(name, sess)
+        with self._lock:
+            if name in self._panels:
+                raise ValueError(f"panel {name!r} is already registered")
+            self._panels[name] = entry
+        return entry.info()
+
+    def get(self, name: str) -> PanelEntry:
+        with self._lock:
+            try:
+                return self._panels[name]
+            except KeyError:
+                raise KeyError(f"no panel registered as {name!r}") from None
+
+    def names(self) -> list[str]:
+        with self._lock:
+            return sorted(self._panels)
+
+    def infos(self) -> list[dict]:
+        with self._lock:
+            entries = list(self._panels.values())
+        return [e.info() for e in entries]

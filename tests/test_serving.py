@@ -1,0 +1,317 @@
+"""EDM server: scheduler coalescing, append barriers, HTTP front end.
+
+The serving contracts (ISSUE 8):
+
+* FIFO across signatures — a batch never executes before an earlier
+  incompatible request.
+* Compatible CCM requests coalesce into ONE launch whose per-request
+  answers are bit-identical to direct ``EDM`` session calls (telemetry
+  counter-delta assertions, PR-7 style — no monkeypatching).
+* An append is a version barrier: requests behind it see the grown
+  library, requests ahead of it the old one, and every answer is
+  bit-identical to the quiesced ordering.
+* The submit API is thread-safe under concurrent clients.
+"""
+
+import json
+import threading
+import urllib.request
+
+import numpy as np
+import pytest
+
+from repro import telemetry
+from repro.edm.session import EDM
+from repro.serving import EDMServer, serve_http
+
+
+@pytest.fixture(scope="module")
+def panel():
+    from repro.data.timeseries import forced_network_panel
+    p, _ = forced_network_panel(6, 300, seed=9)
+    return np.asarray(p)
+
+
+PAIRS = [(0, 2), (1, 3), (0, 4), (2, 5), (1, 2), (3, 0)]
+
+
+def _direct(panel):
+    sess = EDM(panel, E_max=4, cache=True)
+    sess.optimal_E()
+    return sess
+
+
+# ------------------------------------------------------------ coalescing
+
+
+def test_compatible_ccm_requests_coalesce_into_one_launch(panel):
+    old = panel[:, :280]
+    with telemetry.record() as rec, EDMServer(autostart=False) as srv:
+        srv.register_panel("p", old, E_max=4, cache=True)
+        srv.submit("optimal_E", "p")
+        srv.scheduler.drain_once()
+        futs = [srv.submit("ccm", "p", lib=l, target=t, E=3)
+                for l, t in PAIRS]
+        assert srv.scheduler.drain_once() == len(PAIRS)  # one batch
+        got = [f.result(timeout=5) for f in futs]
+    # ONE coalesced launch, n−1 launches saved — counter-delta style.
+    assert rec.counter_delta("serve_ccm_group_launches") == 1
+    assert rec.counter_delta("serve_batches") == 2  # optimal_E + ccm batch
+    assert rec.counter_delta("serve_launches_saved") == len(PAIRS) - 1
+    assert rec.counter_delta("serve_requests") == len(PAIRS) + 1
+    direct = _direct(old)
+    for (l, t), rho in zip(PAIRS, got):
+        # bit-identical to the direct session call (singleton ccm_batch
+        # is the quiesced oracle — batch composition must not matter)...
+        np.testing.assert_array_equal(
+            np.asarray(rho), direct.ccm_batch([(l, t)], E=3)[0],
+            err_msg=f"pair ({l},{t}) not bit-identical to direct call")
+        # ...and numerically the classic single-pair engine's answer.
+        np.testing.assert_allclose(
+            np.asarray(rho), np.asarray(direct.ccm(l, t, E=3)),
+            rtol=1e-6, atol=1e-6)
+
+
+def test_fifo_across_mixed_signatures(panel):
+    """A later-arriving compatible request must not leapfrog an earlier
+    incompatible one: batches run in head-of-queue arrival order."""
+    old = panel[:, :280]
+    with telemetry.record() as rec, EDMServer(autostart=False) as srv:
+        srv.register_panel("p", old, E_max=4, cache=True)
+        srv.submit("ccm", "p", lib=0, target=2, E=3)
+        srv.submit("ccm", "p", lib=1, target=3, E=2)   # different E
+        srv.submit("simplex", "p", E=3)
+        srv.submit("ccm", "p", lib=0, target=4, E=3)   # compatible w/ head
+        sizes = []
+        while True:
+            n = srv.scheduler.drain_once()
+            if not n:
+                break
+            sizes.append(n)
+    # E=3 head coalesces with the 4th request; E=2 and simplex stay solo
+    # and execute in arrival order between them.
+    assert sizes == [2, 1, 1]
+    batches = [e for e in rec.spans("serve.batch")]
+    assert [b["attrs"]["op"] for b in batches] == ["ccm", "ccm", "simplex"]
+    assert [b["attrs"]["size"] for b in batches] == [2, 1, 1]
+
+
+def test_duplicate_panel_ops_dedup_to_one_execution(panel):
+    old = panel[:, :280]
+    with telemetry.record() as rec, EDMServer(autostart=False) as srv:
+        srv.register_panel("p", old, E_max=4, cache=True)
+        futs = [srv.submit("optimal_E", "p") for _ in range(4)]
+        assert srv.scheduler.drain_once() == 4
+        results = [f.result(timeout=5) for f in futs]
+    assert rec.counter_delta("serve_batches") == 1
+    assert rec.counter_delta("edm_knn_master_builds") == 1  # ONE compute
+    for E_opt, rho in results[1:]:
+        np.testing.assert_array_equal(E_opt, results[0][0])
+        np.testing.assert_array_equal(rho, results[0][1])
+
+
+def test_ccm_batch_is_batch_invariant(panel):
+    """The serving bit contract: a pair's ρ is independent of which
+    other pairs share its launch (singleton == any batch)."""
+    sess = _direct(panel[:, :280])
+    full = sess.ccm_batch(PAIRS, E=3)
+    for j, pair in enumerate(PAIRS):
+        np.testing.assert_array_equal(
+            sess.ccm_batch([pair], E=3)[0], full[j],
+            err_msg=f"pair {pair} depends on batch composition")
+    np.testing.assert_array_equal(
+        sess.ccm_batch(PAIRS[2:5], E=3), full[2:5])
+    # and numerically equivalent to the classic engine
+    for j, (l, t) in enumerate(PAIRS):
+        np.testing.assert_allclose(full[j], np.asarray(sess.ccm(l, t, E=3)),
+                                   rtol=1e-6, atol=1e-6)
+
+
+# --------------------------------------------------------- append barrier
+
+
+def test_append_sequences_against_inflight_compatible_batch(panel):
+    """Requests queued before/after an append resolve against the
+    pre-/post-append library — bit-identical to the quiesced order."""
+    old, delta = panel[:, :280], panel[:, 280:]
+    with telemetry.record() as rec, EDMServer(autostart=False) as srv:
+        srv.register_panel("p", old, E_max=4, cache=True)
+        srv.submit("optimal_E", "p")
+        srv.scheduler.drain_once()
+        pre = [srv.submit("ccm", "p", lib=l, target=t, E=3)
+               for l, t in PAIRS[:3]]
+        fa = srv.submit("append", "p", delta=delta)
+        post = [srv.submit("ccm", "p", lib=l, target=t, E=3)
+                for l, t in PAIRS[:3]]
+        sizes = []
+        while True:
+            n = srv.scheduler.drain_once()
+            if not n:
+                break
+            sizes.append(n)
+        # pre-batch coalesced, append solo (barrier), post-batch coalesced
+        assert sizes == [3, 1, 3]
+        assert fa.result(timeout=5)["L"] == panel.shape[1]
+        assert rec.counter_delta("serve_appends") == 1
+        assert rec.counter_delta("edm_knn_master_appends") == 1  # no rebuild
+        d_old = _direct(old)
+        d_new = _direct(panel)
+        for (l, t), f in zip(PAIRS[:3], pre):
+            np.testing.assert_array_equal(
+                np.asarray(f.result(timeout=5)),
+                d_old.ccm_batch([(l, t)], E=3)[0],
+                err_msg=f"pre-append pair ({l},{t})")
+        for (l, t), f in zip(PAIRS[:3], post):
+            np.testing.assert_array_equal(
+                np.asarray(f.result(timeout=5)),
+                d_new.ccm_batch([(l, t)], E=3)[0],
+                err_msg=f"post-append pair ({l},{t})")
+
+
+def test_append_rejects_nan_delta_and_names_series(panel):
+    old, delta = panel[:, :280], panel[:, 280:].copy()
+    delta[2, 1] = np.nan
+    with EDMServer(autostart=False) as srv:
+        srv.register_panel("p", old, names=[f"s{i}" for i in range(6)],
+                           E_max=4)
+        fut = srv.submit("append", "p", delta=delta)
+        srv.scheduler.drain_once()
+        with pytest.raises(ValueError, match="series s2"):
+            fut.result(timeout=5)
+        # server state untouched: panel length unchanged, next op fine
+        assert srv.registry.get("p").sess.data.L == 280
+
+
+# --------------------------------------------------------- threaded mode
+
+
+def test_concurrent_clients_threaded_worker(panel):
+    old = panel[:, :280]
+    direct = _direct(old)
+    want = {(l, t): direct.ccm_batch([(l, t)], E=3)[0] for l, t in PAIRS}
+    with EDMServer() as srv:  # live worker thread
+        srv.register_panel("p", old, E_max=4, cache=True)
+        srv.call("optimal_E", "p")
+        results: dict = {}
+        errs: list = []
+
+        def client(pair):
+            try:
+                results[pair] = np.asarray(
+                    srv.call("ccm", "p", lib=pair[0], target=pair[1], E=3))
+            except Exception as exc:  # noqa: BLE001
+                errs.append(exc)
+
+        threads = [threading.Thread(target=client, args=(p,))
+                   for p in PAIRS * 3]
+        for t in threads:
+            t.start()
+        for t in threads:
+            t.join(timeout=60)
+        assert not errs
+    for pair, rho in results.items():
+        np.testing.assert_array_equal(rho, want[pair],
+                                      err_msg=f"pair {pair}")
+
+
+def test_append_during_inflight_traffic_is_linearized(panel):
+    """Concurrent clients + one append tick: every answer matches the
+    pre- or post-append direct value, and anything submitted after the
+    append resolves matches post-append exactly."""
+    old, delta = panel[:, :280], panel[:, 280:]
+    d_old = _direct(old)
+    d_new = _direct(panel)
+    pre = {p: d_old.ccm_batch([p], E=3)[0] for p in PAIRS}
+    post = {p: d_new.ccm_batch([p], E=3)[0] for p in PAIRS}
+    with EDMServer() as srv:
+        srv.register_panel("p", old, E_max=4, cache=True)
+        srv.call("optimal_E", "p")
+        answers: list = []
+        errs: list = []
+
+        def client(pair):
+            try:
+                answers.append(
+                    (pair, np.asarray(srv.call("ccm", "p", lib=pair[0],
+                                               target=pair[1], E=3))))
+            except Exception as exc:  # noqa: BLE001
+                errs.append(exc)
+
+        threads = [threading.Thread(target=client, args=(p,))
+                   for p in PAIRS * 2]
+        for t in threads[:6]:
+            t.start()
+        fa = srv.submit("append", "p", delta=delta)
+        for t in threads[6:]:
+            t.start()
+        for t in threads:
+            t.join(timeout=120)
+        assert not errs and fa.result(timeout=60)["L"] == panel.shape[1]
+        for pair, rho in answers:
+            assert (np.array_equal(rho, pre[pair])
+                    or np.array_equal(rho, post[pair])), \
+                f"pair {pair}: answer matches neither library version"
+        # quiesced: everything from here on is post-append, exactly
+        for pair in PAIRS:
+            np.testing.assert_array_equal(
+                np.asarray(srv.call("ccm", "p", lib=pair[0],
+                                    target=pair[1], E=3)), post[pair])
+
+
+# ---------------------------------------------------------------- errors
+
+
+def test_unknown_panel_and_op_rejected(panel):
+    with EDMServer(autostart=False) as srv:
+        with pytest.raises(KeyError, match="ghost"):
+            srv.submit("ccm", "ghost", lib=0, target=1)
+        srv.register_panel("p", panel[:, :280])
+        with pytest.raises(ValueError, match="unknown op"):
+            srv.submit("smap_all_the_things", "p")
+        with pytest.raises(ValueError, match="already registered"):
+            srv.register_panel("p", panel[:, :280])
+
+
+# ------------------------------------------------------------------ HTTP
+
+
+def test_http_front_end_roundtrip(panel):
+    old, delta = panel[:, :280], panel[:, 280:]
+    with EDMServer() as srv:
+        httpd = serve_http(srv)
+        port = httpd.server_address[1]
+
+        def post(path, body, code=200):
+            req = urllib.request.Request(
+                f"http://127.0.0.1:{port}{path}",
+                json.dumps(body).encode(),
+                {"Content-Type": "application/json"})
+            try:
+                with urllib.request.urlopen(req, timeout=120) as r:
+                    assert r.status == code
+                    return json.loads(r.read())
+            except urllib.error.HTTPError as e:
+                assert e.code == code
+                return json.loads(e.read())
+
+        info = post("/v1/register",
+                    {"panel": "p", "data": old.tolist(), "E_max": 4})
+        assert info["result"]["L"] == 280
+        rho = post("/v1/ccm",
+                   {"panel": "p", "lib": 0, "target": 2, "E": 3})["result"]
+        direct = _direct(old)
+        assert rho == pytest.approx(float(direct.ccm(0, 2, E=3)))
+        grown = post("/v1/append",
+                     {"panel": "p", "delta": delta.tolist()})["result"]
+        assert grown["L"] == panel.shape[1] and grown["version"] == 1
+        assert post("/v1/ccm", {"panel": "ghost", "lib": 0, "target": 1},
+                    code=400)["error"]
+        with urllib.request.urlopen(
+                f"http://127.0.0.1:{port}/metrics", timeout=30) as r:
+            prom = r.read().decode()
+        assert "serve_requests" in prom and "serve_queue_depth" in prom
+        with urllib.request.urlopen(
+                f"http://127.0.0.1:{port}/panels", timeout=30) as r:
+            panels = json.loads(r.read())["panels"]
+        assert panels[0]["name"] == "p" and panels[0]["version"] == 1
+        httpd.shutdown()
