@@ -15,6 +15,15 @@ Three sections, matching the PR-8 acceptance criteria:
     batched engine (``EDM.ccm_batch`` over the same pairs) directly —
     i.e. the scheduler may cost at most 20% on top of the engine it
     feeds. The bench fails below that ratio.
+  * **multi-panel worker pool** — 4 panels' worth of compatible CCM
+    bursts drained by the 4-worker pool vs the same load through a
+    single drain worker (the PR-8 architecture, ``workers=1``). Distinct
+    panels execute concurrently in the pool, so with ≥2 usable cores the
+    aggregate pairs/s must be ≥2× the single-drain baseline — the bench
+    *fails* otherwise. On a 1-core host (CI containers; parallel
+    speedup is physically impossible) the row is tagged
+    ``degraded_1core`` and the gate degrades to "pooling must not
+    regress" (≥0.85× single drain) — an honest gate beats a vacuous one.
   * **concurrency sweep** — req/s and p50/p99 latency with 1/4/16
     threaded clients issuing blocking compatible CCM calls against the
     live worker, plus the mean batch occupancy the scheduler achieved
@@ -29,6 +38,7 @@ vs the warm engine, req/s with latency percentiles and occupancy.
 from __future__ import annotations
 
 import itertools
+import os
 import threading
 import time
 
@@ -51,6 +61,11 @@ N_SERIES, L_SERVE, E_SERVE = 24, 4096, 3
 MIN_RATIO = 0.8
 CLIENT_COUNTS = (1, 4, 16)
 REQS_PER_CLIENT = 30
+
+# Multi-panel section: 4 panels, pooled drain vs single drain.
+N_MP, L_MP, PANELS_MP = 12, 2048, 4
+MIN_MP_SPEEDUP = 2.0   # with >= 2 usable cores: pool must parallelize
+MIN_MP_1CORE = 0.85    # 1-core host: pooling must at least not regress
 
 
 def _run_append_vs_rebuild():
@@ -140,6 +155,72 @@ def _run_saturated_queue():
             f"engine (acceptance >= {MIN_RATIO}x)")
 
 
+def _usable_cores() -> int:
+    try:
+        return len(os.sched_getaffinity(0))
+    except AttributeError:  # non-Linux
+        return os.cpu_count() or 1
+
+
+def _run_multi_panel():
+    """4-panel aggregate throughput: worker pool vs single drain.
+
+    The gate is core-aware on purpose: distinct panels drain on distinct
+    worker threads, so the ≥2× aggregate claim only holds where ≥2 cores
+    can actually run them — on a 1-core host the same row asserts the
+    pool costs at most 15% over the serial drain (no-regression), tagged
+    ``degraded_1core`` so dashboards never mistake it for the parallel
+    measurement.
+    """
+    panels = {f"mp{i}": tent_map_panel(N_MP, L_MP, seed=20 + i)
+              for i in range(PANELS_MP)}
+    pairs = [(i, j) for i, j in itertools.product(range(N_MP), repeat=2)
+             if i != j]
+    plist = [{"lib": l, "target": t, "E": E_SERVE} for l, t in pairs]
+
+    def burst(srv):
+        futs = [f for name in panels
+                for f in srv.submit_many("ccm", name, plist)]
+        for f in futs:
+            f.result()
+
+    with EDMServer(autostart=True, workers=PANELS_MP,
+                   max_batch=len(pairs) + 8) as pooled, \
+         EDMServer(autostart=True, workers=1,
+                   max_batch=len(pairs) + 8) as single:
+        for srv in (pooled, single):
+            for name, x in panels.items():
+                srv.register_panel(name, x, E_max=E_SERVE, cache=True)
+            burst(srv)  # warm: masters + jit off the timed path
+        target = (MIN_MP_SPEEDUP if _usable_cores() >= 2 else MIN_MP_1CORE)
+        # Alternate and take mins, same rationale as the saturated row.
+        t_pool = t_single = np.inf
+        for i in range(15):
+            if i >= 5 and t_pool <= t_single / target:
+                break
+            t0 = time.perf_counter()
+            burst(pooled)
+            t1 = time.perf_counter()
+            burst(single)
+            t2 = time.perf_counter()
+            t_pool = min(t_pool, (t1 - t0) * 1e6)
+            t_single = min(t_single, (t2 - t1) * 1e6)
+    agg = PANELS_MP * len(pairs)
+    ratio = t_single / t_pool
+    tag = (f"{agg / (t_pool / 1e6):.0f}pairs_per_s_{ratio:.2f}"
+           f"x_single_drain")
+    if _usable_cores() < 2:
+        tag += "_degraded_1core"
+    row(f"serve/multi_panel_pool{PANELS_MP}", t_pool, tag)
+    row("serve/multi_panel_single_drain", t_single,
+        f"{agg / (t_single / 1e6):.0f}pairs_per_s")
+    if ratio < target:
+        raise SystemExit(
+            f"multi-panel pool sustains only {ratio:.2f}x the single "
+            f"drain on {_usable_cores()} usable core(s) "
+            f"(acceptance >= {target}x)")
+
+
 def _run_concurrency_sweep():
     panel = tent_map_panel(N_SERIES, L_SERVE, seed=7)
     pairs = _all_pairs()
@@ -182,6 +263,7 @@ def _run_concurrency_sweep():
 def run():
     _run_append_vs_rebuild()
     _run_saturated_queue()
+    _run_multi_panel()
     _run_concurrency_sweep()
 
 

@@ -1,6 +1,7 @@
-"""Serving smoke: concurrent HTTP clients ≡ direct sessions, one append tick.
+"""Serving smoke + phase-2 soak: HTTP clients ≡ direct sessions, always.
 
-The CI job for the serving subsystem (docs/ARCHITECTURE.md "Serving"):
+The CI job for the serving subsystem (docs/ARCHITECTURE.md "Serving").
+Part 1, the single-panel smoke:
 
 * start an ``EDMServer`` behind the stdlib HTTP front end on an
   ephemeral port and register a panel over the wire;
@@ -15,6 +16,16 @@ The CI job for the serving subsystem (docs/ARCHITECTURE.md "Serving"):
   incremental kNN-master merge is indistinguishable from a rebuild;
 * record the whole run to a telemetry JSONL sink and assert it is
   schema-valid and contains the serve spans/metrics CI expects.
+
+Part 2, the multi-panel soak (~1 min wall budget): three panels behind
+the worker pool with an LRU master byte budget sized to ~1.5 masters,
+so round-robin load keeps evicting cold masters while concurrent HTTP
+clients query all panels and per-panel append ticks stream through a
+subscription. Every answer and every subscription tick must bit-match
+the per-version direct-session oracle, ``/healthz`` must stay OK with
+all workers alive, the registry must respect the byte budget, and at
+least one eviction must actually have happened (else the soak proved
+nothing).
 
 Run: ``PYTHONPATH=src python examples/serve_edm.py [out_dir]``
 
@@ -157,5 +168,123 @@ def main() -> None:
     print("SERVE SMOKE OK")
 
 
+# ---------------------------------------------------------------- soak
+
+SOAK_PANELS = 3
+SOAK_TICKS = 2
+SOAK_SERIES, SOAK_L, SOAK_DT = 8, 240, 6
+
+
+def soak() -> None:
+    """Multi-panel worker pool + LRU eviction + subscriptions, ~60 s."""
+    rng = np.random.default_rng(77)
+    full = {f"soak{i}": rng.standard_normal(
+        (SOAK_SERIES, SOAK_L + SOAK_TICKS * SOAK_DT)).astype(np.float32)
+        for i in range(SOAK_PANELS)}
+    pairs = [(i, (i + 3) % SOAK_SERIES) for i in range(SOAK_SERIES)]
+    watch = pairs[:4]
+
+    # Per-version direct oracles (and the size of one warm master, which
+    # calibrates the byte budget to ~1.5 masters so LRU churn is forced).
+    oracle: dict[str, list[dict]] = {}
+    one_master = 0
+    for name, x in full.items():
+        per_v = []
+        for v in range(SOAK_TICKS + 1):
+            sess = EDM(x[:, : SOAK_L + v * SOAK_DT], EDMConfig(**CFG))
+            per_v.append({p: sess.ccm_batch([p], E=E_REQ)[0]
+                          for p in pairs})
+            one_master = max(one_master, sess.master_nbytes())
+        oracle[name] = per_v
+    budget_mb = 1.5 * one_master / 2**20
+
+    srv = EDMServer(workers=SOAK_PANELS, master_budget_mb=budget_mb)
+    httpd = serve_http(srv)
+    port = httpd.server_address[1]
+    evictions0 = telemetry.counter("serve_evictions").value
+    try:
+        for name, x in full.items():
+            _post(port, "register", panel=name,
+                  data=x[:, :SOAK_L].tolist(), **CFG)
+        subs = {name: _post(port, "subscribe", panel=name,
+                            pairs=[list(p) for p in watch],
+                            E=E_REQ)["result"] for name in full}
+        for name, sub in subs.items():  # baseline tick = version 0
+            _bit_match_vec(sub["rho"], [oracle[name][0][p] for p in watch],
+                           f"{name} subscribe baseline")
+
+        for tick in range(SOAK_TICKS + 1):
+            # Concurrent clients sweep every panel at the current version.
+            errors: list[BaseException] = []
+
+            def client(cid: int, v=tick) -> None:
+                try:
+                    for name in full:
+                        for lib, tgt in pairs[cid::2]:
+                            r = _post(port, "ccm", panel=name, lib=lib,
+                                      target=tgt, E=E_REQ)["result"]
+                            _bit_match(r, oracle[name][v][(lib, tgt)],
+                                       f"soak v{v} {name} ccm{(lib, tgt)}")
+                except BaseException as exc:
+                    errors.append(exc)
+
+            threads = [threading.Thread(target=client, args=(i,))
+                       for i in range(N_CLIENTS)]
+            for t in threads:
+                t.start()
+            for t in threads:
+                t.join()
+            if errors:
+                raise errors[0]
+
+            h = json.loads(_get(port, "/healthz"))
+            assert h["ok"] and all(w["alive"] for w in h["workers"]), h
+            assert h["master_bytes"] <= h["master_budget_bytes"], h
+
+            if tick == SOAK_TICKS:
+                break
+            for name, x in full.items():  # one append tick per panel
+                lo = SOAK_L + tick * SOAK_DT
+                _post(port, "append", panel=name,
+                      delta=x[:, lo:lo + SOAK_DT].tolist())
+            for name, sub in subs.items():  # the tick streams out
+                got = _post_poll(port, sub["id"])
+                assert got and got[-1]["version"] == tick + 1, got
+                _bit_match_vec(got[-1]["rho"],
+                               [oracle[name][tick + 1][p] for p in watch],
+                               f"{name} tick v{tick + 1}")
+
+        # One explicit evict: the rebuilt master answers identically.
+        _post(port, "ccm", panel="soak0", lib=pairs[1][0],
+              target=pairs[1][1], E=E_REQ)  # warm (LRU may have evicted)
+        freed = srv.evict_panel("soak0")
+        assert freed > 0, "explicit evict freed nothing"
+        r = _post(port, "ccm", panel="soak0", lib=pairs[0][0],
+                  target=pairs[0][1], E=E_REQ)["result"]
+        _bit_match(r, oracle["soak0"][SOAK_TICKS][pairs[0]],
+                   "post-explicit-evict ccm")
+
+        churn = telemetry.counter("serve_evictions").value - evictions0
+        assert churn >= 1, "LRU budget never evicted - soak proved nothing"
+        print(f"soak: {churn} evictions under "
+              f"{budget_mb:.2f} MiB budget, "
+              f"{SOAK_PANELS} panels x {SOAK_TICKS} ticks")
+    finally:
+        httpd.shutdown()
+        srv.close()
+    print("SERVE SOAK OK")
+
+
+def _post_poll(port: int, sid: str) -> list:
+    body = _get(port, f"/v1/subscriptions/{sid}?timeout=10")
+    return json.loads(body)["ticks"]
+
+
+def _bit_match_vec(served, oracles, what: str) -> None:
+    for j, (s, o) in enumerate(zip(served, oracles)):
+        _bit_match(s, np.float32(o), f"{what}[{j}]")
+
+
 if __name__ == "__main__":
     main()
+    soak()

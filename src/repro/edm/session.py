@@ -269,6 +269,35 @@ class EDM:
         hit = self._cache["master"] = (dM, iM, k_m, E_levels)
         return hit
 
+    def master_nbytes(self) -> int:
+        """Resident bytes of the cached multi-E kNN master (0 if none).
+
+        The serving LRU's accounting unit: the master is the session's
+        only O(N·E·Lp·k) cache (distances + indices), everything else
+        held here is O(N·E_max) or smaller.
+        """
+        hit = self._cache.get("master")
+        if hit is None:
+            return 0
+        dM, iM = hit[0], hit[1]
+        return int(dM.nbytes) + int(iM.nbytes)
+
+    def evict_master(self) -> int:
+        """Drop the cached kNN master; returns the bytes freed.
+
+        Purely a memory event: the next method that needs the master
+        lazily rebuilds it from the *current* panel (``_master``), and
+        the incremental-append contract (append ≡ cold rebuild, bit
+        identical) makes every later answer — and every later append —
+        bit-identical to a never-evicted session. The serving layer's
+        LRU byte budget calls this on cold panels.
+        """
+        freed = self.master_nbytes()
+        if freed:
+            self._cache.pop("master", None)
+            self._bump("knn_master_evictions")
+        return freed
+
     def append(self, delta) -> list[dict]:
         """Grow the bound panel by Δt points, updating caches in place.
 

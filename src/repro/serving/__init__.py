@@ -2,15 +2,18 @@
 
 Two tenants share this package: the transformer ``ServeEngine``
 (fixed-slot prefill/decode batching) and the EDM session server
-(``EDMServer`` — warm per-panel sessions, FIFO + signature-coalescing
-scheduler, incremental library append; see ``edm_server``/
-``scheduler``/``state``).
+(``EDMServer`` — warm per-panel sessions drained by a worker pool with
+signature coalescing and append version barriers, an LRU byte budget
+over cached kNN masters, incremental library append, and streaming
+append subscriptions; see ``edm_server``/``scheduler``/``state``/
+``subscriptions``).
 """
 
 from repro.serving.edm_server import EDMServer, serve_http
 from repro.serving.engine import ServeEngine
 from repro.serving.scheduler import Scheduler
 from repro.serving.state import Registry
+from repro.serving.subscriptions import Subscription, SubscriptionHub
 
 __all__ = ["EDMServer", "Registry", "Scheduler", "ServeEngine",
-           "serve_http"]
+           "Subscription", "SubscriptionHub", "serve_http"]

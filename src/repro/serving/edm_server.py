@@ -1,23 +1,31 @@
-"""EDM-as-a-service: warm sessions behind a batching scheduler.
+"""EDM-as-a-service: warm sessions behind a batching worker pool.
 
 ``EDMServer`` is the embeddable server object — register panels, submit
 ``ccm``/``xmap``/``simplex``/``surrogate_test``/``optimal_E``/``append``
 requests from any number of threads, get ``Future``s back. Requests
-flow through ``scheduler.Scheduler``: FIFO with signature coalescing
-(compatible CCM requests become one group launch; appends are version
-barriers; see that module's docstring).
+flow through ``scheduler.Scheduler``: per-panel FIFO queues with
+signature coalescing drained by a worker pool, so distinct panels
+execute concurrently while each panel's FIFO + append-barrier semantics
+hold (see that module's docstring). ``master_budget_mb`` puts an LRU
+byte budget on the cached kNN masters (``state.py``): cold panels are
+evicted and lazily rebuilt bit-identically. ``subscribe`` registers a
+(lib, tgt) watch list whose re-scored ρ is pushed on every append tick
+(``subscriptions.py``).
 
 ``serve_http`` wraps a server in a stdlib ``ThreadingHTTPServer`` JSON
 front end — each connection thread blocks on its request's future while
-the single scheduler worker batches across connections, which is
-exactly the continuous-batching shape:
+the worker pool batches across connections:
 
-* ``POST /v1/register``   {"panel": name, "data": [[...]], ...config}
-* ``POST /v1/<op>``       {"panel": name, ...params} → {"result": ...}
-* ``POST /v1/append``     {"panel": name, "delta": [[...]]}
-* ``GET  /panels``        registry listing
-* ``GET  /metrics``       Prometheus text (``telemetry.render_prom()``)
-* ``GET  /healthz``       liveness
+* ``POST /v1/register``     {"panel": name, "data": [[...]], ...config}
+* ``POST /v1/<op>``         {"panel": name, ...params} → {"result": ...}
+* ``POST /v1/append``       {"panel": name, "delta": [[...]]}
+* ``POST /v1/subscribe``    {"panel": name, "pairs": [[l,t],...], "E": 3}
+* ``POST /v1/unsubscribe``  {"id": sub_id}
+* ``GET  /v1/subscriptions/<id>?timeout=25``  long-poll pending ticks
+* ``GET  /panels``          registry listing
+* ``GET  /metrics``         Prometheus text (``telemetry.render_prom()``)
+* ``GET  /healthz``         per-worker liveness + queue depths; HTTP 503
+                            when any drain worker is dead
 
 No third-party dependencies: stdlib HTTP, JSON bodies, numpy arrays
 serialized as nested lists (NaN encoded ``null`` per strict JSON).
@@ -28,22 +36,30 @@ from __future__ import annotations
 import dataclasses
 import json
 import threading
+import urllib.parse
 from http.server import BaseHTTPRequestHandler, ThreadingHTTPServer
 
 import numpy as np
 
 from repro import telemetry
-from repro.serving.scheduler import OPS, Scheduler
+from repro.serving.scheduler import DEFAULT_WORKERS, OPS, Scheduler
 from repro.serving.state import Registry
+from repro.serving.subscriptions import SubscriptionHub
 
 
 class EDMServer:
-    """Warm EDM sessions + the batching scheduler, one object."""
+    """Warm EDM sessions + the batching worker pool, one object."""
 
-    def __init__(self, *, autostart: bool = True, max_batch: int = 64):
-        self.registry = Registry()
+    def __init__(self, *, autostart: bool = True, max_batch: int = 64,
+                 workers: int = DEFAULT_WORKERS,
+                 master_budget_mb: float | None = None):
+        budget = (None if master_budget_mb is None
+                  else int(master_budget_mb * 2**20))
+        self.registry = Registry(master_budget_bytes=budget)
+        self.subscriptions = SubscriptionHub()
         self.scheduler = Scheduler(self.registry, autostart=autostart,
-                                   max_batch=max_batch)
+                                   max_batch=max_batch, workers=workers,
+                                   subscriptions=self.subscriptions)
 
     def register_panel(self, name: str, panel, **kw) -> dict:
         with telemetry.span("serve.register", panel=name):
@@ -61,11 +77,53 @@ class EDMServer:
         """Submit and block for the result (the one-client convenience)."""
         return self.submit(op, panel, **params).result()
 
+    # ----------------------------------------------------- subscriptions
+
+    def subscribe(self, panel: str, pairs, *, E: int | None = None) -> dict:
+        """Register a (lib, tgt) watch list; blocks for the baseline tick.
+
+        Routed through the scheduler like any op, so it linearizes with
+        the panel's append stream: the returned dict's ``rho`` is the
+        watch list scored at the current library version, and every
+        later append pushes a re-scored tick to
+        ``self.subscription(id)`` / ``GET /v1/subscriptions/<id>``.
+        """
+        return self.call("subscribe", panel, pairs=list(pairs), E=E)
+
+    def subscription(self, sid: str):
+        """The live ``Subscription`` (``.poll(timeout)`` for ticks)."""
+        return self.subscriptions.get(sid)
+
+    def unsubscribe(self, sid: str) -> None:
+        self.subscriptions.close_sub(sid)
+
+    # ------------------------------------------------------------ memory
+
+    def evict_panel(self, name: str) -> int:
+        """Force-evict one panel's cached kNN master; returns bytes freed.
+
+        Thread-safe (waits for any in-flight batch on that panel). The
+        operator's knob; the LRU budget does this automatically. Purely
+        a memory event — the master rebuilds bit-identically on demand.
+        """
+        return self.registry.evict(self.registry.get(name), blocking=True)
+
+    # ----------------------------------------------------- observability
+
+    def health(self) -> dict:
+        """Scheduler liveness + queue depths + memory/subscription state."""
+        h = self.scheduler.health()
+        h["master_bytes"] = self.registry.master_bytes_total()
+        h["master_budget_bytes"] = self.registry.budget_bytes
+        h["subscriptions"] = self.subscriptions.count()
+        return h
+
     def metrics_text(self) -> str:
         return telemetry.render_prom()
 
     def close(self) -> None:
         self.scheduler.close()
+        self.subscriptions.close_all()
 
     def __enter__(self):
         return self
@@ -99,7 +157,7 @@ def _jsonable(obj):
 
 
 class _Handler(BaseHTTPRequestHandler):
-    server_version = "edm-serve/1"
+    server_version = "edm-serve/2"
 
     # The EDMServer rides on the HTTP server object (set by serve_http).
     @property
@@ -121,12 +179,27 @@ class _Handler(BaseHTTPRequestHandler):
         self.wfile.write(body)
 
     def do_GET(self):  # noqa: N802 — stdlib API
-        if self.path == "/metrics":
+        url = urllib.parse.urlparse(self.path)
+        if url.path == "/metrics":
             self._reply(200, None, raw=self.edm.metrics_text())
-        elif self.path == "/panels":
+        elif url.path == "/panels":
             self._reply(200, {"panels": self.edm.registry.infos()})
-        elif self.path == "/healthz":
-            self._reply(200, {"ok": True})
+        elif url.path == "/healthz":
+            h = self.edm.health()
+            self._reply(200 if h["ok"] else 503, _jsonable(h))
+        elif url.path.startswith("/v1/subscriptions/"):
+            sid = url.path[len("/v1/subscriptions/"):]
+            q = urllib.parse.parse_qs(url.query)
+            timeout = min(float(q.get("timeout", ["25"])[0]), 60.0)
+            maxn = (int(q["max"][0]) if "max" in q else None)
+            try:
+                sub = self.edm.subscription(sid)
+            except KeyError as exc:
+                self._reply(404, {"error": str(exc)})
+                return
+            ticks = sub.poll(timeout=timeout, max_ticks=maxn)
+            self._reply(200, {"id": sid, "closed": sub.closed,
+                              "ticks": _jsonable(ticks)})
         else:
             self._reply(404, {"error": f"unknown path {self.path}"})
 
@@ -138,6 +211,10 @@ class _Handler(BaseHTTPRequestHandler):
                 self._reply(404, {"error": f"unknown path {self.path}"})
                 return
             op = self.path[len("/v1/"):]
+            if op == "unsubscribe":  # addressed by id, not panel
+                self.edm.unsubscribe(body["id"])
+                self._reply(200, {"result": {"closed": body["id"]}})
+                return
             panel = body.pop("panel", None)
             if panel is None:
                 self._reply(400, {"error": "missing 'panel'"})

@@ -1,37 +1,51 @@
-"""Continuous batching scheduler for EDM serving.
+"""Continuous batching scheduler for EDM serving: per-panel drains.
 
-One FIFO queue, one worker thread, and a coalescing rule:
+PR 8's scheduler was ONE FIFO queue drained by ONE worker, so
+independent panels serialized behind each other. This version keeps
+every per-panel guarantee of that design and adds cross-panel
+concurrency:
 
-* Every request carries a **signature** captured at submit time. For a
-  default-cap CCM request that is ``("ccm", panel, E, queued_version)``
-  — the compatibility class the ISSUE names: same panel, same embedding
-  geometry, same library state.
-* The worker always dequeues the HEAD request (FIFO — a long-queued
-  request is never starved by later arrivals) and then pulls every
-  other queued request with the *same signature* into its batch, in
-  arrival order. Compatible requests that arrived while earlier work
-  was executing ride the next launch — continuous batching, not fixed
-  windows.
-* A batch of n compatible CCM requests becomes ONE ``EDM.ccm_batch``
-  launch (the library-batched matrix engine,  ``drive_batched``'s
-  dispatch/assemble overlap underneath) instead of n single-pair engine
-  passes. ``ccm_batch``'s bit contract is batch invariance: a pair's ρ
-  never depends on which other requests share its launch, so
+* **One FIFO queue per panel.** Every request carries a **signature**
+  captured at submit time under the scheduler lock. For a default-cap
+  CCM request that is ``("ccm", panel, E, queued_version)`` — the
+  compatibility class: same panel, same embedding geometry, same
+  library state.
+* **A worker pool drains panels concurrently.** A panel with queued
+  work sits on a ready list; a free worker claims it (round-robin
+  across panels — a busy panel cannot starve the others), drains ONE
+  batch, and returns the panel to the ready list if work remains. At
+  most one worker drains a given panel at any moment, so per-panel
+  execution stays serial: FIFO order, signature coalescing, and the
+  append version barrier are per-panel properties and survive the pool
+  unchanged. Distinct panels execute on distinct workers concurrently.
+* **Batching is unchanged.** The drain takes the panel's HEAD request
+  and pulls every queued signature-match into its batch, in arrival
+  order. n compatible CCM requests become ONE ``EDM.ccm_batch`` launch;
+  ``ccm_batch``'s bit contract is batch invariance, so
   ``ccm_batch([(l, t)])`` is the quiesced oracle for every served
-  answer — batching changes throughput, never answers. Solo default-cap
-  requests go through the same method for the same reason.
-* An **append is a version barrier**: submitting it bumps the panel's
-  ``queued_version``, so requests behind it carry a signature no
-  earlier batch can match, and the FIFO order does the rest. Appends
-  themselves never coalesce.
-* Whole-panel ops (``xmap``, ``simplex``, ``optimal_E``,
-  ``surrogate_test``) coalesce only as exact duplicates — identical
-  params on the same version — which collapses request stampedes into
-  one execution fanned out to every waiting future.
+  answer. Whole-panel ops coalesce only as exact duplicates. An
+  **append is a version barrier**: submitting it bumps the panel's
+  ``queued_version`` so requests behind it can never be batched ahead
+  of it.
+* **Failures are per-request, never structural.** An op raising in a
+  loop-executed batch fails only that request's future; a coalesced
+  single-launch batch fails all of its futures (they shared the
+  launch); either way the panel queue keeps draining and the version
+  barrier stays consistent (a failed append leaves the committed
+  version untouched — later requests simply sign with the already-bumped
+  queued version and execute normally). A worker killed by a
+  ``BaseException`` fails its in-flight batch, releases the panel, and
+  is reported dead by ``worker_stats()`` / ``health()`` until
+  ``revive_workers()`` respawns it.
+* **Memory budget hook.** After each batch the worker touches the
+  panel's LRU slot and calls ``Registry.enforce_budget()`` — cold
+  panels' cached kNN masters are evicted until the byte budget holds
+  (see ``state.py``; rebuild-on-demand is bit-identical).
 
-Telemetry: ``serve_queue_depth`` / ``serve_batch_occupancy`` gauges,
-``serve_latency_ms_<op>`` histograms, ``serve_requests`` /
-``serve_batches`` / ``serve_launches_saved`` counters, and a span per
+Telemetry: ``serve_queue_depth`` / ``serve_batch_occupancy`` /
+``serve_master_bytes`` gauges, ``serve_latency_ms_<op>`` histograms,
+``serve_requests`` / ``serve_batches`` / ``serve_launches_saved`` /
+``serve_evictions`` / ``serve_worker_deaths`` counters, and a span per
 batch with per-request events.
 """
 
@@ -49,7 +63,11 @@ from repro import telemetry
 from repro.serving.state import PanelEntry, Registry
 
 #: Ops a request may carry; anything else is rejected at submit.
-OPS = ("ccm", "xmap", "simplex", "surrogate_test", "optimal_E", "append")
+OPS = ("ccm", "xmap", "simplex", "surrogate_test", "optimal_E", "append",
+       "subscribe")
+
+#: Default worker-pool size (per-panel drains; panels > workers queue).
+DEFAULT_WORKERS = 4
 
 
 @dataclasses.dataclass
@@ -63,13 +81,25 @@ class Request:
     t_submit: float
 
 
+class _PanelQueue:
+    """One panel's FIFO + the flag serializing its drains."""
+
+    __slots__ = ("name", "q", "draining")
+
+    def __init__(self, name: str):
+        self.name = name
+        self.q: collections.deque[Request] = collections.deque()
+        self.draining = False
+
+
 def _frozen(params: dict) -> tuple:
     """Hashable, order-insensitive view of request params."""
     out = []
     for k in sorted(params):
         v = params[k]
         if isinstance(v, (list, tuple)):
-            v = tuple(v)
+            v = tuple(tuple(x) if isinstance(x, (list, tuple)) else x
+                      for x in v)
         elif isinstance(v, np.ndarray):
             v = ("array", v.shape, v.tobytes())
         out.append((k, v))
@@ -77,21 +107,95 @@ def _frozen(params: dict) -> tuple:
 
 
 class Scheduler:
-    """FIFO queue + single drain worker over a panel ``Registry``."""
+    """Per-panel FIFO queues + a drain worker pool over a ``Registry``."""
 
     def __init__(self, registry: Registry, *, autostart: bool = True,
-                 max_batch: int = 64):
+                 max_batch: int = 64, workers: int = DEFAULT_WORKERS,
+                 subscriptions=None):
         self.registry = registry
         self.max_batch = max_batch
-        self._q: collections.deque[Request] = collections.deque()
+        self.num_workers = max(1, int(workers))
+        self.subscriptions = subscriptions
+        self._queues: dict[str, _PanelQueue] = {}
+        self._ready: collections.deque[_PanelQueue] = collections.deque()
         self._cv = threading.Condition()
         self._next_ticket = 0
         self._closed = False
-        self._worker = None
+        self._threads: list[threading.Thread | None] = []
+        self._wstats: list[dict] = []
         if autostart:
-            self._worker = threading.Thread(
-                target=self._run, name="edm-serve-worker", daemon=True)
-            self._worker.start()
+            self.start()
+
+    # ------------------------------------------------------------- pool
+
+    def start(self) -> None:
+        """Spin up the worker pool (idempotent; ``autostart=False``
+        constructions call this to go live after preloading queues)."""
+        with self._cv:
+            if self._closed:
+                raise RuntimeError("scheduler is closed")
+            while len(self._threads) < self.num_workers:
+                self._spawn(len(self._threads))
+
+    def _spawn(self, wid: int) -> None:
+        """Start worker ``wid`` (caller holds the lock)."""
+        st = {"name": f"edm-serve-worker-{wid}", "alive": True,
+              "batches": 0, "last_beat": time.monotonic(), "error": None}
+        t = threading.Thread(target=self._run, args=(wid,),
+                             name=st["name"], daemon=True)
+        if wid < len(self._threads):
+            self._threads[wid] = t
+            self._wstats[wid] = st
+        else:
+            self._threads.append(t)
+            self._wstats.append(st)
+        t.start()
+
+    def worker_stats(self) -> list[dict]:
+        """Per-worker liveness snapshot (the ``/healthz`` payload rows).
+
+        ``alive`` is the thread's actual ``is_alive()`` — a worker that
+        died without running its own epilogue (or was never started on
+        an ``autostart=False`` scheduler) still reads dead here.
+        """
+        with self._cv:
+            out = []
+            for t, st in zip(self._threads, self._wstats):
+                d = dict(st)
+                d["alive"] = bool(st["alive"] and t is not None
+                                  and t.is_alive())
+                d["age_s"] = time.monotonic() - st["last_beat"]
+                out.append(d)
+            return out
+
+    def queue_depths(self) -> dict[str, int]:
+        with self._cv:
+            return {name: len(pq.q) for name, pq in self._queues.items()}
+
+    def health(self) -> dict:
+        """Liveness + queue depths; ``ok`` is False when any spawned
+        worker is dead (a dead drain thread must NOT answer healthy —
+        its panels would wedge silently)."""
+        ws = self.worker_stats()
+        ok = (not self._closed
+              and len(ws) == self.num_workers
+              and all(w["alive"] for w in ws))
+        return {"ok": bool(ok), "workers": ws,
+                "queues": self.queue_depths(), "closed": self._closed}
+
+    def revive_workers(self) -> int:
+        """Respawn dead workers; returns how many were restarted."""
+        revived = 0
+        with self._cv:
+            if self._closed:
+                return 0
+            for wid, (t, st) in enumerate(zip(self._threads, self._wstats)):
+                if t is not None and not t.is_alive():
+                    self._spawn(wid)
+                    revived += 1
+        if revived:
+            telemetry.counter("serve_worker_revivals").inc(revived)
+        return revived
 
     # ------------------------------------------------------------ submit
 
@@ -99,9 +203,11 @@ class Scheduler:
         """Enqueue a request; thread-safe; returns its ``Future``.
 
         The coalescing signature (and, for appends, the version bump
-        that makes them barriers) is fixed here, under the queue lock —
-        after ``submit`` returns, no later request can be batched ahead
-        of this one's library state.
+        that makes them barriers) is fixed here, under the scheduler
+        lock — after ``submit`` returns, no later request can be batched
+        ahead of this one's library state. The returned future carries
+        its queue position as ``fut.ticket`` (global submit order — the
+        per-panel linearization tests key on it).
         """
         return self.submit_many(op, panel, [params])[0]
 
@@ -124,6 +230,10 @@ class Scheduler:
         with self._cv:
             if self._closed:
                 raise RuntimeError("scheduler is closed")
+            pq = self._queues.get(panel)
+            if pq is None:
+                pq = self._queues[panel] = _PanelQueue(panel)
+            was_empty = not pq.q
             for params, fut in zip(params_list, futs):
                 ticket = self._next_ticket
                 self._next_ticket += 1
@@ -134,15 +244,21 @@ class Scheduler:
                         and params.get("lib_sizes") is None):
                     sig = ("ccm", panel, int(params["E"]),
                            entry.queued_version)
-                else:  # sweeps / E-to-resolve CCM: solo. Panel ops: dedup.
-                    sig = ((op, panel, ticket) if op == "ccm"
-                           else (op, panel, entry.queued_version,
-                                 _frozen(params)))
-                self._q.append(Request(ticket, op, panel, params,
-                                       sig, fut, now))
-            telemetry.gauge("serve_queue_depth").set(len(self._q))
+                elif op in ("ccm", "subscribe"):
+                    # sweeps / E-to-resolve CCM and subscribe: solo.
+                    sig = (op, panel, ticket)
+                else:  # whole-panel ops: dedup exact duplicates only.
+                    sig = (op, panel, entry.queued_version,
+                           _frozen(params))
+                fut.ticket = ticket  # type: ignore[attr-defined]
+                pq.q.append(Request(ticket, op, panel, params,
+                                    sig, fut, now))
+            if was_empty and not pq.draining:
+                self._ready.append(pq)
+            telemetry.gauge("serve_queue_depth").set(
+                sum(len(q.q) for q in self._queues.values()))
             telemetry.counter("serve_requests").inc(len(futs))
-            self._cv.notify()
+            self._cv.notify(len(futs))
         return futs
 
     # ------------------------------------------------------------- drain
@@ -151,49 +267,97 @@ class Scheduler:
         """Process one batch in the calling thread; returns its size.
 
         The deterministic test/bench entry (``autostart=False``): the
-        exact coalescing the worker would perform, minus the thread.
+        exact claim → coalesce → execute → release cycle a pool worker
+        performs, minus the thread. Panels are visited in ready-list
+        (round-robin) order.
         """
-        batch = self._take_batch(timeout)
-        if not batch:
+        claim = self._claim(timeout)
+        if claim is None:
             return 0
-        self._execute(batch)
-        return len(batch)
-
-    def _run(self) -> None:
-        while True:
-            batch = self._take_batch(timeout=0.1)
-            if batch is None:  # closed and drained
-                return
+        pq, batch = claim
+        try:
             if batch:
                 self._execute(batch)
+        finally:
+            self._release(pq)
+        return len(batch)
 
-    def _take_batch(self, timeout) -> list[Request] | None:
-        """Pop the head request plus every queued signature-match."""
+    def _run(self, wid: int) -> None:
+        st = self._wstats[wid]
+        while True:
+            with self._cv:
+                while not self._ready and not self._closed:
+                    self._cv.wait(0.1)
+                    st["last_beat"] = time.monotonic()
+                if self._closed and not self._ready:
+                    return
+            claim = self._claim(timeout=0.0)
+            if claim is None:
+                continue
+            pq, batch = claim
+            try:
+                if batch:
+                    self._execute(batch)
+                    st["batches"] += 1
+                    st["last_beat"] = time.monotonic()
+            except BaseException as exc:  # worker is dying: fail the
+                # in-flight futures rather than hanging their clients,
+                # then report dead until revive_workers().
+                err = RuntimeError(
+                    f"serve worker died: {type(exc).__name__}: {exc}")
+                for r in batch:
+                    if not r.future.done():
+                        r.future.set_exception(err)
+                st["alive"] = False
+                st["error"] = f"{type(exc).__name__}: {exc}"
+                telemetry.counter("serve_worker_deaths").inc()
+                return
+            finally:
+                self._release(pq)
+
+    def _claim(self, timeout) -> tuple[_PanelQueue, list[Request]] | None:
+        """Claim the next ready panel and coalesce one batch from it.
+
+        Returns ``(panel_queue, batch)`` with the panel marked as
+        draining — the caller MUST ``_release`` it — or None if nothing
+        became ready within ``timeout``.
+        """
         with self._cv:
-            if not self._q:
+            if not self._ready:
                 if self._closed:
                     return None
                 self._cv.wait(timeout)
-                if not self._q:
-                    return None if self._closed else []
-            head = self._q.popleft()
+                if not self._ready:
+                    return None
+            pq = self._ready.popleft()
+            pq.draining = True
+            head = pq.q.popleft()
             batch = [head]
             if head.op != "append":
                 rest = collections.deque()
-                while self._q and len(batch) < self.max_batch:
-                    r = self._q.popleft()
+                while pq.q and len(batch) < self.max_batch:
+                    r = pq.q.popleft()
                     if r.signature == head.signature:
                         batch.append(r)
                     else:
                         rest.append(r)
-                rest.extend(self._q)
-                self._q = rest
-            telemetry.gauge("serve_queue_depth").set(len(self._q))
+                rest.extend(pq.q)
+                pq.q = rest
+            telemetry.gauge("serve_queue_depth").set(
+                sum(len(q.q) for q in self._queues.values()))
         telemetry.gauge("serve_batch_occupancy").set(len(batch))
         telemetry.histogram("serve_batch_occupancy_hist").observe(len(batch))
         if len(batch) > 1:
             telemetry.counter("serve_launches_saved").inc(len(batch) - 1)
-        return batch
+        return pq, batch
+
+    def _release(self, pq: _PanelQueue) -> None:
+        """Return a drained panel to the ready list if work remains."""
+        with self._cv:
+            pq.draining = False
+            if pq.q and not self._closed:
+                self._ready.append(pq)
+                self._cv.notify()
 
     # ----------------------------------------------------------- execute
 
@@ -201,18 +365,28 @@ class Scheduler:
         head = batch[0]
         entry = self.registry.get(head.panel)
         t0 = time.perf_counter()
-        try:
-            with telemetry.span("serve.batch", op=head.op, panel=head.panel,
-                                size=len(batch)):
-                if head.op == "ccm" and len(batch) > 1:
-                    results = self._exec_ccm_batch(entry, batch)
-                else:
-                    results = [self._exec_one(entry, r) for r in batch]
-        except Exception as exc:  # noqa: BLE001 — failures go to futures
-            telemetry.counter("serve_errors").inc()
-            for r in batch:
-                r.future.set_exception(exc)
-            return
+        with entry.exec_lock:  # excludes the eviction path, nothing else
+            try:
+                with telemetry.span("serve.batch", op=head.op,
+                                    panel=head.panel, size=len(batch)):
+                    if head.op == "ccm" and len(batch) > 1:
+                        results = self._exec_ccm_batch(entry, batch)
+                    else:
+                        # Loop path: failures stay per-request — one op
+                        # raising must not poison its batch peers.
+                        results = []
+                        for r in batch:
+                            try:
+                                results.append(self._exec_one(entry, r))
+                            except Exception as exc:  # noqa: BLE001
+                                telemetry.counter("serve_errors").inc()
+                                results.append(exc)
+            except Exception as exc:  # noqa: BLE001 — shared-launch failure
+                telemetry.counter("serve_errors").inc()
+                for r in batch:
+                    r.future.set_exception(exc)
+                self._after_batch(entry)
+                return
         done = time.perf_counter()
         ms = (done - t0) * 1e3
         hist = telemetry.histogram(f"serve_latency_ms_{head.op}")
@@ -224,8 +398,17 @@ class Scheduler:
                                 queued_ms=(t0 - r.t_submit) * 1e3,
                                 exec_ms=ms)
             hist.observe((done - r.t_submit) * 1e3)
-            r.future.set_result(res)
+            if isinstance(res, Exception):
+                r.future.set_exception(res)
+            else:
+                r.future.set_result(res)
         telemetry.counter("serve_batches").inc()
+        self._after_batch(entry)
+
+    def _after_batch(self, entry: PanelEntry) -> None:
+        """LRU touch + byte-budget enforcement after every batch."""
+        self.registry.touch(entry)
+        self.registry.enforce_budget(protect=entry.name)
 
     def _exec_one(self, entry: PanelEntry, r: Request):
         sess = entry.sess
@@ -234,8 +417,16 @@ class Scheduler:
             records = sess.append(np.asarray(p["delta"], np.float32))
             entry.version += 1
             telemetry.counter("serve_appends").inc()
-            return {"records": records, "version": entry.version,
-                    "N": sess.data.N, "L": sess.data.L}
+            out = {"records": records, "version": entry.version,
+                   "N": sess.data.N, "L": sess.data.L}
+            if self.subscriptions is not None:
+                self.subscriptions.on_append(entry)
+            return out
+        if r.op == "subscribe":
+            if self.subscriptions is None:
+                raise RuntimeError("this scheduler has no subscription hub")
+            return self.subscriptions.open(
+                entry, pairs=p["pairs"], E=p.get("E"))
         if r.op == "ccm":
             if p.get("lib_sizes") is not None:  # sweep: classic engine
                 return sess.ccm(p["lib"], p["target"],
@@ -285,18 +476,21 @@ class Scheduler:
     # ------------------------------------------------------------- close
 
     def close(self) -> None:
-        """Stop accepting work; fail queued requests; join the worker."""
+        """Stop accepting work; fail queued requests; join the pool."""
         with self._cv:
             if self._closed:
                 return
             self._closed = True
-            pending = list(self._q)
-            self._q.clear()
+            pending = [r for pq in self._queues.values() for r in pq.q]
+            for pq in self._queues.values():
+                pq.q.clear()
+            self._ready.clear()
+            threads = [t for t in self._threads if t is not None]
             self._cv.notify_all()
         for r in pending:
             r.future.set_exception(RuntimeError("scheduler closed"))
-        if self._worker is not None:
-            self._worker.join(timeout=5.0)
+        for t in threads:
+            t.join(timeout=5.0)
 
     def __enter__(self):
         return self

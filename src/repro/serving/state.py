@@ -1,4 +1,4 @@
-"""Panel registry for the EDM server: warm sessions + append versioning.
+"""Panel registry for the EDM server: warm sessions, versioning, LRU.
 
 One ``PanelEntry`` per registered panel, owning the long-lived ``EDM``
 session (so its kNN master, optimal-E curves, and jit caches stay warm
@@ -14,9 +14,27 @@ coalescing rule is built on:
                          pulled into a batch that runs ahead of it: the
                          append is a version barrier by construction.
 
-All mutation goes through the registry lock; the scheduler's single
-worker thread is the only caller that touches sessions after
-registration.
+**Session memory management.** Every warm session's multi-E kNN master
+is ``2·N·E_max·Lp·k_master`` float32/int32 values — at whole-brain
+panel counts cold panels cannot all keep theirs resident. The registry
+enforces an LRU **byte budget** over cached masters
+(``EDMServer(master_budget_mb=...)`` → ``set_budget``): after each
+executed batch the scheduler touches the panel's LRU slot and calls
+``enforce_budget``, which evicts the least-recently-used panels'
+masters (``EDM.evict_master``) until the budget holds. The
+most-recently-used panel is never evicted — a single working panel
+larger than the budget must not thrash. Eviction is *only* a memory
+event: the next request on an evicted panel lazily rebuilds the master
+from the current panel (``EDM._master``), and because the incremental
+append path is bit-identical to a cold rebuild, every answer (and every
+later append) is bit-identical to a never-evicted session. Telemetry:
+``serve_evictions`` counter, ``serve_master_bytes`` gauge.
+
+Concurrency: registry mutation goes through the registry lock; session
+state is touched only by the panel's single active drain worker (the
+scheduler serializes per-panel execution) and by the evictor — the two
+exclude each other through ``PanelEntry.exec_lock``, and the evictor
+only ever tries that lock non-blocking (a busy panel is hot, skip it).
 """
 
 from __future__ import annotations
@@ -25,18 +43,28 @@ import threading
 
 import numpy as np
 
+from repro import telemetry
 from repro.edm.config import EDMConfig
 from repro.edm.session import EDM
 
 
 class PanelEntry:
-    """A registered panel: warm session + version counters."""
+    """A registered panel: warm session + version counters + LRU slot."""
 
     def __init__(self, name: str, sess: EDM):
         self.name = name
         self.sess = sess
         self.version = 0
         self.queued_version = 0
+        self.last_used = 0           # registry LRU tick, monotonic
+        self.evictions = 0
+        # Held by the active drain worker for the whole batch and by the
+        # evictor around evict_master(): execution and eviction exclude
+        # each other; per-panel drains are already serial above this.
+        self.exec_lock = threading.Lock()
+
+    def master_nbytes(self) -> int:
+        return self.sess.master_nbytes()
 
     def info(self) -> dict:
         """JSON-ready description (the ``/panels`` listing row)."""
@@ -48,15 +76,19 @@ class PanelEntry:
             "num_invalid": self.sess.data.num_invalid,
             "E_max": self.sess.config.E_max,
             "tau": self.sess.config.tau,
+            "master_bytes": self.master_nbytes(),
+            "evictions": self.evictions,
         }
 
 
 class Registry:
-    """Name → ``PanelEntry`` map behind one lock."""
+    """Name → ``PanelEntry`` map behind one lock, plus the LRU budget."""
 
-    def __init__(self):
+    def __init__(self, *, master_budget_bytes: int | None = None):
         self._lock = threading.Lock()
         self._panels: dict[str, PanelEntry] = {}
+        self._budget = master_budget_bytes
+        self._tick = 0
 
     @property
     def lock(self) -> threading.Lock:
@@ -82,6 +114,8 @@ class Registry:
         with self._lock:
             if name in self._panels:
                 raise ValueError(f"panel {name!r} is already registered")
+            self._tick += 1
+            entry.last_used = self._tick
             self._panels[name] = entry
         return entry.info()
 
@@ -100,3 +134,72 @@ class Registry:
         with self._lock:
             entries = list(self._panels.values())
         return [e.info() for e in entries]
+
+    # -------------------------------------------------- LRU byte budget
+
+    def set_budget(self, nbytes: int | None) -> None:
+        with self._lock:
+            self._budget = nbytes
+
+    @property
+    def budget_bytes(self) -> int | None:
+        return self._budget
+
+    def touch(self, entry: PanelEntry) -> None:
+        """Mark ``entry`` most-recently-used (called after each batch)."""
+        with self._lock:
+            self._tick += 1
+            entry.last_used = self._tick
+
+    def master_bytes_total(self) -> int:
+        with self._lock:
+            entries = list(self._panels.values())
+        return sum(e.master_nbytes() for e in entries)
+
+    def evict(self, entry: PanelEntry, *, blocking: bool = True) -> int:
+        """Evict one panel's cached kNN master; returns bytes freed.
+
+        Takes the entry's ``exec_lock`` so eviction never races the
+        panel's drain worker mid-batch. Non-blocking mode (the budget
+        enforcer) skips a busy panel — it is hot by definition.
+        """
+        if not entry.exec_lock.acquire(blocking=blocking):
+            return 0
+        try:
+            freed = entry.sess.evict_master()
+        finally:
+            entry.exec_lock.release()
+        if freed:
+            entry.evictions += 1
+            telemetry.counter("serve_evictions").inc()
+            telemetry.event("serve.evict", panel=entry.name, bytes=freed)
+        return freed
+
+    def enforce_budget(self, *, protect: str | None = None) -> list[str]:
+        """Evict cold masters (LRU-first) until the byte budget holds.
+
+        ``protect`` (the panel a batch just executed on) and, in any
+        case, the most-recently-used cached master are exempt — the
+        budget bounds *cold* state, it never deadlocks the working set.
+        Returns the names evicted. Refreshes ``serve_master_bytes``.
+        """
+        with self._lock:
+            budget = self._budget
+            entries = sorted(self._panels.values(),
+                             key=lambda e: e.last_used)
+        sizes = {e.name: e.master_nbytes() for e in entries}
+        total = sum(sizes.values())
+        evicted: list[str] = []
+        if budget is not None and total > budget:
+            cached = [e for e in entries if sizes[e.name] > 0]
+            for e in cached[:-1]:  # never the MRU cached master
+                if e.name == protect:
+                    continue
+                freed = self.evict(e, blocking=False)
+                if freed:
+                    total -= freed
+                    evicted.append(e.name)
+                if total <= budget:
+                    break
+        telemetry.gauge("serve_master_bytes").set(total)
+        return evicted
