@@ -30,9 +30,14 @@ Three sections, matching the PR-8 acceptance criteria:
     at each offered concurrency (from the ``serve_batch_occupancy_hist``
     telemetry histogram) — the continuous-batching curve: occupancy
     should grow with concurrency while per-request latency stays flat.
+  * **WAL overhead** (``--wal-overhead``, PR 10) — append ticks on a
+    durable server (``state_dir=``: frame + write + flush per accepted
+    delta) vs the identical load on an in-memory server. Durability must
+    cost ≤10% append throughput — the bench *fails* below 0.9×.
 
 Derived columns: merge speedup vs rebuild, served pairs/s and the ratio
-vs the warm engine, req/s with latency percentiles and occupancy.
+vs the warm engine, req/s with latency percentiles and occupancy,
+durable vs in-memory append ticks/s.
 """
 
 from __future__ import annotations
@@ -221,6 +226,66 @@ def _run_multi_panel():
             f"(acceptance >= {target}x)")
 
 
+#: WAL-on append throughput must stay within 10% of WAL-off.
+MIN_WAL_RATIO = 0.9
+N_WAL, L_WAL, DT_WAL, T_WAL = 8, 512, 4, 32
+
+
+def _run_wal_overhead():
+    """Durable vs in-memory append ticks (the ``--wal-overhead`` gate).
+
+    Each round registers a fresh panel and drives ``T_WAL`` append ticks
+    through ``drain_once``; the WAL-on side additionally frames, writes
+    and flushes every delta before its future resolves (no per-record
+    fsync — the default durability posture). The gate: durable append
+    throughput ≥ ``MIN_WAL_RATIO``× the WAL-off server. Registration
+    (base.npy + fsyncs) is off the timed path — it is per-panel, not
+    per-tick.
+    """
+    import shutil
+    import tempfile
+
+    rng = np.random.default_rng(5)
+    panel = rng.standard_normal((N_WAL, L_WAL)).astype(np.float32)
+    deltas = [rng.standard_normal((N_WAL, DT_WAL)).astype(np.float32)
+              for _ in range(T_WAL)]
+
+    def one_round(state_dir):
+        with EDMServer(autostart=False, state_dir=state_dir) as srv:
+            srv.register_panel("w", panel, E_max=E_SERVE, cache=True)
+            t0 = time.perf_counter()
+            for d in deltas:
+                fut = srv.submit("append", "w", delta=d)
+                srv.scheduler.drain_once()
+            dt = time.perf_counter() - t0
+            assert fut.result()["version"] == T_WAL
+            return dt
+
+    def wal_round():
+        sd = tempfile.mkdtemp(prefix="edm-walbench-")
+        try:
+            return one_round(sd)
+        finally:
+            shutil.rmtree(sd, ignore_errors=True)
+
+    one_round(None), wal_round()  # warm both paths (jit, allocator)
+    t_off = t_on = np.inf
+    for i in range(15):
+        if i >= 5 and t_on <= t_off / MIN_WAL_RATIO:
+            break
+        t_on = min(t_on, wal_round() * 1e6)
+        t_off = min(t_off, one_round(None) * 1e6)
+    ratio = t_off / t_on
+    row("serve/append_wal_on", t_on / T_WAL,
+        f"{T_WAL / (t_on / 1e6):.0f}ticks_per_s_{ratio:.2f}x_wal_off")
+    row("serve/append_wal_off", t_off / T_WAL,
+        f"{T_WAL / (t_off / 1e6):.0f}ticks_per_s")
+    if ratio < MIN_WAL_RATIO:
+        raise SystemExit(
+            f"WAL-on appends sustain only {ratio:.2f}x the WAL-off "
+            f"server (acceptance >= {MIN_WAL_RATIO}x)")
+
+
 def _run_concurrency_sweep():
     panel = tent_map_panel(N_SERIES, L_SERVE, seed=7)
     pairs = _all_pairs()
@@ -261,10 +326,13 @@ def _run_concurrency_sweep():
 
 
 def run():
+    import sys
     _run_append_vs_rebuild()
     _run_saturated_queue()
     _run_multi_panel()
     _run_concurrency_sweep()
+    if "--wal-overhead" in sys.argv:
+        _run_wal_overhead()
 
 
 if __name__ == "__main__":

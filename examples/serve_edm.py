@@ -27,15 +27,28 @@ all workers alive, the registry must respect the byte budget, and at
 least one eviction must actually have happened (else the soak proved
 nothing).
 
+Part 3, the durability smoke (PR 10): a CHILD process runs a durable
+server (``state_dir=``) behind HTTP; the parent registers a panel and
+streams append ticks over the wire, then **kill -9**'s the child
+mid-stream. A restarted child recovers from the WAL and must serve
+answers **bit-identical** to a cold session at the last acked version;
+one more append then lands on the recovered log, SIGTERM drains the
+child gracefully (exit 0), and a final in-process ``EDMServer.recover``
+proves the whole history — pre-kill appends + post-recovery append —
+replays to the same bits.
+
 Run: ``PYTHONPATH=src python examples/serve_edm.py [out_dir]``
 
 With ``out_dir``, the event log lands at
 ``<out_dir>/serve/telemetry/events.jsonl`` so CI can schema-validate and
-upload it; without, a tempdir is used.
+upload it; without, a tempdir is used. (``--child <state_dir>`` is the
+internal durability-smoke entry point.)
 """
 
 import json
 import os
+import signal
+import subprocess
 import sys
 import tempfile
 import threading
@@ -285,6 +298,103 @@ def _bit_match_vec(served, oracles, what: str) -> None:
         _bit_match(s, np.float32(o), f"{what}[{j}]")
 
 
+# ---------------------------------------------------- durability smoke
+
+DUR_PAIRS = [(0, 1), (2, 3), (4, 5)]
+
+
+def child(state_dir: str) -> None:
+    """The durable server process: recover-or-create, serve until
+    terminated (SIGTERM → drain → exit 0; SIGKILL → the WAL's job)."""
+    from repro.serving import run_until_terminated
+    panels = os.path.join(state_dir, "panels")
+    if os.path.isdir(panels) and os.listdir(panels):
+        srv = EDMServer.recover(state_dir)
+    else:
+        srv = EDMServer(state_dir=state_dir)
+    httpd = serve_http(srv)
+    print(f"PORT {httpd.server_address[1]}", flush=True)
+    sys.exit(run_until_terminated(srv, httpd, poll_s=0.05))
+
+
+def durability_smoke() -> None:
+    """kill -9 → recover → bit-match → append → graceful drain."""
+    state_dir = tempfile.mkdtemp(prefix="edm-dur-")
+    panel, _ = ts.forced_network_panel(6, 260, seed=21)
+    panel = np.asarray(panel, np.float32)
+    rng = np.random.default_rng(9)
+    deltas = [rng.standard_normal((6, 5)).astype(np.float32)
+              for _ in range(4)]
+
+    def spawn():
+        p = subprocess.Popen([sys.executable, __file__, "--child",
+                              state_dir], stdout=subprocess.PIPE,
+                             text=True)
+        line = p.stdout.readline()
+        assert line.startswith("PORT"), f"child never came up: {line!r}"
+        return p, int(line.split()[1])
+
+    def oracle_at(k: int):
+        return EDM(np.concatenate([panel] + deltas[:k], axis=1),
+                   EDMConfig(**CFG))
+
+    p1, port = spawn()
+    try:
+        _post(port, "register", panel="dur", data=panel.tolist(), **CFG)
+        acked = 0
+        for d in deltas[:3]:  # acked == durably logged (WAL-then-ack)
+            acked = _post(port, "append", panel="dur",
+                          delta=d.tolist())["result"]["version"]
+        assert acked == 3, acked
+    finally:
+        os.kill(p1.pid, signal.SIGKILL)  # mid-stream, no goodbye
+        p1.wait(timeout=30)
+
+    # Restart: the child recovers from the WAL and serves the same bits
+    # a never-crashed session would at version 3.
+    p2, port = spawn()
+    try:
+        o3 = oracle_at(3)
+        for pr in DUR_PAIRS:
+            r = _post(port, "ccm", panel="dur", lib=pr[0], target=pr[1],
+                      E=E_REQ)["result"]
+            _bit_match(r, o3.ccm_batch([pr], E=E_REQ)[0],
+                       f"post-kill9 ccm{pr}")
+        # the recovered WAL keeps accepting appends...
+        info = _post(port, "append", panel="dur",
+                     delta=deltas[3].tolist())["result"]
+        assert info["version"] == 4, info
+    finally:
+        # ...and SIGTERM drains gracefully: admission stops, queues
+        # empty, WALs fsync, exit code 0.
+        p2.send_signal(signal.SIGTERM)
+        rc = p2.wait(timeout=60)
+    assert rc == 0, f"graceful drain exited {rc}, want 0"
+
+    rec = EDMServer.recover(state_dir, autostart=False)
+    try:
+        assert rec.recovery_report["dur"]["version"] == 4, \
+            rec.recovery_report
+        o4 = oracle_at(4)
+        futs = rec.submit_many(
+            "ccm", "dur", [{"lib": l, "target": t, "E": E_REQ}
+                           for l, t in DUR_PAIRS])
+        while rec.scheduler.drain_once():
+            pass
+        for pr, f in zip(DUR_PAIRS, futs):
+            _bit_match(float(f.result()),
+                       o4.ccm_batch([pr], E=E_REQ)[0],
+                       f"final recover ccm{pr}")
+    finally:
+        rec.close()
+    print("SERVE DURABILITY OK "
+          "(kill -9 -> recover bit-match -> drain exit 0)")
+
+
 if __name__ == "__main__":
-    main()
-    soak()
+    if len(sys.argv) > 1 and sys.argv[1] == "--child":
+        child(sys.argv[2])
+    else:
+        main()
+        soak()
+        durability_smoke()

@@ -4,16 +4,25 @@ Two tenants share this package: the transformer ``ServeEngine``
 (fixed-slot prefill/decode batching) and the EDM session server
 (``EDMServer`` — warm per-panel sessions drained by a worker pool with
 signature coalescing and append version barriers, an LRU byte budget
-over cached kNN masters, incremental library append, and streaming
-append subscriptions; see ``edm_server``/``scheduler``/``state``/
-``subscriptions``).
+over cached kNN masters, incremental library append, streaming append
+subscriptions, per-panel WAL durability with crash recovery, admission
+control and deadlines, and deterministic fault injection; see
+``edm_server``/``scheduler``/``state``/``subscriptions``/
+``durability``/``faultinject``).
 """
 
-from repro.serving.edm_server import EDMServer, serve_http
+from repro.serving.durability import Durability, PanelLog, WalError
+from repro.serving.edm_server import (EDMServer, run_until_terminated,
+                                      serve_http)
 from repro.serving.engine import ServeEngine
-from repro.serving.scheduler import Scheduler
+from repro.serving.faultinject import FaultInjector
+from repro.serving.scheduler import (DeadlineExceeded, Draining, Overloaded,
+                                     PanelQuarantined, Scheduler)
 from repro.serving.state import Registry
 from repro.serving.subscriptions import Subscription, SubscriptionHub
 
-__all__ = ["EDMServer", "Registry", "Scheduler", "ServeEngine",
-           "Subscription", "SubscriptionHub", "serve_http"]
+__all__ = ["DeadlineExceeded", "Draining", "Durability", "EDMServer",
+           "FaultInjector", "Overloaded", "PanelLog", "PanelQuarantined",
+           "Registry", "Scheduler", "ServeEngine", "Subscription",
+           "SubscriptionHub", "WalError", "run_until_terminated",
+           "serve_http"]

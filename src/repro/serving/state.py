@@ -58,6 +58,7 @@ class PanelEntry:
         self.queued_version = 0
         self.last_used = 0           # registry LRU tick, monotonic
         self.evictions = 0
+        self.wal = None              # durability.PanelLog when durable
         # Held by the active drain worker for the whole batch and by the
         # evictor around evict_master(): execution and eviction exclude
         # each other; per-panel drains are already serial above this.
@@ -118,6 +119,27 @@ class Registry:
             entry.last_used = self._tick
             self._panels[name] = entry
         return entry.info()
+
+    def adopt(self, name: str, sess: EDM, *, version: int = 0
+              ) -> PanelEntry:
+        """Claim ``name`` for an already-built session (the recovery
+        path: ``EDMServer.recover`` replays a WAL into a session and
+        binds it here at its recovered library version)."""
+        entry = PanelEntry(name, sess)
+        entry.version = entry.queued_version = int(version)
+        with self._lock:
+            if name in self._panels:
+                raise ValueError(f"panel {name!r} is already registered")
+            self._tick += 1
+            entry.last_used = self._tick
+            self._panels[name] = entry
+        return entry
+
+    def remove(self, name: str) -> None:
+        """Unbind a panel (the rollback when a durable registration's
+        WAL publish fails after the name was claimed)."""
+        with self._lock:
+            self._panels.pop(name, None)
 
     def get(self, name: str) -> PanelEntry:
         with self._lock:

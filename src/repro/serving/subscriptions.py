@@ -28,6 +28,7 @@ from __future__ import annotations
 import collections
 import itertools
 import threading
+import time
 
 import numpy as np
 
@@ -72,10 +73,20 @@ class Subscription:
     def poll(self, timeout: float = 0.0,
              max_ticks: int | None = None) -> list[dict]:
         """Long-poll: block up to ``timeout`` s for ticks, pop them all
-        (or the oldest ``max_ticks``). Returns [] on timeout/close."""
+        (or the oldest ``max_ticks``). Returns [] on timeout/close.
+
+        Loops on a monotonic deadline: a spurious wakeup (or an
+        unrelated ``notify_all`` — ``close`` broadcasts on the same
+        condition) re-waits for the remaining time instead of returning
+        early with nothing.
+        """
         with self._cv:
-            if not self._ticks and timeout:
-                self._cv.wait(timeout)
+            deadline = time.monotonic() + max(0.0, timeout)
+            while not self._ticks and not self.closed:
+                remaining = deadline - time.monotonic()
+                if remaining <= 0:
+                    break
+                self._cv.wait(remaining)
             n = len(self._ticks) if max_ticks is None else min(
                 max_ticks, len(self._ticks))
             return [self._ticks.popleft() for _ in range(n)]

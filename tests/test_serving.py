@@ -315,3 +315,200 @@ def test_http_front_end_roundtrip(panel):
             panels = json.loads(r.read())["panels"]
         assert panels[0]["name"] == "p" and panels[0]["version"] == 1
         httpd.shutdown()
+
+
+def test_http_malformed_bodies_all_get_400(panel):
+    """Every malformed-body shape gets a named 400, never a 500."""
+    with EDMServer(autostart=False) as srv:
+        srv.register_panel("p", panel[:, :280], E_max=4, cache=True)
+        httpd = serve_http(srv)
+        port = httpd.server_address[1]
+
+        def post_raw(path, payload):
+            req = urllib.request.Request(
+                f"http://127.0.0.1:{port}{path}", payload,
+                {"Content-Type": "application/json"})
+            try:
+                with urllib.request.urlopen(req, timeout=30) as r:
+                    return r.status, json.loads(r.read())
+            except urllib.error.HTTPError as e:
+                return e.code, json.loads(e.read())
+
+        def post(path, body):
+            return post_raw(path, json.dumps(body).encode())
+
+        cases = [
+            (post("/v1/ccm", {"lib": 0, "target": 1}), "missing 'panel'"),
+            (post("/v1/register", {"panel": "q"}), "missing 'data'"),
+            (post("/v1/append", {"panel": "p"}), "missing 'delta'"),
+            (post("/v1/unsubscribe", {}), "missing 'id'"),
+            (post("/v1/ccm", [1, 2, 3]), "JSON object"),
+        ]
+        for (code, body), needle in cases:
+            assert code == 400, f"expected 400 for {needle!r}, got {code}"
+            assert needle in body["error"]
+        # undecodable JSON is a 400 too (ValueError path), not a 500
+        code, body = post_raw("/v1/ccm", b"{not json")
+        assert code == 400 and body["error"]
+        # and op-level validation errors surface as 400 with the message
+        code, body = post("/v1/ccm", {"panel": "ghost", "lib": 0,
+                                      "target": 1})
+        assert code == 400 and "ghost" in body["error"]
+        httpd.shutdown()
+
+
+def test_subscription_poll_survives_spurious_wakeup(panel):
+    """A notify_all with no tick queued must NOT end the long-poll
+    early: poll re-waits on the remaining deadline (regression for the
+    spurious-wakeup early return)."""
+    import time as _time
+
+    from repro.serving import Subscription
+    sub = Subscription("s-spur", "p", [(0, 1)], {3: [0]})
+
+    def spurious():
+        for _ in range(3):
+            _time.sleep(0.05)
+            with sub._cv:
+                sub._cv.notify_all()     # deliberate: no tick, no close
+
+    t = threading.Thread(target=spurious)
+    t0 = _time.monotonic()
+    t.start()
+    got = sub.poll(timeout=0.5)
+    elapsed = _time.monotonic() - t0
+    t.join()
+    assert got == []                     # nothing was ever queued
+    assert elapsed >= 0.45, \
+        f"poll returned after {elapsed:.3f}s — spurious wakeup ended it"
+    # ...while a REAL tick still ends the wait early
+    def push_soon():
+        _time.sleep(0.05)
+        sub.push(1, 300, np.zeros(1, np.float32))
+
+    t = threading.Thread(target=push_soon)
+    t0 = _time.monotonic()
+    t.start()
+    got = sub.poll(timeout=5.0)
+    elapsed = _time.monotonic() - t0
+    t.join()
+    assert len(got) == 1 and elapsed < 4.0
+    # close() also ends the wait promptly with []
+    def close_soon():
+        _time.sleep(0.05)
+        sub.close()
+
+    t = threading.Thread(target=close_soon)
+    t.start()
+    assert sub.poll(timeout=5.0) == []
+    t.join()
+
+
+def test_http_client_disconnect_is_counted_not_crashed(panel):
+    """A client that RSTs mid-long-poll is counted; the server keeps
+    answering on other connections."""
+    import socket
+    import time as _time
+    with telemetry.record() as rec, EDMServer() as srv:
+        srv.register_panel("p", panel[:, :280], E_max=4, cache=True)
+        sub = srv.subscribe("p", [(0, 2)], E=3)
+        srv.subscription(sub["id"]).poll(timeout=5)   # eat baseline tick
+        httpd = serve_http(srv)
+        port = httpd.server_address[1]
+        s = socket.create_connection(("127.0.0.1", port), timeout=10)
+        s.sendall((f"GET /v1/subscriptions/{sub['id']}?timeout=1 "
+                   f"HTTP/1.1\r\nHost: x\r\n\r\n").encode())
+        _time.sleep(0.5)   # let the handler read the request + block
+        # RST the connection while the handler is still in poll()
+        s.setsockopt(socket.SOL_SOCKET, socket.SO_LINGER,
+                     __import__("struct").pack("ii", 1, 0))
+        s.close()
+        deadline = _time.monotonic() + 10
+        while rec.counter_delta("serve_client_disconnects") < 1:
+            assert _time.monotonic() < deadline, \
+                "disconnect never counted"
+            _time.sleep(0.05)
+        # the server still serves post-disconnect
+        with urllib.request.urlopen(
+                f"http://127.0.0.1:{port}/panels", timeout=30) as r:
+            assert json.loads(r.read())["panels"][0]["name"] == "p"
+        httpd.shutdown()
+
+
+def _post_expect(port, path, body, timeout=60):
+    req = urllib.request.Request(
+        f"http://127.0.0.1:{port}{path}", json.dumps(body).encode(),
+        {"Content-Type": "application/json"})
+    try:
+        with urllib.request.urlopen(req, timeout=timeout) as r:
+            return r.status, dict(r.headers), json.loads(r.read())
+    except urllib.error.HTTPError as e:
+        return e.code, dict(e.headers), json.loads(e.read())
+
+
+def test_http_429_overloaded_with_retry_after(panel):
+    with EDMServer(autostart=False, max_queue_depth=1) as srv:
+        srv.register_panel("p", panel[:, :280], E_max=4, cache=True)
+        fill = srv.submit("ccm", "p", lib=0, target=2, E=3)
+        httpd = serve_http(srv)
+        port = httpd.server_address[1]
+        code, headers, body = _post_expect(
+            port, "/v1/ccm", {"panel": "p", "lib": 1, "target": 3,
+                              "E": 3})
+        assert code == 429
+        assert int(headers["Retry-After"]) >= 1
+        assert body["retry_after_s"] > 0
+        assert "max_queue_depth" in body["error"]
+        while srv.scheduler.drain_once():
+            pass
+        fill.result(timeout=5)
+        # capacity is back: go live and the same request succeeds
+        srv.scheduler.start()
+        code, _, body = _post_expect(
+            port, "/v1/ccm", {"panel": "p", "lib": 1, "target": 3,
+                              "E": 3})
+        assert code == 200
+        httpd.shutdown()
+
+
+def test_http_504_deadline_and_503_wedged_and_draining(panel):
+    # 504: a live server claims the request after its 0-second deadline
+    with telemetry.record() as rec, EDMServer() as srv:
+        srv.register_panel("p", panel[:, :280], E_max=4, cache=True)
+        httpd = serve_http(srv)
+        port = httpd.server_address[1]
+        code, _, body = _post_expect(
+            port, "/v1/ccm", {"panel": "p", "lib": 0, "target": 2,
+                              "E": 3, "deadline_s": 0.0})
+        assert code == 504 and "deadline" in body["error"]
+        httpd.shutdown()
+    assert rec.counter_delta("serve_deadline_exceeded") == 1
+
+    # 503: nothing drains an autostart=False server — the HTTP thread's
+    # bounded wait fires instead of wedging the connection forever
+    with telemetry.record() as rec, EDMServer(autostart=False) as srv:
+        srv.register_panel("p", panel[:, :280], E_max=4, cache=True)
+        httpd = serve_http(srv, request_timeout_s=0.3)
+        port = httpd.server_address[1]
+        code, _, body = _post_expect(
+            port, "/v1/ccm", {"panel": "p", "lib": 0, "target": 2,
+                              "E": 3})
+        assert code == 503 and "timed out" in body["error"]
+
+        # 503 while draining: admission is closed, healthz degrades
+        while srv.scheduler.drain_once():   # retire the wedged request
+            pass
+        assert srv.drain(timeout=10) is True
+        code, _, body = _post_expect(
+            port, "/v1/ccm", {"panel": "p", "lib": 1, "target": 3,
+                              "E": 3})
+        assert code == 503 and "draining" in body["error"]
+        try:
+            with urllib.request.urlopen(
+                    f"http://127.0.0.1:{port}/healthz", timeout=30) as r:
+                code = r.status
+        except urllib.error.HTTPError as e:
+            code = e.code
+        assert code == 503
+        httpd.shutdown()
+    assert rec.counter_delta("serve_request_timeouts") == 1
